@@ -1,0 +1,65 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import copy
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def ensure_results_dir() -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return RESULTS_DIR
+
+
+def write_csv(name: str, header: List[str], rows: List[List]) -> str:
+    path = os.path.join(ensure_results_dir(), name)
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    return path
+
+
+def run_engine_workload(cfg, coopt, *, requests: int = 8, num_lanes: int = 3,
+                        max_len: int = 256, max_new_tokens: int = 12,
+                        scale: float = 0.1, seed: int = 0,
+                        warmup: bool = True) -> Dict:
+    """One (model, mode) cell of Figs. 6-7: a fixed synthetic ShareGPT mix
+    through the continuous-batching engine. Returns Eq. 11/12 metrics
+    measured AFTER a warmup pass (jit compile excluded, like the paper's
+    steady-state serving numbers)."""
+    from repro.data import RequestStream
+    from repro.serving import Engine, EngineConfig
+
+    ecfg = EngineConfig(num_lanes=num_lanes, max_len=max_len,
+                        prefill_buckets=(16, 32, 64, 128, max_len),
+                        seed=seed)
+    engine = Engine(cfg, coopt, ecfg)
+    stream = RequestStream(cfg.vocab_size, seed=seed, scale=scale)
+    reqs = stream.take(requests, max_new_tokens=max_new_tokens)
+
+    if warmup:  # compile every bucket the measured pass will hit:
+        # run the identical workload once, then reset stats
+        for r in reqs:
+            engine.add_request(copy.deepcopy(r))
+        engine.run()
+        engine.stats.__init__()
+
+    t0 = time.perf_counter()
+    for r in reqs:
+        engine.add_request(copy.deepcopy(r))
+    engine.run()
+    wall = time.perf_counter() - t0
+    s = engine.stats
+    return {
+        "generated_tokens": s.generated_tokens,
+        "latency_s": round(wall, 4),                    # Eq. 11 (sum = wall
+        "prefill_s": round(s.prefill_time, 4),          # in lockstep engine)
+        "decode_s": round(s.decode_time, 4),
+        "throughput_tok_s": round(s.generated_tokens / max(wall, 1e-9), 2),
+    }

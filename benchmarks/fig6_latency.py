@@ -1,0 +1,45 @@
+"""Fig. 6 reproduction: inference latency per (model x mode).
+
+Paper: 5 LLaMa GPTQ variants x {Original, Opt-KV, Opt-GQA, Opt-Pa,
+LLM-CoOpt} on the DCU Z100; LLM-CoOpt cuts latency 4.8-6.8%.
+
+Here: the same 5 models, proportionally bench-reduced (CPU container),
+identical request mix per mode, latency per Eq. 11. Absolute numbers are
+CPU-scale; the figure's CONTENT is the relative delta vs Original per model
+(reported in the last column).
+"""
+from __future__ import annotations
+
+from repro.configs.paper_models import PAPER_MODELS, bench_reduced
+from repro.core.coopt import MODES
+
+from benchmarks.common import run_engine_workload, write_csv
+
+MODELS = ["llama7b-gptq", "llama2-7b-gptq", "llama13b-gptq",
+          "llama2-13b-gptq", "llama-pro-8b-gptq"]
+
+
+def run(requests: int = 8, max_new_tokens: int = 12, quick: bool = False):
+    models = MODELS[:2] if quick else MODELS
+    rows = []
+    for name in models:
+        cfg = bench_reduced(PAPER_MODELS[name])
+        base = None
+        for mode, coopt in MODES.items():
+            m = run_engine_workload(cfg, coopt, requests=requests,
+                                    max_new_tokens=max_new_tokens)
+            if mode == "original":
+                base = m["latency_s"]
+            delta = 100.0 * (m["latency_s"] - base) / base
+            rows.append([name, mode, m["latency_s"], m["prefill_s"],
+                         m["decode_s"], round(delta, 2)])
+            print(f"fig6 {name:20s} {mode:9s} latency={m['latency_s']:8.3f}s"
+                  f"  d_vs_original={delta:+.1f}%", flush=True)
+    path = write_csv("fig6_latency.csv",
+                     ["model", "mode", "latency_s", "prefill_s", "decode_s",
+                      "delta_vs_original_pct"], rows)
+    return path, rows
+
+
+if __name__ == "__main__":
+    run()

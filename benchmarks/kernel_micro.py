@@ -1,0 +1,97 @@
+"""Kernel micro-benchmark: the fused paged decode hot path.
+
+On this CPU container Pallas runs in interpret mode, so wall-clock is NOT a
+TPU prediction; what this table establishes is
+  (a) numerical parity kernel-vs-oracle per mode (max |err|),
+  (b) the ANALYTIC per-call traffic model of each mode: HBM bytes touched by
+      the kernel per token (the quantity Opt-KV/Opt-Pa actually optimize),
+  (c) CPU-relative timings between the jnp reference paths of the modes
+      (same schedule the TPU executes, jit-compiled by XLA:CPU).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache.quant import quantize_fp8
+from repro.core.coopt import MODES
+from repro.core.opt_pa import paged_decode_attention
+from repro.kernels import ops, ref
+
+from benchmarks.common import write_csv
+
+
+def kernel_bytes_per_call(B, P, ps, Hkv, D, *, opt_kv, opt_pa, opt_gqa, Hq,
+                          cache_len):
+    """HBM->VMEM traffic of one decode-attention call (bytes)."""
+    kv_elt = 1 if opt_kv else 2                   # fp8 vs bf16
+    pages_touched = (min((cache_len + ps - 1) // ps, P) if opt_pa else P)
+    streams = 1 if opt_gqa else Hq // Hkv         # KV re-streamed per q head
+    kv_bytes = 2 * B * pages_touched * ps * Hkv * D * kv_elt * streams
+    scale_bytes = (2 * B * pages_touched * ps * Hkv * 4 * streams
+                   if opt_kv else 0)
+    q_bytes = B * Hq * D * 2
+    return kv_bytes + scale_bytes + q_bytes
+
+
+def run(quick: bool = False):
+    B, P, ps, Hkv, G, D = (2, 8, 16, 2, 4, 128) if quick else \
+        (4, 32, 16, 2, 4, 128)
+    Hq = Hkv * G
+    cache_len = P * ps // 2
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Hq, D)).astype(jnp.bfloat16)
+    kf = jax.random.normal(ks[1], (B, P, ps, Hkv, D), jnp.float32)
+    vf = jax.random.normal(ks[2], (B, P, ps, Hkv, D), jnp.float32)
+    cl = jnp.full((B,), cache_len, jnp.int32)
+
+    kq, ksc = quantize_fp8(kf)
+    vq, vsc = quantize_fp8(vf)
+    kv8, sc8 = jnp.stack([kq, vq]), jnp.stack([ksc, vsc])
+    kv16 = jnp.stack([kf, vf]).astype(jnp.bfloat16)
+
+    rows = []
+    for mode, co in MODES.items():
+        kv, sc = (kv8, sc8) if co.opt_kv else (kv16, None)
+        # jnp reference path (jit, XLA:CPU) — the schedule comparison
+        fn = jax.jit(lambda q, kv, sc, cl, co=co: paged_decode_attention(
+            q, kv, sc, cl, coopt=co))
+        out = fn(q, kv, sc, cl).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(20):
+            out = fn(q, kv, sc, cl)
+        out.block_until_ready()
+        us = (time.perf_counter() - t0) / 20 * 1e6
+
+        # kernel parity (interpret mode)
+        kout = ops.paged_gqa_decode(q, kv, sc, cl, opt_kv=co.opt_kv,
+                                    opt_pa=co.opt_pa, opt_gqa=co.opt_gqa)
+        ksl = sc[0] if sc is not None else None
+        vsl = sc[1] if sc is not None else None
+        expected = ref.paged_gqa_decode_ref(q, kv[0], kv[1], ksl, vsl, cl,
+                                            opt_kv=co.opt_kv)
+        err = float(np.abs(np.asarray(kout, np.float32) -
+                           np.asarray(expected, np.float32)).max())
+
+        traffic = kernel_bytes_per_call(
+            B, P, ps, Hkv, D, opt_kv=co.opt_kv, opt_pa=co.opt_pa,
+            opt_gqa=co.opt_gqa, Hq=Hq, cache_len=cache_len)
+        rows.append([mode, round(us, 1), traffic, f"{err:.4f}"])
+        print(f"kernel_micro {mode:9s} jnp={us:9.1f}us/call  "
+              f"hbm_traffic={traffic/1024:8.1f}KiB/call  kern_err={err:.4f}",
+              flush=True)
+
+    base = rows[0][2]
+    print(f"kernel_micro traffic reduction original->coopt: "
+          f"{100 * (1 - rows[-1][2] / base):.1f}%")
+    path = write_csv("kernel_micro.csv",
+                     ["mode", "jnp_us_per_call", "hbm_bytes_per_call",
+                      "kernel_max_err"], rows)
+    return path, rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,5 @@
+from repro.cache.quant import (FP8_DTYPE, FP8_MAX, dequantize_fp8,
+                               quantize_fp8, quant_roundtrip_error)
+
+__all__ = ["FP8_DTYPE", "FP8_MAX", "dequantize_fp8", "quantize_fp8",
+           "quant_roundtrip_error"]

@@ -1,0 +1,107 @@
+"""vLLM-style paged KV block manager (host-side, pure Python).
+
+XLA wants static shapes, so the device cache is a preallocated paged pool
+(``repro.core.opt_kv.make_layer_cache`` / model ``init_cache``) and all
+dynamic paging happens here as *indices*: each sequence owns a list of
+physical pages; token slot = page_table[pos // ps] * ps + pos % ps.
+
+This is the layer where the paper's §2 "allocator mismatch" bottleneck lives —
+and where Opt-KV's SkipSet (Eq. 5) is decided: the manager emits slot indices
+of -1 for tokens the policy says never to cache (padding, duplicates,
+out-of-window when running the block-sparse long-context policy), so the
+device-side scatter drops them without touching memory.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class OutOfBlocks(RuntimeError):
+    pass
+
+
+@dataclass
+class SeqBlocks:
+    pages: List[int] = field(default_factory=list)
+    num_tokens: int = 0
+
+
+class BlockManager:
+    """Free-list allocator over a pool of ``num_pages`` physical pages."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._seqs: Dict[int, SeqBlocks] = {}
+
+    # ------------------------------------------------------------- alloc --
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def can_allocate(self, num_tokens: int) -> bool:
+        need = (num_tokens + self.page_size - 1) // self.page_size
+        return need <= self.free_pages
+
+    def allocate(self, seq_id: int, num_tokens: int) -> List[int]:
+        """Allocate pages for a new sequence of ``num_tokens`` prompt tokens."""
+        assert seq_id not in self._seqs
+        need = (num_tokens + self.page_size - 1) // self.page_size
+        if need > self.free_pages:
+            raise OutOfBlocks(f"need {need} pages, {self.free_pages} free")
+        pages = [self._free.pop() for _ in range(need)]
+        self._seqs[seq_id] = SeqBlocks(pages, num_tokens)
+        return pages
+
+    def append_token(self, seq_id: int) -> int:
+        """Account one generated token; grows the page list on boundary.
+        Returns the token's flat slot index."""
+        sb = self._seqs[seq_id]
+        pos = sb.num_tokens
+        if pos // self.page_size >= len(sb.pages):
+            if not self._free:
+                raise OutOfBlocks("decode append: pool exhausted")
+            sb.pages.append(self._free.pop())
+        sb.num_tokens += 1
+        return sb.pages[pos // self.page_size] * self.page_size + \
+            pos % self.page_size
+
+    def free(self, seq_id: int) -> None:
+        sb = self._seqs.pop(seq_id, None)
+        if sb:
+            self._free.extend(reversed(sb.pages))
+
+    # ------------------------------------------------------------ queries --
+    def num_tokens(self, seq_id: int) -> int:
+        return self._seqs[seq_id].num_tokens
+
+    def page_table(self, seq_id: int, width: Optional[int] = None) -> np.ndarray:
+        """Physical page ids, padded with -1 to ``width`` (gather sentinel)."""
+        pages = self._seqs[seq_id].pages
+        width = width or len(pages)
+        out = np.full(width, -1, np.int32)
+        out[: len(pages)] = pages[:width]
+        return out
+
+    def slot_indices(self, seq_id: int, positions: np.ndarray,
+                     skip: Optional[np.ndarray] = None) -> np.ndarray:
+        """Map logical positions -> physical flat slots. ``skip`` marks the
+        Opt-KV SkipSet (Eq. 5): those slots come back -1."""
+        sb = self._seqs[seq_id]
+        pages = np.asarray(sb.pages, np.int32)
+        page_of = positions // self.page_size
+        slots = pages[page_of] * self.page_size + positions % self.page_size
+        slots = slots.astype(np.int32)
+        if skip is not None:
+            slots = np.where(skip, -1, slots)
+        return slots
+
+    def fragmentation(self) -> float:
+        """Fraction of allocated slots that hold no token (paper Fig. 3)."""
+        alloc = sum(len(s.pages) for s in self._seqs.values()) * self.page_size
+        used = sum(s.num_tokens for s in self._seqs.values())
+        return 1.0 - used / alloc if alloc else 0.0

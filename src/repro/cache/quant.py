@@ -1,0 +1,40 @@
+"""FP8 (e4m3) quantization for the KV cache — Opt-KV's storage format.
+
+The paper emulates FP8 via INT8 SIMD on the DCU; on TPU we use native
+``float8_e4m3fn`` storage with bf16/f32 compute (DESIGN.md §3). Scales are
+per-(token, head) — one f32 per head vector — which keeps the dequant fused
+multiply cheap while tracking the "varying dynamic ranges of different
+tensors" the paper calls out (§1, ref [9-11]).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+FP8_DTYPE = jnp.float8_e4m3fn
+FP8_MAX = 448.0  # e4m3fn finite max
+_EPS = 1e-12
+
+
+def quantize_fp8(x: jax.Array, axis: int = -1):
+    """x (..., D) -> (q fp8 (..., D), scale f32 (...,) reduced over ``axis``)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axis)
+    scale = jnp.maximum(amax, _EPS) / FP8_MAX
+    q = (xf / jnp.expand_dims(scale, axis)).astype(FP8_DTYPE)
+    return q, scale
+
+
+def dequantize_fp8(q: jax.Array, scale: jax.Array, axis: int = -1,
+                   dtype=jnp.bfloat16) -> jax.Array:
+    """Eq. 6: k~ = dequant(k_fp8)."""
+    return (q.astype(jnp.float32) * jnp.expand_dims(scale, axis)).astype(dtype)
+
+
+def quant_roundtrip_error(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Max relative error of the fp8 roundtrip (accuracy-proxy benchmarks)."""
+    q, s = quantize_fp8(x, axis)
+    back = dequantize_fp8(q, s, axis, jnp.float32)
+    denom = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis,
+                                keepdims=True), _EPS)
+    return jnp.max(jnp.abs(back - x.astype(jnp.float32)) / denom)

@@ -1,0 +1,42 @@
+"""Config registry: ``get_config(arch_id)`` + assigned architecture list."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig, reduced
+from repro.configs.shapes import SHAPES, InputShape, get_shape
+
+# arch-id -> module name
+_ARCH_MODULES = {
+    "yi-34b": "yi_34b",
+    "rwkv6-7b": "rwkv6_7b",
+    "whisper-small": "whisper_small",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "internvl2-2b": "internvl2_2b",
+    "qwen3-4b": "qwen3_4b",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "deepseek-67b": "deepseek_67b",
+    # the paper's own evaluation model
+    "llama13b-gptq": "llama13b_gptq",
+}
+
+ARCH_IDS = [k for k in _ARCH_MODULES if k != "llama13b-gptq"]
+ALL_IDS = list(_ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id.endswith("-reduced"):
+        return reduced(get_config(arch_id[: -len("-reduced")]))
+    try:
+        mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+    except KeyError:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}")
+    return mod.CONFIG
+
+
+__all__ = [
+    "ModelConfig", "InputShape", "SHAPES", "ARCH_IDS", "ALL_IDS",
+    "get_config", "get_shape", "reduced",
+]

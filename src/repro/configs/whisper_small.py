@@ -1,0 +1,23 @@
+"""whisper-small — encoder-decoder, conv/mel frontend is a STUB [arXiv:2212.04356].
+
+``input_specs`` provides precomputed frame embeddings (B, num_frames, d_model);
+the conv feature extractor + mel spectrogram are not implemented (per task
+carve-out). long_500k is skipped (full-attention decoder, no window variant) —
+DESIGN.md §5.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="whisper",
+    num_layers=12,           # decoder layers
+    encoder_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,         # kv=12 -> GQA group size 1 (identity grouping)
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51865,
+    num_frames=1500,         # 30 s audio after conv stride-2
+    source="arXiv:2212.04356",
+)

@@ -1,0 +1,53 @@
+"""Opt-GQA — grouped-query attention restructuring (paper §3.2, Alg. 2).
+
+Eq. 7: Group_q(i) = floor(i / H_g), H_g = H_q / H_k — query head i reads KV
+head i // H_g. With Opt-GQA enabled, attention is computed with queries folded
+to (H_k, H_g) so each KV head is loaded once per group ("each key-value pair
+is shared among all query heads in its group", Fig. 4). With it disabled
+("Original" / plain MHA semantics), K/V are physically expanded to H_q heads
+before attention — each head "independently" consumes its KV pair, which is
+the redundancy the paper measures against.
+
+For the paper's MHA checkpoints (LLaMa-13B, H_k == H_q), ``mha_to_gqa``
+restructures the K/V projection weights into H_k' < H_q shared heads by
+mean-pooling each group — the standard GQA conversion [16] the paper builds on.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def group_index(i, num_q_heads: int, num_kv_heads: int):
+    """Eq. 7 mapping: query head i -> KV group index."""
+    h_g = num_q_heads // num_kv_heads
+    return i // h_g
+
+
+def fold_queries(q, num_kv_heads: int):
+    """(..., Hq, D) -> (..., Hkv, G, D) per Eq. 7 (heads of one group adjacent)."""
+    *lead, Hq, D = q.shape
+    G = Hq // num_kv_heads
+    return q.reshape(*lead, num_kv_heads, G, D)
+
+
+def unfold_outputs(o):
+    """(..., Hkv, G, D) -> (..., Hq, D) — Alg. 2 Phase 3 concatenation."""
+    *lead, Hkv, G, D = o.shape
+    return o.reshape(*lead, Hkv * G, D)
+
+
+def mha_to_gqa(wk, wv, num_kv_heads: int, head_dim: int):
+    """Mean-pool MHA K/V projections into ``num_kv_heads`` shared heads.
+
+    wk/wv: (d_model, Hq*D) -> (d_model, num_kv_heads*D).
+    """
+    d_model, hd = wk.shape
+    Hq = hd // head_dim
+    G = Hq // num_kv_heads
+
+    def pool(w):
+        w = w.reshape(d_model, num_kv_heads, G, head_dim)
+        return jnp.mean(w.astype(jnp.float32), axis=2).astype(w.dtype) \
+                  .reshape(d_model, num_kv_heads * head_dim)
+
+    return pool(wk), pool(wv)

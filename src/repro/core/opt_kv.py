@@ -1,0 +1,112 @@
+"""Opt-KV — KV-cache write/read path optimization (paper §3.1, Alg. 1).
+
+Write phase (Eq. 5): a token's K/V are cached only if its slot index is valid:
+``slot_idx_i < 0 or slot_idx_i in SkipSet`` => skip. We realise the SkipSet as
+slots pre-marked -1 by the caller (engine policy: padding tokens, duplicate
+tokens, evicted/out-of-window tokens), so the write itself is a single scatter
+with ``mode='drop'`` — negative indices never touch memory, exactly the
+paper's "skip caching of K_i, V_i".
+
+Read phase (Eq. 6): cached K/V are FP8 and dequantized on the fly
+(``gather_cached_kv``). The Pallas kernel in ``repro.kernels`` fuses this into
+the attention loop; this module is the numerically-identical jnp reference
+used by tests and by the distributed (GSPMD) path.
+
+Cache layout (one layer): kv (2, B, P, ps, Hkv, D) + scale (2, B, P, ps, Hkv).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache.quant import dequantize_fp8, quantize_fp8
+from repro.core.coopt import CoOptConfig
+
+
+def make_layer_cache(batch: int, num_pages: int, page_size: int, num_kv_heads: int,
+                     head_dim: int, coopt: CoOptConfig):
+    """Zero-initialised single-layer paged cache (kv, scale|None)."""
+    kv = jnp.zeros((2, batch, num_pages, page_size, num_kv_heads, head_dim),
+                   coopt.kv_dtype)
+    scale = (jnp.zeros((2, batch, num_pages, page_size, num_kv_heads), jnp.float32)
+             if coopt.opt_kv else None)
+    return kv, scale
+
+
+def write_kv(kv_cache, scale_cache, k_new, v_new, slot_idx, coopt: CoOptConfig):
+    """Write new tokens' K/V into the paged cache.
+
+    k_new/v_new: (B, S, Hkv, D); slot_idx: (B, S) int32 — flat slot
+    (= page * page_size + offset) in this sequence's pool; -1/SkipSet => skip.
+    Returns updated (kv_cache, scale_cache).
+    """
+    _, B, P, ps, H, D = kv_cache.shape
+    if coopt.use_kernel:
+        from repro.kernels import ops
+        return ops.kv_cache_write(kv_cache, scale_cache, k_new, v_new,
+                                  slot_idx, opt_kv=coopt.opt_kv)
+    flat = kv_cache.reshape(2, B, P * ps, H, D)
+    new = jnp.stack([k_new, v_new])                      # (2,B,S,H,D)
+    clipped = jnp.where(slot_idx < 0, -1, slot_idx)      # keep skip sentinel
+
+    if coopt.opt_kv:
+        q, s = quantize_fp8(new, axis=-1)                # (2,B,S,H,D),(2,B,S,H)
+        flat = flat.at[:, jnp.arange(B)[:, None], clipped].set(
+            q.astype(flat.dtype), mode="drop")
+        sflat = scale_cache.reshape(2, B, P * ps, H)
+        sflat = sflat.at[:, jnp.arange(B)[:, None], clipped].set(s, mode="drop")
+        scale_cache = sflat.reshape(2, B, P, ps, H)
+    else:
+        flat = flat.at[:, jnp.arange(B)[:, None], clipped].set(
+            new.astype(flat.dtype), mode="drop")
+    return flat.reshape(2, B, P, ps, H, D), scale_cache
+
+
+def dequant_pages(kv_pages, scale_pages, coopt: CoOptConfig, dtype=jnp.bfloat16):
+    """Eq. 6 read path: fp8 pages -> compute dtype."""
+    if coopt.opt_kv:
+        return dequantize_fp8(kv_pages, scale_pages, axis=-1, dtype=dtype)
+    return kv_pages.astype(dtype)
+
+
+def gather_cached_kv(kv_cache, scale_cache, page_table, coopt: CoOptConfig,
+                     dtype=jnp.bfloat16):
+    """Reference of the paper's dedicated ``gather_cached_kv`` kernel.
+
+    page_table: (B, Psel) int32 physical page ids (negative => zero page).
+    Returns (2, B, Psel*ps, Hkv, D) dequantized.
+    """
+    _, B, P, ps, H, D = kv_cache.shape
+    pt = jnp.maximum(page_table, 0)
+    gathered = jnp.take_along_axis(
+        kv_cache, pt[None, :, :, None, None, None], axis=2)  # (2,B,Psel,ps,H,D)
+    if coopt.opt_kv:
+        sg = jnp.take_along_axis(scale_cache, pt[None, :, :, None, None], axis=2)
+        out = dequantize_fp8(gathered, sg, axis=-1, dtype=dtype)
+    else:
+        out = gathered.astype(dtype)
+    valid = (page_table >= 0)[None, :, :, None, None, None]
+    out = jnp.where(valid, out, 0)
+    Psel = page_table.shape[1]
+    return out.reshape(2, B, Psel * ps, H, D)
+
+
+def window_page_table(cache_len, num_pages: int, page_size: int,
+                      window: int, sink_pages: int):
+    """Opt-KV SkipSet as block sparsity (DESIGN.md §5 long-context policy).
+
+    Selects sink pages [0, sink) plus the trailing ``ceil(window/ps)+1`` pages
+    covering the sliding window, for a scalar/array ``cache_len`` (inclusive
+    count of tokens already cached). Returns (B, Psel) page ids, -1 = skipped.
+    """
+    wpages = window // page_size + 1
+    # page holding the most recent token (cache_len is an inclusive count)
+    last_page = jnp.maximum(jnp.asarray(cache_len) - 1, 0) // page_size  # (B,)
+    start = jnp.maximum(last_page - (wpages - 1), 0)
+    win = start[:, None] + jnp.arange(wpages)[None, :]        # (B, wpages)
+    win = jnp.where(win <= last_page[:, None], win, -1)
+    sink = jnp.broadcast_to(jnp.arange(sink_pages)[None, :],
+                            (win.shape[0], sink_pages))
+    sink = jnp.where(sink < jnp.minimum(start, sink_pages)[:, None], sink, -1)
+    table = jnp.concatenate([sink, win], axis=1).astype(jnp.int32)
+    return jnp.minimum(table, num_pages - 1)

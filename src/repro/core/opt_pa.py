@@ -1,0 +1,194 @@
+"""Opt-Pa — paged attention for long sequences (paper §3.3, Alg. 3).
+
+Decode-phase attention of ONE query token against a paged KV cache.
+
+Two-stage strategy, mapped to TPU (DESIGN.md §3):
+  Phase 1 — *valid-block filtering* (Eq. 9): only pages b in [0, ceil(t/B))
+  participate. In this jnp reference that is masking + (for the sliding-window
+  policy) an actual gather of the selected pages; in the Pallas kernel the
+  invalid pages are skipped inside the grid.
+  Phase 2 — *block-wise softmax with shared-memory reduction* (Eq. 10): an
+  online-softmax accumulation over page groups. The DCU's ``block_sum``
+  shared-memory reduction becomes a VMEM-resident running (max, sum, acc).
+
+The "Original" baseline (`coopt.opt_pa == False`) reproduces unmodified vLLM
+semantics on this platform: ALL allocated pages are uniformly loaded and a
+flat softmax is taken over the whole (padded) history — "all KVs being loaded
+into memory regardless of whether they are actually useful" (paper §2).
+
+Opt-KV (fp8 dequant on read) and Opt-GQA (grouped queries) compose here;
+``LLM-CoOpt`` = all three, which is what the fused kernel implements.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.coopt import CoOptConfig
+from repro.core.opt_kv import dequant_pages, gather_cached_kv, window_page_table
+from repro.models.layers import repeat_kv, shard_act
+
+_NEG = -1e30
+
+
+def _scores(q, k, opt_gqa: bool):
+    """q (B,Hq,D), k (B,T,Hkv,D) -> scores (B,Hq,T) f32 (scaled).
+
+    Under the production mesh, q's and k's head_dim are kept model-sharded
+    and the (much smaller) score tensor is the all-reduced partial sum —
+    without the constraints GSPMD all-gathers the dequantized KV page group
+    per scan step (EXPERIMENTS.md §Perf P3)."""
+    B, Hq, D = q.shape
+    Hkv = k.shape[2]
+    scale = 1.0 / math.sqrt(D)
+    q = shard_act(q, ("batch", None, "head_dim"))
+    k = shard_act(k, ("batch", None, None, "head_dim"))
+    if opt_gqa and Hkv != Hq:
+        qg = q.reshape(B, Hkv, Hq // Hkv, D)
+        s = jnp.einsum("bhgd,bthd->bhgt", qg, k,
+                       preferred_element_type=jnp.float32)
+        s = shard_act(s, ("batch", None, None, None))
+        return s.reshape(B, Hq, -1) * scale
+    k = repeat_kv(k, Hq // Hkv)
+    s = jnp.einsum("bhd,bthd->bht", q, k,
+                   preferred_element_type=jnp.float32)
+    return shard_act(s, ("batch", None, None)) * scale
+
+
+def _weighted_v(p, v, opt_gqa: bool, Hq: int):
+    """p (B,Hq,T) f32, v (B,T,Hkv,D) -> (B,Hq,D) f32."""
+    Hkv = v.shape[2]
+    if opt_gqa and Hkv != Hq:
+        pg = p.reshape(p.shape[0], Hkv, Hq // Hkv, p.shape[-1])
+        o = jnp.einsum("bhgt,bthd->bhgd", pg, v.astype(jnp.float32))
+        return o.reshape(p.shape[0], Hq, -1)
+    v = repeat_kv(v, Hq // Hkv)
+    return jnp.einsum("bht,bthd->bhd", p, v.astype(jnp.float32))
+
+
+def paged_decode_attention(q, kv_pages, scale_pages, cache_len, *,
+                           coopt: CoOptConfig, window: int = 0,
+                           sink_pages: int = 1,
+                           page_table: Optional[jax.Array] = None) -> jax.Array:
+    """q: (B, Hq, D); kv_pages: (2, B, P, ps, Hkv, D); cache_len: (B,) tokens
+    valid in the cache (the current token must already be written).
+    Returns (B, Hq, D) in q.dtype.
+    """
+    B, Hq, D = q.shape
+    _, _, P, ps, Hkv, _ = kv_pages.shape
+
+    if window:
+        # Block-sparse policy: Opt-KV SkipSet = outside {sinks + window}.
+        table = window_page_table(cache_len, P, ps, window, sink_pages)
+        if coopt.use_kernel:
+            from repro.kernels import ops
+            return ops.paged_gqa_decode_window(
+                q, kv_pages, scale_pages, cache_len, table,
+                opt_kv=coopt.opt_kv, window=window, sink_pages=sink_pages)
+        return _windowed(q, kv_pages, scale_pages, cache_len, table,
+                         window, sink_pages, coopt)
+
+    if coopt.use_kernel and page_table is None:
+        from repro.kernels import ops
+        return ops.paged_gqa_decode(
+            q, kv_pages, scale_pages, cache_len, opt_kv=coopt.opt_kv,
+            opt_pa=coopt.opt_pa, opt_gqa=coopt.opt_gqa,
+            page_group=coopt.page_group)
+
+    if page_table is not None:
+        flat = gather_cached_kv(kv_pages, scale_pages, page_table, coopt)
+        kv_pages = flat.reshape(2, B, page_table.shape[1], ps, Hkv, D)
+        scale_pages = None
+        coopt = coopt.replace(opt_kv=False)  # already dequantized
+        valid = jnp.repeat(page_table >= 0, ps, axis=1)  # (B, Psel*ps)
+    else:
+        valid = None
+
+    if coopt.opt_pa:
+        return _blockwise(q, kv_pages, scale_pages, cache_len, coopt, valid)
+    return _flat(q, kv_pages, scale_pages, cache_len, coopt, valid)
+
+
+# --------------------------------------------------------------- Original --
+def _flat(q, kv_pages, scale_pages, cache_len, coopt, valid):
+    B, Hq, D = q.shape
+    _, _, P, ps, Hkv, _ = kv_pages.shape
+    kv = dequant_pages(kv_pages, scale_pages, coopt)        # ALL pages loaded
+    k, v = kv.reshape(2, B, P * ps, Hkv, D)
+    s = _scores(q, k, coopt.opt_gqa)                        # (B,Hq,T)
+    pos = jnp.arange(P * ps)[None, None, :]
+    mask = pos < cache_len[:, None, None]
+    if valid is not None:
+        mask &= valid[:, None, :]
+    s = jnp.where(mask, s, _NEG)
+    m = jnp.max(s, axis=-1, keepdims=True)                  # Eq. 8 / Eq. 10
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = _weighted_v(p, v, coopt.opt_gqa, Hq)
+    return o.astype(q.dtype)
+
+
+# ----------------------------------------------------- Opt-Pa (block-wise) --
+def _blockwise(q, kv_pages, scale_pages, cache_len, coopt, valid):
+    B, Hq, D = q.shape
+    _, _, P, ps, Hkv, _ = kv_pages.shape
+    pg = coopt.page_group
+    while P % pg:
+        pg //= 2
+    pg = max(pg, 1)
+    NG, T = P // pg, pg * ps
+
+    kv_g = kv_pages.reshape(2, B, NG, T, Hkv, D)
+    sc_g = (scale_pages.reshape(2, B, NG, T, Hkv)
+            if scale_pages is not None else None)
+    valid_g = valid.reshape(B, NG, T) if valid is not None else None
+
+    def body(carry, g):
+        m, l, acc = carry
+        kv = dequant_pages(kv_g[:, :, g], None if sc_g is None else sc_g[:, :, g],
+                           coopt)
+        k, v = kv
+        s = _scores(q, k, coopt.opt_gqa)                    # (B,Hq,T)
+        pos = g * T + jnp.arange(T)[None, None, :]
+        mask = pos < cache_len[:, None, None]
+        if valid_g is not None:
+            mask &= valid_g[:, g][:, None, :]
+        s = jnp.where(mask, s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        corr = jnp.exp(m - m_new)                           # block_sum analogue
+        p = jnp.exp(s - m_new)
+        l = l * corr[..., 0] + jnp.sum(p, axis=-1)
+        acc = acc * corr + _weighted_v(p, v, coopt.opt_gqa, Hq)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hq, 1), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, Hq), jnp.float32)
+    a0 = jnp.zeros((B, Hq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(NG))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+# ------------------------------------------------ window/sink block-sparse --
+def _windowed(q, kv_pages, scale_pages, cache_len, table, window, sink_pages,
+              coopt):
+    B, Hq, D = q.shape
+    _, _, P, ps, Hkv, _ = kv_pages.shape
+    flat = gather_cached_kv(kv_pages, scale_pages, table, coopt)  # (2,B,Ts,H,D)
+    k, v = flat
+    pos = jnp.maximum(table, 0)[:, :, None] * ps + jnp.arange(ps)[None, None, :]
+    pos = pos.reshape(B, -1)                                      # (B, Ts)
+    in_ctx = pos < cache_len[:, None]
+    in_win = pos >= jnp.maximum(cache_len[:, None] - window, 0)
+    in_sink = pos < sink_pages * ps
+    mask = in_ctx & (in_win | in_sink) & (table >= 0).repeat(ps, axis=1)
+    s = _scores(q, k, coopt.opt_gqa)
+    s = jnp.where(mask[:, None, :], s, _NEG)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    o = _weighted_v(p, v, coopt.opt_gqa, Hq)
+    return o.astype(q.dtype)

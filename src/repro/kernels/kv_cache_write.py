@@ -1,0 +1,98 @@
+"""Opt-KV write-path Pallas kernel (paper §3.1 Alg. 1 Phase 1 + Eq. 5).
+
+Scatters new tokens' K/V into the paged cache with (a) SkipSet filtering —
+tokens whose slot is negative are routed to a sentinel page and never touch
+live cache lines ("skip caching of K_i, V_i"), and (b) fused FP8 e4m3
+quantization: amax-per-(token, head) scale computed in VREGs, quantized tile
+written in the same pass, so the unquantized K/V never round-trip to HBM.
+
+Mechanics: the flat slot index is scalar-prefetched and dereferenced inside
+the output BlockSpec index_map — the block written by grid step (b, s) IS the
+cache line of token s (or the sentinel line for SkipSet tokens). The cache is
+passed aliased (donated), so unwritten lines keep their contents — this is the
+TPU analogue of an in-place scatter with ``mode='drop'``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.cache.quant import FP8_MAX
+
+
+def _write_kernel(slot_ref, k_ref, v_ref,
+                  kc_in, vc_in, ks_in, vs_in,          # aliased cache (unused)
+                  kc_ref, vc_ref, ks_ref, vs_ref,      # outputs
+                  *, opt_kv: bool):
+    # k_ref/v_ref: (1, 1, Hkv, D) — one token, all kv heads.
+    k = k_ref[0, 0].astype(jnp.float32)                 # (Hkv, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    if opt_kv:
+        k_amax = jnp.max(jnp.abs(k), axis=-1, keepdims=True)
+        v_amax = jnp.max(jnp.abs(v), axis=-1, keepdims=True)
+        k_s = jnp.maximum(k_amax, 1e-12) / FP8_MAX
+        v_s = jnp.maximum(v_amax, 1e-12) / FP8_MAX
+        kc_ref[0, 0] = (k / k_s).astype(kc_ref.dtype)
+        vc_ref[0, 0] = (v / v_s).astype(vc_ref.dtype)
+        ks_ref[0, 0] = k_s[:, 0]
+        vs_ref[0, 0] = v_s[:, 0]
+    else:
+        kc_ref[0, 0] = k.astype(kc_ref.dtype)
+        vc_ref[0, 0] = v.astype(vc_ref.dtype)
+        ks_ref[0, 0] = jnp.zeros(ks_ref.shape[2:], jnp.float32)
+        vs_ref[0, 0] = jnp.zeros(vs_ref.shape[2:], jnp.float32)
+
+
+def kv_cache_write(k_new, v_new, slot_idx, k_cache, v_cache, k_scale, v_scale,
+                   *, opt_kv: bool, interpret: bool = True):
+    """k/v_new: (B, S, Hkv, D); slot_idx: (B, S) int32 (-1 / SkipSet => drop);
+    k/v_cache: (B, NSlot + 1, Hkv, D) flat paged cache WITH one trailing
+    sentinel line; k/v_scale: (B, NSlot + 1, Hkv) f32 (zeros ok if !opt_kv).
+    Returns updated (k_cache, v_cache, k_scale, v_scale)."""
+    B, S, Hkv, D = k_new.shape
+    NS = k_cache.shape[1]          # includes sentinel line
+    sentinel = NS - 1
+    slots = jnp.where(slot_idx < 0, sentinel, slot_idx).astype(jnp.int32)
+
+    def cache_idx(b, s, slot):
+        return (b, slot[b, s], 0, 0)
+
+    def scale_idx(b, s, slot):
+        return (b, slot[b, s], 0)
+
+    kern = functools.partial(_write_kernel, opt_kv=opt_kv)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, S),
+            in_specs=[
+                pl.BlockSpec((1, 1, Hkv, D), lambda b, s, slot: (b, s, 0, 0)),
+                pl.BlockSpec((1, 1, Hkv, D), lambda b, s, slot: (b, s, 0, 0)),
+                pl.BlockSpec((1, 1, Hkv, D), cache_idx),
+                pl.BlockSpec((1, 1, Hkv, D), cache_idx),
+                pl.BlockSpec((1, 1, Hkv), scale_idx),
+                pl.BlockSpec((1, 1, Hkv), scale_idx),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, Hkv, D), cache_idx),
+                pl.BlockSpec((1, 1, Hkv, D), cache_idx),
+                pl.BlockSpec((1, 1, Hkv), scale_idx),
+                pl.BlockSpec((1, 1, Hkv), scale_idx),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct(k_cache.shape, k_cache.dtype),
+            jax.ShapeDtypeStruct(v_cache.shape, v_cache.dtype),
+            jax.ShapeDtypeStruct(k_scale.shape, jnp.float32),
+            jax.ShapeDtypeStruct(v_scale.shape, jnp.float32),
+        ],
+        # aliased: unwritten cache lines keep their contents (scatter 'drop')
+        input_output_aliases={3: 0, 4: 1, 5: 2, 6: 3},
+        interpret=interpret,
+    )(slots, k_new, v_new, k_cache, v_cache, k_scale, v_scale)
+    return out

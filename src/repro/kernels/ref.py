@@ -1,0 +1,109 @@
+"""Pure-jnp oracles for every Pallas kernel (flat softmax, no blocking, no
+online accumulation) — the ground truth for the per-kernel allclose sweeps.
+Deliberately written in the most naive form so a kernel bug cannot be
+mirrored here.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+from repro.cache.quant import FP8_MAX
+
+_NEG = -1e30
+
+
+def _dq(pages, scales, opt_kv):
+    if opt_kv:
+        return pages.astype(jnp.float32) * scales[..., None]
+    return pages.astype(jnp.float32)
+
+
+def paged_gqa_decode_ref(q, k_pages, v_pages, k_scale, v_scale, cache_len, *,
+                         opt_kv: bool):
+    """Flat-softmax oracle of the fused decode kernel (modes agree
+    numerically; Opt-Pa/Opt-GQA only change the compute schedule)."""
+    B, Hq, D = q.shape
+    _, P, ps, Hkv, _ = k_pages.shape
+    G = Hq // Hkv
+    k = _dq(k_pages, k_scale, opt_kv).reshape(B, P * ps, Hkv, D)
+    v = _dq(v_pages, v_scale, opt_kv).reshape(B, P * ps, Hkv, D)
+    qf = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bthd->bhgt", qf, k) / math.sqrt(D)
+    pos = jnp.arange(P * ps)[None, None, None, :]
+    s = jnp.where(pos < cache_len[:, None, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgt,bthd->bhgd", p, v)
+    return o.reshape(B, Hq, D).astype(q.dtype)
+
+
+def paged_gqa_decode_window_ref(q, k_pages, v_pages, k_scale, v_scale,
+                                cache_len, page_table, *, opt_kv: bool,
+                                window: int, sink_pages: int):
+    B, Hq, D = q.shape
+    _, P, ps, Hkv, _ = k_pages.shape
+    G = Hq // Hkv
+    k = _dq(k_pages, k_scale, opt_kv).reshape(B, P * ps, Hkv, D)
+    v = _dq(v_pages, v_scale, opt_kv).reshape(B, P * ps, Hkv, D)
+    qf = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bthd->bhgt", qf, k) / math.sqrt(D)
+    pos = jnp.arange(P * ps)[None, :]
+    sel = jnp.zeros((B, P), bool).at[
+        jnp.arange(B)[:, None], jnp.maximum(page_table, 0)].max(
+        page_table >= 0)
+    ok = (pos < cache_len[:, None]) \
+        & ((pos >= jnp.maximum(cache_len[:, None] - window, 0))
+           | (pos < sink_pages * ps)) \
+        & jnp.repeat(sel, ps, axis=1)
+    s = jnp.where(ok[:, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgt,bthd->bhgd", p, v)
+    return o.reshape(B, Hq, D).astype(q.dtype)
+
+
+def kv_cache_write_ref(k_new, v_new, slot_idx, k_cache, v_cache, k_scale,
+                       v_scale, *, opt_kv: bool):
+    """Scatter-with-drop oracle (sentinel line NS-1 is dont-care — the
+    kernel routes SkipSet tokens there; callers must compare only real
+    lines)."""
+    B, S, Hkv, D = k_new.shape
+    rows = jnp.arange(B)[:, None]
+    slots = jnp.where(slot_idx < 0, -1, slot_idx)
+
+    def put(cache, scale, new):
+        newf = new.astype(jnp.float32)
+        if opt_kv:
+            amax = jnp.max(jnp.abs(newf), axis=-1)
+            sc = jnp.maximum(amax, 1e-12) / FP8_MAX
+            qv = (newf / sc[..., None]).astype(cache.dtype)
+            cache = cache.at[rows, slots].set(qv, mode="drop")
+            scale = scale.at[rows, slots].set(sc, mode="drop")
+        else:
+            cache = cache.at[rows, slots].set(newf.astype(cache.dtype),
+                                              mode="drop")
+        return cache, scale
+
+    k_cache, k_scale = put(k_cache, k_scale, k_new)
+    v_cache, v_scale = put(v_cache, v_scale, v_new)
+    return k_cache, v_cache, k_scale, v_scale
+
+
+def flash_prefill_ref(q, k, v, *, window: int = 0, q_offset: int = 0):
+    """Naive full-matrix causal (windowed) GQA attention."""
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qf = q.reshape(B, S, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bshgd,bthd->bhgst", qf, k.astype(jnp.float32)) \
+        / math.sqrt(D)
+    spos = q_offset + jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = spos >= kpos
+    if window:
+        mask &= (spos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgst,bthd->bshgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, Hq, D).astype(q.dtype)

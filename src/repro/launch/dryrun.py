@@ -1,0 +1,173 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# 512 host devices back the (2, 16, 16) multi-pod mesh; the (16, 16)
+# single-pod mesh uses the first 256 of them.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, prove memory fits, and extract the roofline terms.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  python -m repro.launch.dryrun --arch yi-34b --shape decode_32k --multi-pod
+  python -m repro.launch.dryrun --all [--multi-pod] --out results.json
+
+No device buffer is ever allocated: inputs are ShapeDtypeStructs and the
+artifact is the compiled executable + its analyses (EXPERIMENTS.md §Dry-run).
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES
+from repro.core.coopt import COOPT, MODES
+from repro.launch import mesh as mesh_lib
+from repro.launch.steps import ShapeSkipped, make_step
+
+# ---------------------------------------------------------------------------
+# collective parsing: sum wire bytes per device from the partitioned module
+# ---------------------------------------------------------------------------
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+                "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+                "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device wire bytes by collective op (ring-algorithm estimates on
+    the op's output buffer: all-reduce 2x, others 1x; '-done' ops skipped
+    so async pairs are not double counted)."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        if "-done(" in m.group(0):
+            continue
+        shape_txt, op = m.group(1), m.group(2)
+        b = _shape_bytes(shape_txt)
+        factor = 2 if op == "all-reduce" else 1
+        out[op] = out.get(op, 0) + b * factor
+    return out
+
+
+# ---------------------------------------------------------------------------
+def run_one(arch: str, shape: str, *, multi_pod: bool, coopt=COOPT,
+            verbose: bool = True) -> dict:
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16", "devices": n_dev}
+    try:
+        bundle = make_step(arch, shape, mesh, coopt)
+    except ShapeSkipped as e:
+        rec["status"] = "skipped"
+        rec["reason"] = str(e)
+        if verbose:
+            print(f"[skip] {arch} x {shape}: {e}")
+        return rec
+
+    t0 = time.time()
+    with mesh:
+        lowered = bundle.lower()
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+    }
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    rec["cost_raw"] = {k: v for k, v in cost.items()
+                       if k in ("flops", "bytes accessed", "transcendentals",
+                                "optimal_seconds")}
+    # cost_analysis() counts while-loop (scan) bodies ONCE — correct totals
+    # come from the trip-count-resolving HLO walker (launch/hlo_cost.py).
+    from repro.launch.hlo_cost import analyze_hlo
+    hlo_text = compiled.as_text()
+    corrected = analyze_hlo(hlo_text)
+    rec["cost"] = {"flops": corrected["flops"],
+                   "bytes accessed": corrected["bytes"]}
+    rec["collectives"] = corrected["collectives"]
+    rec["collective_bytes"] = corrected["collective_bytes"]
+    rec["collectives_uncorrected"] = collective_bytes(hlo_text)
+    rec["status"] = "ok"
+    rec["kind"] = bundle.kind
+    if verbose:
+        flops = rec["cost"].get("flops", 0.0)
+        print(f"[ok] {arch} x {shape} ({rec['mesh']}, {bundle.kind}) "
+              f"compile={rec['compile_s']}s flops/dev={flops:.3e} "
+              f"coll/dev={rec['collective_bytes']:.3e}B "
+              f"temp/dev={rec['memory']['temp_bytes']}")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS + ["llama13b-gptq"])
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) combination")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="(pod=2, data=16, model=16) = 512 chips")
+    ap.add_argument("--mode", default="coopt", choices=list(MODES),
+                    help="LLM-CoOpt technique set (default: coopt)")
+    ap.add_argument("--out", default=None, help="append JSON records here")
+    args = ap.parse_args(argv)
+
+    coopt = MODES[args.mode]
+    combos = ([(a, s) for a in ARCH_IDS for s in SHAPES] if args.all
+              else [(args.arch, args.shape)])
+    if not args.all and (args.arch is None or args.shape is None):
+        ap.error("need --arch and --shape (or --all)")
+
+    records, failures = [], 0
+    for arch, shape in combos:
+        try:
+            rec = run_one(arch, shape, multi_pod=args.multi_pod, coopt=coopt)
+        except Exception as e:
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape, "status": "error",
+                   "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        records.append(rec)
+        if args.out:  # append incrementally (compiles are slow)
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+
+    ok = sum(r["status"] == "ok" for r in records)
+    sk = sum(r["status"] == "skipped" for r in records)
+    print(f"\n== dry-run: {ok} ok, {sk} skipped, {failures} failed, "
+          f"{len(records)} total ==")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,33 @@
+"""Production meshes (DESIGN.md §7).
+
+Single pod: TPU v5e-256, mesh (data=16, model=16).
+Multi-pod:  2 pods = 512 chips, mesh (pod=2, data=16, model=16) — pods are
+data-parallel replicas; the "pod" axis only ever shards batch-like dims (or
+KV pages for batch-1 long-context), so no tensor-parallel collective crosses
+the inter-pod DCN link.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for smoke tests on the CPU container."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e hardware constants (per chip) — roofline denominators.
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link (~ per-chip usable)
+VMEM_BYTES = 128 * 2 ** 20
+HBM_BYTES = 16 * 2 ** 30

@@ -1,0 +1,75 @@
+"""Serving launcher: continuous-batching engine over a synthetic ShareGPT
+request mix, reporting the paper's two metrics (Eq. 11 latency, Eq. 12
+generation throughput).
+
+  python -m repro.launch.serve --arch qwen3-4b --reduced --requests 16 \
+      --mode coopt
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.coopt import MODES
+from repro.data import RequestStream
+from repro.serving import Engine, EngineConfig
+from repro.serving.sampler import SamplingParams
+
+
+def serve_workload(arch: str, mode: str, *, requests: int = 16,
+                   num_lanes: int = 4, max_len: int = 512,
+                   max_new_tokens: int = 24, scale: float = 0.15,
+                   seed: int = 0, use_kernel: bool = False,
+                   temperature: float = 0.0):
+    cfg = get_config(arch)
+    coopt = MODES[mode].replace(use_kernel=use_kernel)
+    ecfg = EngineConfig(
+        num_lanes=num_lanes, max_len=max_len,
+        prefill_buckets=(32, 64, 128, 256, max_len),
+        sampling=SamplingParams(temperature=temperature), seed=seed)
+    engine = Engine(cfg, coopt, ecfg)
+    stream = RequestStream(cfg.vocab_size, seed=seed, scale=scale)
+    reqs = stream.take(requests, max_new_tokens=max_new_tokens)
+    for r in reqs:
+        engine.add_request(copy.deepcopy(r))
+    engine.run()
+    s = engine.stats
+    return {
+        "arch": arch, "mode": mode, "requests": requests,
+        "generated_tokens": s.generated_tokens,
+        "prefill_time_s": round(s.prefill_time, 4),
+        "decode_time_s": round(s.decode_time, 4),
+        "latency_s": round(s.total_time, 4),          # Eq. 11
+        "throughput_tok_s": round(s.throughput(), 2),  # Eq. 12
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mode", default="coopt", choices=list(MODES))
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--max-new-tokens", type=int, default=24)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="Pallas hot path (interpret mode on CPU)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    arch = args.arch + ("-reduced" if args.reduced else "")
+    out = serve_workload(arch, args.mode, requests=args.requests,
+                         num_lanes=args.lanes, max_len=args.max_len,
+                         max_new_tokens=args.max_new_tokens,
+                         use_kernel=args.use_kernel,
+                         temperature=args.temperature)
+    print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Multi-head Latent Attention (deepseek-v2) with a *paged, quantizable latent
+cache* — Opt-KV/Opt-Pa applied to MLA (DESIGN.md §5).
+
+The per-token cache entry is the compressed latent c_kv (R) concatenated with
+the shared rotary key k_rope (dr): one vector of R+dr floats. Opt-KV
+quantizes it to FP8; Opt-Pa pages it and runs block-wise online softmax.
+Decode uses the matrix-absorption form (queries projected into latent space),
+so K/V are never materialised per head at decode time.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.coopt import CoOptConfig
+from repro.cache.quant import dequantize_fp8
+from repro.models.layers import (apply_rope, causal_attention, linear,
+                                 rmsnorm, shard_act)
+
+_NEG = -1e30
+
+
+def mla_project(x, p, cfg, positions):
+    """Shared projections. x (B,S,d) -> q_nope (B,S,H,dn), q_rope (B,S,H,dr),
+    latent (B,S,R+dr) (k_rope already rotated)."""
+    H, dn, dr, R = (cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                    cfg.kv_lora_rank)
+    B, S, _ = x.shape
+    q = linear(x, p["wq"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = linear(x, p["w_dkv"])                      # (B,S,R+dr)
+    c, k_rope = ckv[..., :R], ckv[..., R:]
+    c = rmsnorm(c, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    latent = jnp.concatenate([c, k_rope], axis=-1)
+    return q_nope, q_rope, latent
+
+
+def mla_full_attention(q_nope, q_rope, latent, p, cfg, *, window: int = 0):
+    """Train/prefill path: expand latent -> per-head K/V, chunked causal attn."""
+    H, dn, dr, R, dv = (cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                        cfg.kv_lora_rank, cfg.v_head_dim)
+    B, S, _ = latent.shape
+    c, k_rope = latent[..., :R], latent[..., R:]
+    k_nope = jnp.einsum("btr,rhd->bthd", c, p["w_uk"].reshape(R, H, dn))
+    v = jnp.einsum("btr,rhd->bthd", c, p["w_uv"].reshape(R, H, dv))
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = causal_attention(q, k, v, window=window)     # (B,S,H,dn+dr->dv? no:)
+    return o                                          # (B,S,H,dv)
+
+
+def mla_paged_decode(q_nope, q_rope, lat_pages, scale_pages, cache_len, p, cfg,
+                     coopt: CoOptConfig, *, window: int = 0, sink_pages: int = 1):
+    """Absorbed decode. q_nope/q_rope (B,H,dn|dr); lat_pages (B,P,ps,R+dr).
+    Returns (B,H,dv)."""
+    H, dn, dr, R, dv = (cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                        cfg.kv_lora_rank, cfg.v_head_dim)
+    B, P, ps, _ = lat_pages.shape
+    scale = 1.0 / math.sqrt(dn + dr)
+    # absorb W_uk into q: score_h(t) = <q_lat_h, c_t> + <q_rope_h, k_rope_t>
+    # (q_lat resharded once per layer to match the model-sharded latent
+    # cache — its r dim inherits w_uk's d_in->data otherwise, §Perf P2)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope.astype(jnp.float32),
+                       p["w_uk"].reshape(R, H, dn).astype(jnp.float32))
+    q_lat = shard_act(q_lat, ("batch", None, "latent"))
+    q_rope = shard_act(q_rope, ("batch", None, "latent"))
+
+    def dequant(pages, scales):
+        """pages (..., R+dr); scales (..., 2) — separate c / rope scales."""
+        if coopt.opt_kv:
+            c = dequantize_fp8(pages[..., :R], scales[..., 0], axis=-1,
+                               dtype=jnp.float32)
+            r = dequantize_fp8(pages[..., R:], scales[..., 1], axis=-1,
+                               dtype=jnp.float32)
+            return jnp.concatenate([c, r], axis=-1)
+        return pages.astype(jnp.float32)
+
+    if window:
+        from repro.core.opt_kv import window_page_table
+        table = window_page_table(cache_len, P, ps, window, sink_pages)
+        pt = jnp.maximum(table, 0)
+        lat = jnp.take_along_axis(lat_pages, pt[:, :, None, None], axis=1)
+        sc = (jnp.take_along_axis(scale_pages, pt[:, :, None, None], axis=1)
+              if coopt.opt_kv else None)
+        lat = dequant(lat, sc)
+        lat = lat.reshape(B, -1, R + dr)
+        pos = (pt[:, :, None] * ps + jnp.arange(ps)[None, None]).reshape(B, -1)
+        ok = (pos < cache_len[:, None]) \
+            & ((pos >= jnp.maximum(cache_len[:, None] - window, 0))
+               | (pos < sink_pages * ps)) \
+            & jnp.repeat(table >= 0, ps, axis=1)
+        s = (jnp.einsum("bhr,btr->bht", q_lat, lat[..., :R])
+             + jnp.einsum("bhe,bte->bht", q_rope.astype(jnp.float32),
+                          lat[..., R:])) * scale
+        s = jnp.where(ok[:, None], s, _NEG)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        pr = jnp.exp(s - m)
+        pr = pr / jnp.maximum(jnp.sum(pr, axis=-1, keepdims=True), 1e-30)
+        o_lat = jnp.einsum("bht,btr->bhr", pr, lat[..., :R])
+        return jnp.einsum("bhr,rhd->bhd", o_lat,
+                          p["w_uv"].reshape(R, H, dv).astype(jnp.float32)
+                          ).astype(q_nope.dtype)
+
+    pg = coopt.page_group if coopt.opt_pa else P
+    while P % pg:
+        pg //= 2
+    pg = max(pg, 1)
+    NG, T = P // pg, pg * ps
+    lat_g = lat_pages.reshape(B, NG, T, R + dr)
+    sc_g = scale_pages.reshape(B, NG, T, 2) if coopt.opt_kv else None
+
+    def body(carry, g):
+        m, l, acc = carry
+        lat = dequant(lat_g[:, g], None if sc_g is None else sc_g[:, g])
+        # keep the dequantized latent model-sharded along its width and
+        # force the (tiny) score tensor to be the all-reduced partial sum —
+        # without this GSPMD all-gathers the full latent page group per
+        # scan step (EXPERIMENTS.md §Perf P2)
+        lat_c = shard_act(lat[..., :R], ("batch", None, "latent"))
+        lat_r = shard_act(lat[..., R:], ("batch", None, "latent"))
+        s = (jnp.einsum("bhr,btr->bht", q_lat, lat_c)
+             + jnp.einsum("bhe,bte->bht", q_rope.astype(jnp.float32),
+                          lat_r)) * scale
+        s = shard_act(s, ("batch", None, None))
+        pos = g * T + jnp.arange(T)[None, None, :]
+        s = jnp.where(pos < cache_len[:, None, None], s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        corr = jnp.exp(m - m_new)
+        pr = jnp.exp(s - m_new)
+        l = l * corr[..., 0] + jnp.sum(pr, axis=-1)
+        acc = acc * corr + shard_act(
+            jnp.einsum("bht,btr->bhr", pr, lat_c),
+            ("batch", None, "latent"))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, 1), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, H), jnp.float32)
+    a0 = jnp.zeros((B, H, R), jnp.float32)
+    if NG == 1:
+        (m, l, acc), _ = body((m0, l0, a0), 0)
+    else:
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(NG))
+    o_lat = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.einsum("bhr,rhd->bhd", o_lat,
+                      p["w_uv"].reshape(R, H, dv).astype(jnp.float32)
+                      ).astype(q_nope.dtype)

@@ -1,0 +1,105 @@
+"""Mixture-of-Experts FFN (mixtral, deepseek-v2) — gather-based dispatch.
+
+Routing is computed per batch row (capacity C = ceil(S * top_k / E * cf)),
+tokens are gathered per expert, run through the expert SwiGLU as a batched
+matmul (MXU-friendly (E, C, d) x (E, d, ff)), and combined with the router
+weights. Tokens beyond capacity are dropped (standard capacity-factor MoE).
+Aux outputs: load-balance loss + router z-loss (used by train_step).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import linear, shard_act
+
+
+class MoEAux(NamedTuple):
+    load_balance_loss: jax.Array
+    router_z_loss: jax.Array
+    dropped_fraction: jax.Array
+
+
+def _route(logits, top_k: int, capacity: int):
+    """logits (B,S,E) -> (idx (B,E,C) token positions, comb (B,E,C) weights,
+    aux)."""
+    B, S, E = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, top_k)               # (B,S,K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)   # renormalise
+
+    onehot = jax.nn.one_hot(top_e, E, dtype=jnp.float32)     # (B,S,K,E)
+    mask = jnp.sum(onehot, axis=2)                           # (B,S,E) 0/1
+    # position of each token in its expert's queue (within the batch row)
+    pos = jnp.cumsum(mask, axis=1) - 1.0                     # (B,S,E)
+    keep = (pos < capacity) & (mask > 0)
+    pos = pos.astype(jnp.int32)
+
+    # scatter token position s into (e, pos) slots
+    tok = jnp.broadcast_to(jnp.arange(S)[None, :, None], (B, S, E))
+    flat_slot = jnp.where(keep, jnp.arange(E)[None, None, :] * capacity + pos,
+                          E * capacity)                      # OOB -> dropped
+    idx = jnp.full((B, E * capacity + 1), S, jnp.int32)      # S = pad token id
+    idx = idx.at[jnp.arange(B)[:, None], flat_slot.reshape(B, -1)].set(
+        tok.reshape(B, -1), mode="drop")
+    idx = idx[:, :-1].reshape(B, E, capacity)
+
+    # combine weight of the token occupying each (e, c) slot
+    w_tok_e = jnp.sum(top_p[..., None] * onehot, axis=2)     # (B,S,E)
+    w_tok_e = jnp.where(keep, w_tok_e, 0.0)
+    w_pad = jnp.concatenate([w_tok_e, jnp.zeros((B, 1, E))], axis=1)
+    comb = w_pad[jnp.arange(B)[:, None, None], idx,
+                 jnp.arange(E)[None, :, None]]               # (B,E,C)
+
+    # aux losses (Switch-style)
+    frac_tokens = jnp.mean(mask, axis=1)                     # (B,E)
+    frac_probs = jnp.mean(probs, axis=1)                     # (B,E)
+    lb = E * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits.astype(jnp.float32),
+                                             axis=-1)))
+    dropped = 1.0 - jnp.sum(keep) / jnp.maximum(jnp.sum(mask), 1.0)
+    return idx, comb, MoEAux(lb, z, dropped)
+
+
+def moe_ffn(x, wr, wg, wu, wd, *, top_k: int, capacity_factor: float = 1.25,
+            shared: Optional[tuple] = None):
+    """x (B,S,d); wr (d,E); wg/wu (E,d,ff); wd (E,ff,d).
+
+    shared: optional (wg_s, wu_s, wd_s) always-on shared-expert SwiGLU.
+    Returns (out (B,S,d), MoEAux).
+    """
+    B, S, d = x.shape
+    E = wr.shape[-1]
+    capacity = max(int(math.ceil(S * top_k / E * capacity_factor)), 1)
+    capacity = min(capacity, S)
+
+    logits = linear(x, wr)                                   # (B,S,E)
+    idx, comb, aux = _route(logits, top_k, capacity)
+
+    x_pad = jnp.concatenate([x, jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    xin = jnp.take_along_axis(x_pad[:, None], idx[..., None], axis=2)  # (B,E,C,d)
+    # pin the dispatched tokens to batch sharding — without this GSPMD
+    # replicates xin across the mesh and all-reduces full-size f32 copies
+    # per layer (EXPERIMENTS.md §Perf P1)
+    xin = shard_act(xin, ("batch", "experts", None, None))
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xin, wg)) \
+        * jnp.einsum("becd,edf->becf", xin, wu)
+    h = shard_act(h, ("batch", "experts", None, "ffn"))
+    y = jnp.einsum("becf,efd->becd", h, wd)                  # (B,E,C,d)
+    y = y * comb[..., None].astype(y.dtype)
+    y = shard_act(y, ("batch", "experts", None, None))
+
+    # combine back: scatter-add expert outputs to token positions
+    out = jnp.zeros((B, S + 1, d), y.dtype)
+    out = out.at[jnp.arange(B)[:, None], idx.reshape(B, -1)].add(
+        y.reshape(B, -1, d))
+    out = out[:, :S]
+
+    if shared is not None:
+        wg_s, wu_s, wd_s = shared
+        out = out + linear(jax.nn.silu(linear(x, wg_s)) * linear(x, wu_s), wd_s)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,502 @@
+"""Generic decoder-only transformer covering the dense / moe / mla / vlm
+families, with scan-over-layers (stacked params), paged KV caching, and the
+three LLM-CoOpt techniques toggled by a ``CoOptConfig``.
+
+Step kinds (configs/shapes.py):
+  forward     – teacher-forced full sequence (train)
+  prefill     – forward + KV-cache population (in-flight bf16 attention;
+                the cache stores the Opt-KV-quantized copy for later decode)
+  decode_step – ONE token against the paged cache (Opt-Pa / Opt-KV read path)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.coopt import CoOptConfig, COOPT
+from repro.core.opt_kv import write_kv
+from repro.core.opt_pa import paged_decode_attention
+from repro.models import mla as mla_mod
+from repro.models.layers import (Spec, apply_rope, causal_attention, init_tree,
+                                 linear, repeat_kv, rmsnorm, shard_act, swiglu)
+from repro.models.moe import moe_ffn
+
+
+def _pages(seq_len: int, page_size: int) -> int:
+    return max((seq_len + page_size - 1) // page_size, 1)
+
+
+class TransformerModel:
+    """Families: dense (yi/qwen/deepseek/llama), moe (mixtral), mla
+    (deepseek-v2), vlm (internvl2 — stub patch embeddings prepended)."""
+
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.family in ("dense", "moe", "mla", "vlm")
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- params --
+    def _segments(self):
+        cfg = self.cfg
+        moe = "moe" if cfg.num_experts else "dense"
+        if cfg.num_experts and cfg.first_dense_layers:
+            return [(cfg.first_dense_layers, "dense"),
+                    (cfg.num_layers - cfg.first_dense_layers, moe)]
+        return [(cfg.num_layers, moe)]
+
+    def _attn_specs(self, L: int) -> Dict[str, Spec]:
+        cfg = self.cfg
+        d, H, Hkv, D = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        s: Dict[str, Spec] = {
+            "ln1": Spec((L, d), ("layers", None), "ones", jnp.float32)}
+        if cfg.family == "mla":
+            dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+            R, dv = cfg.kv_lora_rank, cfg.v_head_dim
+            s.update(
+                wq=Spec((L, d, H * (dn + dr)), ("layers", "d_in", "d_out")),
+                w_dkv=Spec((L, d, R + dr), ("layers", "d_in", "d_out")),
+                kv_norm=Spec((L, R), ("layers", None), "ones", jnp.float32),
+                w_uk=Spec((L, R, H * dn), ("layers", "d_in", "d_out")),
+                w_uv=Spec((L, R, H * dv), ("layers", "d_in", "d_out")),
+                wo=Spec((L, H * dv, d), ("layers", "d_out", "d_in")),
+            )
+            return s
+        s.update(
+            wq=Spec((L, d, H * D), ("layers", "d_in", "d_out")),
+            wk=Spec((L, d, Hkv * D), ("layers", "d_in", "d_out")),
+            wv=Spec((L, d, Hkv * D), ("layers", "d_in", "d_out")),
+            wo=Spec((L, H * D, d), ("layers", "d_out", "d_in")),
+        )
+        if cfg.qkv_bias:
+            s.update(bq=Spec((L, H * D), ("layers", "d_out"), "zeros"),
+                     bk=Spec((L, Hkv * D), ("layers", "d_out"), "zeros"),
+                     bv=Spec((L, Hkv * D), ("layers", "d_out"), "zeros"))
+        if cfg.qk_norm:
+            s.update(q_norm=Spec((L, D), ("layers", None), "ones", jnp.float32),
+                     k_norm=Spec((L, D), ("layers", None), "ones", jnp.float32))
+        return s
+
+    def _ffn_specs(self, L: int, kind: str) -> Dict[str, Spec]:
+        cfg = self.cfg
+        d = cfg.d_model
+        s = {"ln2": Spec((L, d), ("layers", None), "ones", jnp.float32)}
+        if kind == "dense":
+            ff = cfg.d_ff
+            s.update(wg=Spec((L, d, ff), ("layers", "d_in", "d_out")),
+                     wu=Spec((L, d, ff), ("layers", "d_in", "d_out")),
+                     wd=Spec((L, ff, d), ("layers", "d_out", "d_in")))
+        else:
+            E, ff = cfg.num_experts, cfg.moe_d_ff
+            s.update(
+                wr=Spec((L, d, E), ("layers", "d_in", None)),
+                # expert-parallel: experts -> "data" when divisible (else
+                # d_in takes it), ff -> model. (§Perf P1: un-sharding d and
+                # putting ff on (data, model) replicated the expert compute
+                # 100x — refuted; the fix that held is the activation
+                # constraints inside moe_ffn.)
+                wg_e=Spec((L, E, d, ff), ("layers", "experts", "moe_d_in",
+                                          "d_out")),
+                wu_e=Spec((L, E, d, ff), ("layers", "experts", "moe_d_in",
+                                          "d_out")),
+                wd_e=Spec((L, E, ff, d), ("layers", "experts", "d_out",
+                                          "moe_d_in")),
+            )
+            if cfg.num_shared_experts:
+                sf = ff * cfg.num_shared_experts
+                s.update(wg_s=Spec((L, d, sf), ("layers", "d_in", "d_out")),
+                         wu_s=Spec((L, d, sf), ("layers", "d_in", "d_out")),
+                         wd_s=Spec((L, sf, d), ("layers", "d_out", "d_in")))
+        return s
+
+    def param_specs(self):
+        cfg = self.cfg
+        segs = []
+        for count, kind in self._segments():
+            seg = dict(self._attn_specs(count))
+            seg.update(self._ffn_specs(count, kind))
+            segs.append(seg)
+        return {
+            "embed": Spec((cfg.vocab_size, cfg.d_model), ("vocab", "d_out"),
+                          "embed"),
+            "segments": segs,
+            "final_norm": Spec((cfg.d_model,), (None,), "ones", jnp.float32),
+            "lm_head": Spec((cfg.d_model, cfg.vocab_size), ("d_in", "d_out")),
+        }
+
+    def init(self, key):
+        return init_tree(key, self.param_specs())
+
+    # -------------------------------------------------------------- layers --
+    def _attention_full(self, p, x, positions, coopt: CoOptConfig):
+        """Full-sequence attention (train/prefill). Returns (out, k, v) —
+        k/v are the per-token cache entries (None head-expanded)."""
+        cfg = self.cfg
+        B, S, _ = x.shape
+        H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        if cfg.family == "mla":
+            qn, qr, latent = mla_mod.mla_project(x, p, cfg, positions)
+            o = mla_mod.mla_full_attention(qn, qr, latent, p, cfg,
+                                           window=cfg.attn_window)
+            out = linear(o.reshape(B, S, -1), p["wo"])
+            return out, latent, None
+        q = linear(x, p["wq"], p.get("bq")).reshape(B, S, H, D)
+        k = linear(x, p["wk"], p.get("bk")).reshape(B, S, Hkv, D)
+        v = linear(x, p["wv"], p.get("bv")).reshape(B, S, Hkv, D)
+        if cfg.qk_norm:
+            q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+            k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        if coopt.use_kernel:
+            from repro.kernels import ops
+            if coopt.opt_gqa or Hkv == H:
+                o = ops.flash_prefill(q, k, v, window=cfg.attn_window)
+            else:
+                o = ops.flash_prefill(q, repeat_kv(k, H // Hkv),
+                                      repeat_kv(v, H // Hkv),
+                                      window=cfg.attn_window)
+        elif coopt.opt_gqa or Hkv == H:
+            o = causal_attention(q, k, v, window=cfg.attn_window)
+        else:  # Original: KV physically expanded per query head (Fig. 2)
+            o = causal_attention(q, repeat_kv(k, H // Hkv),
+                                 repeat_kv(v, H // Hkv), window=cfg.attn_window)
+        return linear(o.reshape(B, S, H * D), p["wo"]), k, v
+
+    def _attention_decode(self, p, x, kv_slice, positions, new_len, coopt,
+                          long_window: int):
+        """One-token attention against the paged cache slice.
+        kv_slice: ("kv", "scale") for this layer (already containing the new
+        token). Returns projected output (B,1,d)."""
+        cfg = self.cfg
+        B = x.shape[0]
+        window = cfg.attn_window or long_window
+        if cfg.family == "mla":
+            qn, qr, _lat = None, None, None
+            H = cfg.num_heads
+            dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+            q = linear(x, p["wq"]).reshape(B, 1, H, dn + dr)
+            qn, qr = q[..., :dn], q[..., dn:]
+            qr = apply_rope(qr, positions, cfg.rope_theta)
+            o = mla_mod.mla_paged_decode(
+                qn[:, 0], qr[:, 0], kv_slice["kv"], kv_slice.get("scale"),
+                new_len, p, cfg, coopt, window=window,
+                sink_pages=cfg.sink_blocks)
+            return linear(o.reshape(B, 1, -1), p["wo"])
+        H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        q = linear(x, p["wq"], p.get("bq")).reshape(B, 1, H, D)
+        if cfg.qk_norm:
+            q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        o = paged_decode_attention(
+            q[:, 0], kv_slice["kv"], kv_slice.get("scale"), new_len,
+            coopt=coopt, window=window, sink_pages=cfg.sink_blocks)
+        return linear(o.reshape(B, 1, H * D), p["wo"])
+
+    def _new_kv(self, p, x, positions):
+        """Per-token cache entries (decode token or prefill chunk). Returns
+        (k, v) or (latent, None) for MLA. Shapes (B,S,Hkv,D) / (B,S,R+dr)."""
+        cfg = self.cfg
+        B, S, _ = x.shape
+        if cfg.family == "mla":
+            _, _, latent = mla_mod.mla_project(x, p, cfg, positions)
+            return latent, None
+        Hkv, D = cfg.num_kv_heads, cfg.head_dim
+        k = linear(x, p["wk"], p.get("bk")).reshape(B, S, Hkv, D)
+        v = linear(x, p["wv"], p.get("bv")).reshape(B, S, Hkv, D)
+        if cfg.qk_norm:
+            k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        return k, v
+
+    def _ffn(self, p, x, kind, coopt: CoOptConfig = COOPT):
+        cfg = self.cfg
+        if kind == "dense":
+            return swiglu(x, p["wg"], p["wu"], p["wd"]), None
+        shared = ((p["wg_s"], p["wu_s"], p["wd_s"])
+                  if cfg.num_shared_experts else None)
+        return moe_ffn(x, p["wr"], p["wg_e"], p["wu_e"], p["wd_e"],
+                       top_k=cfg.top_k, shared=shared,
+                       capacity_factor=coopt.moe_capacity_factor)
+
+    # ------------------------------------------------------------- forward --
+    def _embed(self, params, batch):
+        """Token (+ modality-stub) embedding. Returns (h, text_offset)."""
+        cfg = self.cfg
+        h = params["embed"][batch["tokens"]].astype(jnp.bfloat16)
+        off = 0
+        if cfg.family == "vlm" and "patches" in batch:
+            h = jnp.concatenate(
+                [batch["patches"].astype(jnp.bfloat16), h], axis=1)
+            off = cfg.num_patches
+        return h, off
+
+    def forward(self, params, batch, coopt: CoOptConfig = COOPT):
+        """Teacher-forced logits aligned with batch['labels'] (see
+        input_specs): dense -> (B,S,V); vlm -> (B,S_text,V)."""
+        cfg = self.cfg
+        h, off = self._embed(params, batch)
+        B, S, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        h = shard_act(h, ("batch", "seq", None))
+        auxes = []
+        for seg_params, (count, kind) in zip(params["segments"],
+                                             self._segments()):
+            def body(carry, pl, kind=kind):
+                hh = carry
+                a, _, _ = self._attention_full(pl, rmsnorm(hh, pl["ln1"],
+                                                           cfg.norm_eps),
+                                               positions, coopt)
+                hh = hh + a
+                f, aux = self._ffn(pl, rmsnorm(hh, pl["ln2"], cfg.norm_eps),
+                                   kind, coopt)
+                hh = shard_act(hh + f, ("batch", "seq", None))
+                aux_v = (jnp.zeros(3, jnp.float32) if aux is None
+                         else jnp.stack([aux.load_balance_loss,
+                                         aux.router_z_loss,
+                                         aux.dropped_fraction]))
+                return hh, aux_v
+            body = jax.checkpoint(body)
+            h, aux = jax.lax.scan(body, h, seg_params)
+            auxes.append(aux)
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        if off:
+            # same convention as dense: logits[i] predicts text token i+1
+            h = h[:, off:]
+        logits = linear(h, params["lm_head"])
+        aux = jnp.sum(jnp.concatenate(auxes, 0), axis=0)
+        return logits, {"load_balance": aux[0], "router_z": aux[1],
+                        "dropped": aux[2]}
+
+    # ------------------------------------------------------------ caching --
+    def cache_shape(self, batch: int, max_len: int, coopt: CoOptConfig):
+        """Dict of (shape, dtype, logical axes) — consumed by launch/dryrun
+        for ShapeDtypeStructs + shardings, and by init_cache."""
+        cfg = self.cfg
+        P, ps = _pages(max_len, coopt.page_size), coopt.page_size
+        out: Dict[str, Any] = {}
+        if cfg.family == "mla":
+            width = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+            out["kv"] = ((cfg.num_layers, batch, P, ps, width),
+                         coopt.kv_dtype,
+                         ("layers", "batch", "pages", None, "latent"))
+            if coopt.opt_kv:
+                # two scales per token: c_kv and k_rope magnitudes differ,
+                # a shared scale would crush the smaller segment's mantissa
+                out["scale"] = ((cfg.num_layers, batch, P, ps, 2),
+                                jnp.float32,
+                                ("layers", "batch", "pages", None, None))
+        else:
+            Hkv, D = cfg.num_kv_heads, cfg.head_dim
+            out["kv"] = ((cfg.num_layers, 2, batch, P, ps, Hkv, D),
+                         coopt.kv_dtype,
+                         ("layers", None, "batch", "pages", None, "kv_heads",
+                          "head_dim"))
+            if coopt.opt_kv:
+                out["scale"] = ((cfg.num_layers, 2, batch, P, ps, Hkv),
+                                jnp.float32,
+                                ("layers", None, "batch", "pages", None,
+                                 "kv_heads"))
+        out["length"] = ((batch,), jnp.int32, ("batch",))
+        return out
+
+    def init_cache(self, batch: int, max_len: int, coopt: CoOptConfig):
+        return {k: jnp.zeros(sh, dt)
+                for k, (sh, dt, _) in
+                self.cache_shape(batch, max_len, coopt).items()}
+
+    def _write_layer(self, kv_c, sc_c, new_a, new_b, slots, coopt):
+        """Write cache entries for one layer. MLA: new_a=(B,S,R+dr)."""
+        if self.cfg.family == "mla":
+            B, S, W = new_a.shape
+            R = self.cfg.kv_lora_rank
+            _, P, ps, _ = kv_c.shape
+            flat = kv_c.reshape(B, P * ps, W)
+            if coopt.opt_kv:
+                from repro.cache.quant import quantize_fp8
+                qc, s_c = quantize_fp8(new_a[..., :R], axis=-1)
+                qr, s_r = quantize_fp8(new_a[..., R:], axis=-1)
+                qv = jnp.concatenate([qc, qr], axis=-1)
+                s = jnp.stack([s_c, s_r], axis=-1)            # (B,S,2)
+                flat = flat.at[jnp.arange(B)[:, None], slots].set(
+                    qv.astype(flat.dtype), mode="drop")
+                sf = sc_c.reshape(B, P * ps, 2)
+                sf = sf.at[jnp.arange(B)[:, None], slots].set(s, mode="drop")
+                sc_c = sf.reshape(B, P, ps, 2)
+            else:
+                flat = flat.at[jnp.arange(B)[:, None], slots].set(
+                    new_a.astype(flat.dtype), mode="drop")
+            return flat.reshape(B, P, ps, W), sc_c
+        return write_kv(kv_c, sc_c, new_a, new_b, slots, coopt)
+
+    def _scan_with_cache(self, params, cache, h, positions, slots, coopt,
+                         step_fn):
+        """Scan layers threading per-layer cache slices as xs/ys."""
+        cfg = self.cfg
+        # highest written slot + 1 (robust to -1 / SkipSet-padded tails)
+        new_len = jnp.maximum(cache["length"],
+                              jnp.max(slots, axis=1) + 1).astype(jnp.int32)
+        start = 0
+        kv_out, sc_out = [], []
+        for seg_params, (count, kind) in zip(params["segments"],
+                                             self._segments()):
+            kv_seg = cache["kv"][start:start + count]
+            sc_seg = (cache["scale"][start:start + count]
+                      if coopt.opt_kv else None)
+            xs = (seg_params, kv_seg, sc_seg) if coopt.opt_kv else \
+                 (seg_params, kv_seg)
+
+            def body(carry, xs, kind=kind):
+                hh = carry
+                if coopt.opt_kv:
+                    pl, kv_c, sc_c = xs
+                else:
+                    pl, kv_c = xs
+                    sc_c = None
+                hh, kv_c, sc_c = step_fn(hh, pl, kv_c, sc_c, kind)
+                ys = (kv_c, sc_c) if coopt.opt_kv else (kv_c,)
+                return hh, ys
+
+            h, ys = jax.lax.scan(body, h, xs)
+            kv_out.append(ys[0])
+            if coopt.opt_kv:
+                sc_out.append(ys[1])
+            start += count
+        cache = dict(cache)
+        cache["kv"] = jnp.concatenate(kv_out, 0) if len(kv_out) > 1 else kv_out[0]
+        if coopt.opt_kv:
+            cache["scale"] = (jnp.concatenate(sc_out, 0)
+                              if len(sc_out) > 1 else sc_out[0])
+        cache["length"] = new_len
+        return h, cache
+
+    def _attention_chunk(self, p, x, positions, kv_c, sc_c, coopt):
+        """Prefill-continuation attention (chunked prefill): the chunk's
+        K/V are already written to the paged cache; queries attend over the
+        WHOLE cache (previous chunks + this one) with true positions —
+        cache slots are identity-mapped so slot index == position.
+        Non-MLA families only."""
+        cfg = self.cfg
+        B, S, _ = x.shape
+        H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        q = linear(x, p["wq"], p.get("bq")).reshape(B, S, H, D)
+        if cfg.qk_norm:
+            q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        from repro.core.opt_kv import dequant_pages
+        kv = dequant_pages(kv_c, sc_c, coopt)          # (2,B,P,ps,Hkv,D)
+        _, _, P, ps, _, _ = kv_c.shape
+        k, v = kv.reshape(2, B, P * ps, Hkv, D)
+        # queries at absolute positions (uniform offset across the batch);
+        # keys at slot == position
+        o = causal_attention(q, k, v, window=cfg.attn_window,
+                             q_offset=positions[0, 0])
+        return linear(o.reshape(B, S, H * D), p["wo"])
+
+    def prefill(self, params, batch, cache, coopt: CoOptConfig = COOPT):
+        """Full-prompt forward + cache population. Returns
+        (last-token logits (B,V), cache).
+
+        Chunked-prefill continuation: pass ``batch["positions"]`` (B, S)
+        with the chunk's absolute positions (and matching ``slot_idx``);
+        attention then runs over the whole cache so chunk k+1 sees chunks
+        0..k (transformer families except MLA)."""
+        cfg = self.cfg
+        h, off = self._embed(params, batch)
+        B, S, _ = h.shape
+        chunked = "positions" in batch
+        if chunked and cfg.family == "mla":
+            raise NotImplementedError(
+                "chunked prefill not implemented for MLA (absorbed-latent "
+                "continuation attention); use monolithic prefill")
+        if chunked:
+            positions = batch["positions"].astype(jnp.int32)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        h = shard_act(h, ("batch", "seq", None))
+        slots = batch.get("slot_idx", positions).astype(jnp.int32)
+
+        def step(hh, pl, kv_c, sc_c, kind):
+            x = rmsnorm(hh, pl["ln1"], cfg.norm_eps)
+            if chunked and cfg.family != "mla":
+                new_a, new_b = self._new_kv(pl, x, positions)
+                kv_c, sc_c = self._write_layer(kv_c, sc_c, new_a, new_b,
+                                               slots, coopt)
+                a = self._attention_chunk(pl, x, positions, kv_c, sc_c,
+                                          coopt)
+            else:
+                a, new_a, new_b = self._attention_full(pl, x, positions,
+                                                       coopt)
+                kv_c, sc_c = self._write_layer(kv_c, sc_c, new_a, new_b,
+                                               slots, coopt)
+            hh = hh + a
+            f, _ = self._ffn(pl, rmsnorm(hh, pl["ln2"], cfg.norm_eps), kind,
+                             coopt)
+            return shard_act(hh + f, ("batch", "seq", None)), kv_c, sc_c
+
+        h, cache = self._scan_with_cache(params, cache, h, positions, slots,
+                                         coopt, step)
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        last = batch.get("last_pos", jnp.full((B,), S - 1, jnp.int32))
+        h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
+        return linear(h_last, params["lm_head"]), cache
+
+    def decode_step(self, params, batch, cache, coopt: CoOptConfig = COOPT,
+                    long_window: int = 0):
+        """ONE token (B,1) against the paged cache. Returns (logits (B,V),
+        cache)."""
+        cfg = self.cfg
+        h = params["embed"][batch["token"]].astype(jnp.bfloat16)  # (B,1,d)
+        B = h.shape[0]
+        positions = cache["length"][:, None]                       # (B,1)
+        slots = batch.get("slot_idx", positions).astype(jnp.int32)
+        new_len = cache["length"] + 1
+
+        def step(hh, pl, kv_c, sc_c, kind):
+            x = rmsnorm(hh, pl["ln1"], cfg.norm_eps)
+            new_a, new_b = self._new_kv(pl, x, positions)
+            kv_c, sc_c = self._write_layer(kv_c, sc_c, new_a, new_b, slots,
+                                           coopt)
+            a = self._attention_decode(pl, x, {"kv": kv_c, "scale": sc_c},
+                                       positions, new_len, coopt, long_window)
+            hh = hh + a
+            f, _ = self._ffn(pl, rmsnorm(hh, pl["ln2"], cfg.norm_eps), kind,
+                             coopt)
+            return hh + f, kv_c, sc_c
+
+        h, cache = self._scan_with_cache(params, cache, h, positions, slots,
+                                         coopt, step)
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        return linear(h[:, 0], params["lm_head"]), cache
+
+    # -------------------------------------------------------------- specs --
+    def input_specs(self, shape) -> Dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        tok = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+        if shape.kind == "decode":
+            return {"token": tok(B, 1)}
+        st = S - cfg.num_patches if cfg.family == "vlm" else S
+        out = {"tokens": tok(B, st)}
+        if cfg.family == "vlm":
+            out["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+        if shape.kind == "train":
+            out["labels"] = tok(B, st)
+        return out
+
+    # --------------------------------------------------------------- misc --
+    def param_count(self) -> int:
+        from repro.models.layers import param_count
+        return param_count(self.param_specs())
+
+    def active_param_count(self) -> int:
+        cfg = self.cfg
+        total = self.param_count()
+        if not cfg.num_experts:
+            return total
+        per_layer = 3 * cfg.d_model * cfg.moe_d_ff
+        moe_layers = cfg.num_layers - cfg.first_dense_layers
+        return total - per_layer * (cfg.num_experts - cfg.top_k) * moe_layers

@@ -1,0 +1,6 @@
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.request import Request, RequestState
+from repro.serving.sampler import SamplingParams
+
+__all__ = ["Engine", "EngineConfig", "Request", "RequestState",
+           "SamplingParams"]

@@ -1,0 +1,275 @@
+"""LLM-CoOpt serving engine: continuous batching over a paged, quantizable
+KV cache, with the paper's three techniques selected by a ``CoOptConfig``.
+
+The engine is the "vLLM migration target" of the paper: the Original mode
+reproduces unmodified-vLLM semantics (bf16 cache, every allocated page
+loaded, per-head KV expansion) and each Opt-* flag turns on one technique,
+so Figs. 6-7's five modes are one constructor argument apart.
+
+Design (hardware adaptation, DESIGN.md §3): ``num_lanes`` batch lanes with
+static per-lane page pools; all dynamic paging state (free lists, slot
+indices, SkipSets) lives host-side in the Scheduler/BlockManager; device
+steps are two jit'd functions (bucketed prefill, lockstep decode). Lane
+isolation is enforced by masking cache updates with the admitted-lane mask —
+idle lanes' state is bit-identical across steps (asserted by tests).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.coopt import CoOptConfig, COOPT
+from repro.models import get_model
+from repro.serving.request import Request, RequestState
+from repro.serving.sampler import SamplingParams, sample
+from repro.serving.scheduler import Scheduler, bucket_len
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    num_lanes: int = 4
+    max_len: int = 512
+    prefill_buckets: Tuple[int, ...] = (64, 128, 256, 512)
+    long_window: int = 0            # >0: block-sparse long-context decode
+    sampling: SamplingParams = SamplingParams()
+    seed: int = 0
+
+
+@dataclass
+class EngineStats:
+    prefill_calls: int = 0
+    decode_steps: int = 0
+    generated_tokens: int = 0
+    prefill_time: float = 0.0
+    decode_time: float = 0.0
+
+    @property
+    def total_time(self) -> float:
+        return self.prefill_time + self.decode_time
+
+    def throughput(self) -> float:
+        """Paper Eq. 12: generated tokens / generation time."""
+        return self.generated_tokens / self.decode_time \
+            if self.decode_time else 0.0
+
+
+class Engine:
+    def __init__(self, model_cfg: ModelConfig, coopt: CoOptConfig = COOPT,
+                 engine_cfg: EngineConfig = EngineConfig(),
+                 params=None):
+        self.cfg = model_cfg
+        self.coopt = coopt
+        self.ecfg = engine_cfg
+        self.model = get_model(model_cfg)
+        if params is None:
+            params = self.model.init(jax.random.PRNGKey(engine_cfg.seed))
+        self.params = params
+        self.key = jax.random.PRNGKey(engine_cfg.seed + 1)
+
+        B, M = engine_cfg.num_lanes, engine_cfg.max_len
+        self.cache = self.model.init_cache(B, M, coopt)
+        self._patch_offset = (model_cfg.num_patches
+                              if model_cfg.family == "vlm" else 0)
+        self.scheduler = Scheduler(
+            B, M, coopt.page_size, list(engine_cfg.prefill_buckets),
+            extra_tokens=self._patch_offset,
+            # chunked continuation prefill: attention families with
+            # identity slot mapping (see TransformerModel.prefill)
+            allow_chunked=model_cfg.family in ("dense", "moe"))
+        self.stats = EngineStats()
+
+        shapes = self.model.cache_shape(B, M, coopt)
+        self._batch_axis = {k: axes.index("batch")
+                            for k, (_, _, axes) in shapes.items()}
+
+        self._prefill_fn = jax.jit(self._prefill_impl)
+        self._decode_fn = jax.jit(self._decode_impl)
+
+    # ---------------------------------------------------------- jit bodies --
+    def _mask_lanes(self, new_cache, old_cache, lane_mask):
+        out = {}
+        for name, leaf in new_cache.items():
+            ax = self._batch_axis[name]
+            m = lane_mask.reshape((1,) * ax + (-1,) +
+                                  (1,) * (leaf.ndim - ax - 1))
+            out[name] = jnp.where(m, leaf, old_cache[name])
+        return out
+
+    def _prefill_impl(self, params, batch, cache, lane_mask):
+        logits, new_cache = self.model.prefill(params, batch, cache,
+                                               self.coopt)
+        return logits, self._mask_lanes(new_cache, cache, lane_mask)
+
+    def _decode_impl(self, params, batch, cache, lane_mask):
+        logits, new_cache = self.model.decode_step(
+            params, batch, cache, self.coopt,
+            long_window=self.ecfg.long_window)
+        return logits, self._mask_lanes(new_cache, cache, lane_mask)
+
+    # ------------------------------------------------------------- prefill --
+    def _run_prefill(self, admitted: List[Request]) -> None:
+        # oversized prompts (no bucket) go through chunked prefill alone
+        big = [r for r in admitted
+               if bucket_len(r.prompt_len, self.scheduler.prefill_buckets)
+               is None]
+        for r in big:
+            self._run_chunked_prefill(r)
+        admitted = [r for r in admitted if r not in big]
+        if not admitted:
+            return
+        B = self.ecfg.num_lanes
+        off = self._patch_offset
+        bucket = max(bucket_len(r.prompt_len, self.scheduler.prefill_buckets)
+                     for r in admitted)
+        S = off + bucket
+        tokens = np.zeros((B, bucket), np.int32)
+        slot_idx = np.full((B, S), -1, np.int32)       # Eq. 5 SkipSet: pads
+        pad_mask = np.zeros((B, S), bool)
+        last_pos = np.zeros(B, np.int32)
+        lane_mask = np.zeros(B, bool)
+        for r in admitted:
+            plen = r.prompt_len
+            tokens[r.lane, :plen] = r.prompt
+            mgr = self.scheduler.managers[r.lane]
+            # lane-local physical slots for positions [0, off + plen)
+            # (vlm: patch embeddings occupy the leading ``off`` positions)
+            pos = np.arange(off + plen)
+            slot_idx[r.lane, :off + plen] = mgr.slot_indices(r.req_id, pos)
+            pad_mask[r.lane, :off + plen] = True
+            last_pos[r.lane] = off + plen - 1
+            lane_mask[r.lane] = True
+
+        batch = {"tokens": jnp.asarray(tokens),
+                 "slot_idx": jnp.asarray(slot_idx),
+                 "pad_mask": jnp.asarray(pad_mask),
+                 "last_pos": jnp.asarray(last_pos)}
+        if self.cfg.family == "vlm":
+            batch["patches"] = jnp.zeros((B, off, self.cfg.d_model),
+                                         jnp.bfloat16)
+        if self.cfg.family == "whisper":
+            batch["frames"] = jnp.zeros(
+                (B, self.cfg.num_frames, self.cfg.d_model), jnp.bfloat16)
+
+        t0 = time.perf_counter()
+        logits, self.cache = self._prefill_fn(self.params, batch, self.cache,
+                                              jnp.asarray(lane_mask))
+        logits.block_until_ready()
+        self.stats.prefill_time += time.perf_counter() - t0
+        self.stats.prefill_calls += 1
+
+        self.key, sub = jax.random.split(self.key)
+        sp = self.ecfg.sampling
+        toks = np.asarray(sample(logits, sub, temperature=sp.temperature,
+                                 top_k=sp.top_k, top_p=sp.top_p))
+        now = time.perf_counter()
+        for r in admitted:
+            r.output.append(int(toks[r.lane]))
+            r.prefill_time = now
+            self.stats.generated_tokens += 1
+
+    def _run_chunked_prefill(self, r: Request) -> None:
+        """Sarathi-style continuation prefill for prompts longer than the
+        largest bucket: fixed-size chunks with absolute positions, each
+        chunk attending over the whole cache (dense/moe families)."""
+        B = self.ecfg.num_lanes
+        C = self.scheduler.prefill_buckets[-1]
+        plen = r.prompt_len
+        mgr = self.scheduler.managers[r.lane]
+        lane_mask = np.zeros(B, bool)
+        lane_mask[r.lane] = True
+        nchunk = (plen + C - 1) // C
+        t0 = time.perf_counter()
+        for ci in range(nchunk):
+            lo = ci * C
+            valid = min(C, plen - lo)
+            tokens = np.zeros((B, C), np.int32)
+            tokens[r.lane, :valid] = r.prompt[lo:lo + valid]
+            slot_idx = np.full((B, C), -1, np.int32)
+            slot_idx[r.lane, :valid] = mgr.slot_indices(
+                r.req_id, np.arange(lo, lo + valid))
+            positions = np.broadcast_to(np.arange(lo, lo + C),
+                                        (B, C)).astype(np.int32)
+            batch = {"tokens": jnp.asarray(tokens),
+                     "slot_idx": jnp.asarray(slot_idx),
+                     "positions": jnp.asarray(positions),
+                     "last_pos": jnp.full((B,), valid - 1, jnp.int32)}
+            logits, self.cache = self._prefill_fn(
+                self.params, batch, self.cache, jnp.asarray(lane_mask))
+        logits.block_until_ready()
+        self.stats.prefill_time += time.perf_counter() - t0
+        self.stats.prefill_calls += 1
+
+        self.key, sub = jax.random.split(self.key)
+        sp = self.ecfg.sampling
+        toks = np.asarray(sample(logits, sub, temperature=sp.temperature,
+                                 top_k=sp.top_k, top_p=sp.top_p))
+        r.output.append(int(toks[r.lane]))
+        r.prefill_time = time.perf_counter()
+        self.stats.generated_tokens += 1
+
+    # -------------------------------------------------------------- decode --
+    def _run_decode(self) -> None:
+        B = self.ecfg.num_lanes
+        tokens = np.zeros((B, 1), np.int32)
+        lane_mask = np.zeros(B, bool)
+        for lane, r in self.scheduler.running.items():
+            tokens[lane, 0] = r.output[-1]
+            lane_mask[lane] = True
+        slots = self.scheduler.decode_slots()[:, None]   # (B,1), -1 idle
+
+        batch = {"token": jnp.asarray(tokens),
+                 "slot_idx": jnp.asarray(slots)}
+        t0 = time.perf_counter()
+        logits, self.cache = self._decode_fn(self.params, batch, self.cache,
+                                             jnp.asarray(lane_mask))
+        logits.block_until_ready()
+        self.stats.decode_time += time.perf_counter() - t0
+        self.stats.decode_steps += 1
+
+        self.key, sub = jax.random.split(self.key)
+        sp = self.ecfg.sampling
+        toks = np.asarray(sample(logits, sub, temperature=sp.temperature,
+                                 top_k=sp.top_k, top_p=sp.top_p))
+        finished = []
+        for lane, r in self.scheduler.running.items():
+            r.output.append(int(toks[lane]))
+            self.stats.generated_tokens += 1
+            if r.done():
+                r.finish_time = time.perf_counter()
+                finished.append(r)
+        for r in finished:
+            self.scheduler.finish(r)
+
+    # ---------------------------------------------------------------- API --
+    def add_request(self, req: Request) -> None:
+        self.scheduler.add_request(req)
+
+    def step(self) -> None:
+        admitted = self.scheduler.schedule_prefills()
+        if admitted:
+            self._run_prefill(admitted)
+        elif self.scheduler.running:
+            self._run_decode()
+
+    def run(self, max_steps: int = 100_000) -> None:
+        steps = 0
+        while self.scheduler.has_work and steps < max_steps:
+            self.step()
+            steps += 1
+
+    def generate(self, prompts: Sequence[np.ndarray], max_new_tokens: int = 32,
+                 eos_token: Optional[int] = None) -> List[List[int]]:
+        reqs = [Request(req_id=1000 + i, prompt=np.asarray(p, np.int32),
+                        max_new_tokens=max_new_tokens, eos_token=eos_token)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            self.add_request(r)
+        self.run()
+        return [r.output for r in reqs]

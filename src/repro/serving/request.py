@@ -1,0 +1,48 @@
+"""Inference request lifecycle (vLLM-style)."""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray                       # (prompt_len,) int32 token ids
+    max_new_tokens: int = 64
+    eos_token: Optional[int] = None
+    arrival_time: float = 0.0
+
+    # runtime state
+    state: RequestState = RequestState.WAITING
+    lane: int = -1                           # engine batch lane
+    output: List[int] = field(default_factory=list)
+    prefill_time: float = -1.0               # first-token timestamp
+    finish_time: float = -1.0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    @property
+    def num_generated(self) -> int:
+        return len(self.output)
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.num_generated
+
+    def done(self) -> bool:
+        if self.num_generated >= self.max_new_tokens:
+            return True
+        return (self.eos_token is not None and self.output
+                and self.output[-1] == self.eos_token)

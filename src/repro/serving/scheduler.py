@@ -1,0 +1,102 @@
+"""Continuous-batching scheduler (vLLM-style, lane-based).
+
+The engine exposes ``num_lanes`` batch lanes, each backed by a private paged
+pool of ``max_len`` tokens (JetStream-style static allocation — XLA-friendly;
+DESIGN.md §3 "allocator mismatch" adaptation). The scheduler:
+
+  * admits WAITING requests into free lanes when their prompt + generation
+    budget fits the lane's page pool,
+  * groups the admissions of one step into a single bucketed prefill,
+  * evicts FINISHED requests and recycles lanes,
+  * tracks per-lane BlockManagers so slot indices (and the Opt-KV SkipSet for
+    padding) are exactly the paper's Eq. 5 write-filter inputs.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.cache.block_manager import BlockManager
+from repro.serving.request import Request, RequestState
+
+
+def bucket_len(n: int, buckets: List[int]) -> Optional[int]:
+    for b in buckets:
+        if n <= b:
+            return b
+    return None
+
+
+class Scheduler:
+    def __init__(self, num_lanes: int, max_len: int, page_size: int,
+                 prefill_buckets: List[int], extra_tokens: int = 0,
+                 allow_chunked: bool = False):
+        self.num_lanes = num_lanes
+        self.max_len = max_len
+        self.page_size = page_size
+        self.prefill_buckets = sorted(prefill_buckets)
+        self.extra_tokens = extra_tokens     # modality-stub prefix (vlm)
+        # prompts longer than the largest bucket are admitted and prefilled
+        # chunk-by-chunk (Sarathi-style) when the model family supports it
+        self.allow_chunked = allow_chunked
+        self.waiting: Deque[Request] = deque()
+        self.running: Dict[int, Request] = {}        # lane -> request
+        self.free_lanes: List[int] = list(range(num_lanes - 1, -1, -1))
+        pages = (max_len + page_size - 1) // page_size
+        self.managers = [BlockManager(pages, page_size)
+                         for _ in range(num_lanes)]
+
+    # -------------------------------------------------------------- admit --
+    def add_request(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def schedule_prefills(self) -> List[Request]:
+        """Pop admissible requests into free lanes (one scheduling step)."""
+        admitted = []
+        while self.waiting and self.free_lanes:
+            req = self.waiting[0]
+            if req.prompt_len + self.extra_tokens + req.max_new_tokens \
+                    > self.max_len:
+                # request can never fit: reject (truncate policy lives here)
+                self.waiting.popleft()
+                req.state = RequestState.FINISHED
+                continue
+            if bucket_len(req.prompt_len, self.prefill_buckets) is None \
+                    and not self.allow_chunked:
+                self.waiting.popleft()
+                req.state = RequestState.FINISHED
+                continue
+            lane = self.free_lanes.pop()
+            self.waiting.popleft()
+            req.lane = lane
+            req.state = RequestState.RUNNING
+            mgr = self.managers[lane]
+            mgr.allocate(seq_id=req.req_id,
+                         num_tokens=req.prompt_len + self.extra_tokens)
+            self.running[lane] = req
+            admitted.append(req)
+        return admitted
+
+    # -------------------------------------------------------------- decode --
+    def active_lanes(self) -> List[int]:
+        return sorted(self.running)
+
+    def decode_slots(self) -> np.ndarray:
+        """Per-lane flat slot for the next generated token (-1 = idle lane)."""
+        slots = np.full(self.num_lanes, -1, np.int32)
+        for lane, req in self.running.items():
+            slots[lane] = self.managers[lane].append_token(req.req_id)
+        return slots
+
+    def finish(self, req: Request) -> None:
+        req.state = RequestState.FINISHED
+        self.managers[req.lane].free(req.req_id)
+        del self.running[req.lane]
+        self.free_lanes.append(req.lane)
+        req.lane = -1
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)

@@ -1,0 +1,5 @@
+from repro.training.optimizer import AdamWState, adamw_init, adamw_update
+from repro.training.train import Trainer, loss_fn, make_train_step
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "Trainer", "loss_fn",
+           "make_train_step"]

