@@ -62,4 +62,11 @@ def run_engine_workload(cfg, coopt, *, requests: int = 8, num_lanes: int = 3,
         "prefill_s": round(s.prefill_time, 4),          # in lockstep engine)
         "decode_s": round(s.decode_time, 4),
         "throughput_tok_s": round(s.generated_tokens / max(wall, 1e-9), 2),
+        # shared-pool health (global refcounted allocator): how full the
+        # pool ran and how much shared-prompt work the prefix cache saved
+        "pool_pages": s.pool_pages,
+        "peak_pool_utilization": round(
+            s.peak_pages_in_use / max(s.pool_pages, 1), 4),
+        "prefix_hit_rate": round(s.prefix_hit_rate(), 4),
+        "preemptions": s.preemptions,
     }

@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.cache.quant import quantize_fp8
 from repro.core.coopt import MODES
+from repro.core.opt_kv import identity_page_table
 from repro.core.opt_pa import paged_decode_attention
 from repro.kernels import ops, ref
 
@@ -42,11 +43,14 @@ def run(quick: bool = False):
         (4, 32, 16, 2, 4, 128)
     Hq = Hkv * G
     cache_len = P * ps // 2
+    PT = B * P                    # global pool, lane-identity partitioned
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     q = jax.random.normal(ks[0], (B, Hq, D)).astype(jnp.bfloat16)
-    kf = jax.random.normal(ks[1], (B, P, ps, Hkv, D), jnp.float32)
-    vf = jax.random.normal(ks[2], (B, P, ps, Hkv, D), jnp.float32)
+    kf = jax.random.normal(ks[1], (PT, ps, Hkv, D), jnp.float32)
+    vf = jax.random.normal(ks[2], (PT, ps, Hkv, D), jnp.float32)
     cl = jnp.full((B,), cache_len, jnp.int32)
+    phys = identity_page_table(B, PT)
+    log = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32)[None], (B, P))
 
     kq, ksc = quantize_fp8(kf)
     vq, vsc = quantize_fp8(vf)
@@ -66,13 +70,19 @@ def run(quick: bool = False):
         out.block_until_ready()
         us = (time.perf_counter() - t0) / 20 * 1e6
 
-        # kernel parity (interpret mode)
-        kout = ops.paged_gqa_decode(q, kv, sc, cl, opt_kv=co.opt_kv,
-                                    opt_pa=co.opt_pa, opt_gqa=co.opt_gqa)
+        # kernel parity (interpret mode): Eq. 9 filtering arrives as -1
+        # entries in the physical table when opt_pa is on
+        if co.opt_pa:
+            beyond = log * ps >= cl[:, None]
+            kphys = jnp.where(beyond, -1, phys)
+        else:
+            kphys = phys
+        kout = ops.paged_pool_decode(q, kv, sc, cl, kphys, log,
+                                     opt_kv=co.opt_kv, opt_gqa=co.opt_gqa)
         ksl = sc[0] if sc is not None else None
         vsl = sc[1] if sc is not None else None
-        expected = ref.paged_gqa_decode_ref(q, kv[0], kv[1], ksl, vsl, cl,
-                                            opt_kv=co.opt_kv)
+        expected = ref.paged_pool_decode_ref(q, kv[0], kv[1], ksl, vsl, cl,
+                                             phys, log, opt_kv=co.opt_kv)
         err = float(np.abs(np.asarray(kout, np.float32) -
                            np.asarray(expected, np.float32)).max())
 

@@ -1,20 +1,39 @@
-"""vLLM-style paged KV block manager (host-side, pure Python).
+"""Global refcounted paged-KV pool with prefix caching (host-side, pure
+Python).
 
-XLA wants static shapes, so the device cache is a preallocated paged pool
-(``repro.core.opt_kv.make_layer_cache`` / model ``init_cache``) and all
-dynamic paging happens here as *indices*: each sequence owns a list of
-physical pages; token slot = page_table[pos // ps] * ps + pos % ps.
+XLA wants static shapes, so the device cache is ONE preallocated paged pool
+shared by every sequence (``repro.core.opt_kv.make_layer_cache`` / model
+``init_cache`` — leaves shaped ``(2, P_total, ps, Hkv, D)`` with no batch
+dimension) and all dynamic paging happens here as *indices*: each sequence
+owns a logical-ordered list of physical pages; token slot =
+page_table[pos // ps] * ps + pos % ps, now a *global* flat slot.
 
-This is the layer where the paper's §2 "allocator mismatch" bottleneck lives —
-and where Opt-KV's SkipSet (Eq. 5) is decided: the manager emits slot indices
-of -1 for tokens the policy says never to cache (padding, duplicates,
-out-of-window when running the block-sparse long-context policy), so the
-device-side scatter drops them without touching memory.
+Design (paper §2 "allocator mismatch" + Opt-KV Eq. 5):
+
+* **Refcounts** — a physical page may back several sequences (shared prompt
+  prefix). Writers only ever touch pages they exclusively own: the trailing
+  partial page of a prompt and decode-appended pages are always fresh, so
+  sharing is copy-on-write by construction (a shared page is never written).
+* **Prefix caching** — full pages of a prompt are registered under a chain
+  hash ``h_i = H(h_{i-1}, tokens_of_page_i)`` once their KV has actually been
+  computed (``commit_prefill``). ``allocate`` walks the chain and reuses every
+  leading full-page hit, so a request sharing a >= 1-page prefix allocates
+  fewer fresh pages and skips recomputing those tokens. At least one prompt
+  token is always left uncached so prefill still emits last-token logits.
+* **LRU eviction** — when the last reference to a registered page drops, the
+  page parks in a cached-but-unreferenced LRU list instead of the free list;
+  allocation pressure evicts from its cold end (hash entry removed, page
+  recycled). ``OutOfBlocks`` is raised only when free + evictable both run
+  dry — the scheduler reacts by preempting the youngest running request.
+* **SkipSet** — the manager emits slot indices of -1 for tokens the policy
+  says never to cache (padding, prefix-cache hits, out-of-window tokens), so
+  the device-side scatter drops them without touching memory (Eq. 5).
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -27,60 +46,194 @@ class OutOfBlocks(RuntimeError):
 class SeqBlocks:
     pages: List[int] = field(default_factory=list)
     num_tokens: int = 0
+    cached_tokens: int = 0        # leading tokens served by the prefix cache
+    committed_pages: int = 0      # full pages registered in the hash table
+
+
+def _chain_hash(prev: int, toks: Sequence[int]) -> int:
+    return hash((prev, tuple(int(t) for t in toks)))
 
 
 class BlockManager:
-    """Free-list allocator over a pool of ``num_pages`` physical pages."""
+    """Refcounted free-list allocator over ONE pool of ``num_pages`` pages."""
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int,
+                 enable_prefix_cache: bool = True):
         self.num_pages = num_pages
         self.page_size = page_size
+        self.enable_prefix_cache = enable_prefix_cache
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         self._seqs: Dict[int, SeqBlocks] = {}
+        self._ref: Dict[int, int] = {}                 # page -> refcount
+        self._hash_to_page: Dict[int, int] = {}
+        self._page_to_hash: Dict[int, int] = {}
+        self._lru: "OrderedDict[int, None]" = OrderedDict()  # cached, ref==0
+        # ------------------------------------------------------------ stats --
+        self.prefix_queries = 0       # full prompt pages looked up
+        self.prefix_hits = 0          # full prompt pages served from cache
+        self.evictions = 0
+        self.fresh_pages_allocated = 0  # pages handed out (not prefix hits)
 
-    # ------------------------------------------------------------- alloc --
+    # ------------------------------------------------------------- queries --
     @property
     def free_pages(self) -> int:
         return len(self._free)
 
+    @property
+    def evictable_pages(self) -> int:
+        return len(self._lru)
+
+    @property
+    def pages_in_use(self) -> int:
+        """Pages referenced by at least one live sequence."""
+        return self.num_pages - len(self._free) - len(self._lru)
+
+    def utilization(self) -> float:
+        return self.pages_in_use / self.num_pages if self.num_pages else 0.0
+
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hits / self.prefix_queries \
+            if self.prefix_queries else 0.0
+
     def can_allocate(self, num_tokens: int) -> bool:
         need = (num_tokens + self.page_size - 1) // self.page_size
-        return need <= self.free_pages
+        return need <= self.free_pages + self.evictable_pages
 
-    def allocate(self, seq_id: int, num_tokens: int) -> List[int]:
-        """Allocate pages for a new sequence of ``num_tokens`` prompt tokens."""
+    def num_tokens(self, seq_id: int) -> int:
+        return self._seqs[seq_id].num_tokens
+
+    def cached_tokens(self, seq_id: int) -> int:
+        return self._seqs[seq_id].cached_tokens
+
+    # -------------------------------------------------------------- alloc --
+    def _evict_one(self) -> None:
+        page, _ = self._lru.popitem(last=False)        # cold end
+        h = self._page_to_hash.pop(page)
+        if self._hash_to_page.get(h) == page:
+            del self._hash_to_page[h]
+        self._free.append(page)
+        self.evictions += 1
+
+    def _take_free(self) -> int:
+        if not self._free:
+            if not self._lru:
+                raise OutOfBlocks("pool exhausted (free + cached empty)")
+            self._evict_one()
+        self.fresh_pages_allocated += 1
+        return self._free.pop()
+
+    def _match_prefix(self, token_ids: Optional[Sequence[int]],
+                      num_tokens: int) -> Tuple[List[int], int]:
+        """Leading full-page cache hits for this prompt. Returns
+        (hit pages, matched token count). Never matches the ENTIRE prompt —
+        at least one token is recomputed so prefill emits logits."""
+        if not self.enable_prefix_cache or token_ids is None:
+            return [], 0
+        max_match = (num_tokens - 1) // self.page_size   # full pages, < all
+        hits: List[int] = []
+        h = 0
+        for i in range(max_match):
+            lo = i * self.page_size
+            h = _chain_hash(h, token_ids[lo:lo + self.page_size])
+            self.prefix_queries += 1
+            page = self._hash_to_page.get(h)
+            if page is None:
+                break
+            hits.append(page)
+            self.prefix_hits += 1
+        return hits, len(hits) * self.page_size
+
+    def allocate(self, seq_id: int, num_tokens: int,
+                 token_ids: Optional[Sequence[int]] = None) -> Tuple[List[int], int]:
+        """Allocate pages for a new sequence of ``num_tokens`` prompt tokens.
+
+        ``token_ids`` (when given) enables prefix caching: leading full pages
+        whose chain hash is registered are reused (refcount bumped, zero fresh
+        pages, zero recompute). Returns (pages, cached_token_count).
+        """
         assert seq_id not in self._seqs
         need = (num_tokens + self.page_size - 1) // self.page_size
-        if need > self.free_pages:
-            raise OutOfBlocks(f"need {need} pages, {self.free_pages} free")
-        pages = [self._free.pop() for _ in range(need)]
-        self._seqs[seq_id] = SeqBlocks(pages, num_tokens)
-        return pages
+        hits, cached = self._match_prefix(token_ids, num_tokens)
+        for p in hits:                                  # commit the reuse
+            self._ref[p] = self._ref.get(p, 0) + 1      # may come off the LRU
+            self._lru.pop(p, None)
+        fresh_need = need - len(hits)
+        # capacity check AFTER pinning the hits — a hit sitting in the LRU
+        # must not be double-counted as evictable capacity
+        if fresh_need > self.free_pages + self.evictable_pages:
+            for p in reversed(hits):                    # unwind the pins
+                self._ref[p] -= 1
+                if self._ref[p] == 0:
+                    del self._ref[p]
+                    self._lru[p] = None                 # back to the cache
+            raise OutOfBlocks(
+                f"need {fresh_need} fresh pages, "
+                f"{self.free_pages}+{self.evictable_pages} free+cached")
+        pages = list(hits)
+        for _ in range(fresh_need):
+            p = self._take_free()
+            self._ref[p] = 1
+            pages.append(p)
+        self._seqs[seq_id] = SeqBlocks(pages, num_tokens, cached,
+                                       committed_pages=len(hits))
+        return pages, cached
+
+    def commit_prefill(self, seq_id: int, computed_tokens: int,
+                       token_ids: Optional[Sequence[int]] = None) -> None:
+        """Register full prompt pages whose KV is now actually written, so
+        later arrivals can prefix-hit them. Idempotent per page."""
+        if not self.enable_prefix_cache or token_ids is None:
+            return
+        sb = self._seqs[seq_id]
+        full = computed_tokens // self.page_size
+        if full <= sb.committed_pages:
+            return
+        h = 0
+        for i in range(full):
+            lo = i * self.page_size
+            h = _chain_hash(h, token_ids[lo:lo + self.page_size])
+            if i < sb.committed_pages:
+                continue                                # already registered
+            page = sb.pages[i]
+            if h not in self._hash_to_page and page not in self._page_to_hash:
+                self._hash_to_page[h] = page
+                self._page_to_hash[page] = h
+        sb.committed_pages = full
 
     def append_token(self, seq_id: int) -> int:
         """Account one generated token; grows the page list on boundary.
-        Returns the token's flat slot index."""
+        Returns the token's global flat slot index."""
         sb = self._seqs[seq_id]
         pos = sb.num_tokens
         if pos // self.page_size >= len(sb.pages):
-            if not self._free:
-                raise OutOfBlocks("decode append: pool exhausted")
-            sb.pages.append(self._free.pop())
+            p = self._take_free()                       # may evict; may raise
+            self._ref[p] = 1
+            sb.pages.append(p)
         sb.num_tokens += 1
         return sb.pages[pos // self.page_size] * self.page_size + \
             pos % self.page_size
 
     def free(self, seq_id: int) -> None:
+        """Drop the sequence's references. Registered pages whose refcount
+        hits zero park in the LRU prefix cache; others return to the free
+        list. Used both for FINISHED requests and for preemption."""
         sb = self._seqs.pop(seq_id, None)
-        if sb:
-            self._free.extend(reversed(sb.pages))
+        if not sb:
+            return
+        for p in reversed(sb.pages):
+            self._ref[p] -= 1
+            if self._ref[p] > 0:
+                continue
+            del self._ref[p]
+            if p in self._page_to_hash:
+                self._lru[p] = None                     # cached, evictable
+            else:
+                self._free.append(p)
 
-    # ------------------------------------------------------------ queries --
-    def num_tokens(self, seq_id: int) -> int:
-        return self._seqs[seq_id].num_tokens
-
+    # ------------------------------------------------------------ mapping --
     def page_table(self, seq_id: int, width: Optional[int] = None) -> np.ndarray:
-        """Physical page ids, padded with -1 to ``width`` (gather sentinel)."""
+        """Physical page ids in logical order, padded with -1 to ``width``
+        (gather sentinel)."""
         pages = self._seqs[seq_id].pages
         width = width or len(pages)
         out = np.full(width, -1, np.int32)
@@ -89,8 +242,8 @@ class BlockManager:
 
     def slot_indices(self, seq_id: int, positions: np.ndarray,
                      skip: Optional[np.ndarray] = None) -> np.ndarray:
-        """Map logical positions -> physical flat slots. ``skip`` marks the
-        Opt-KV SkipSet (Eq. 5): those slots come back -1."""
+        """Map logical positions -> global physical flat slots. ``skip``
+        marks the Opt-KV SkipSet (Eq. 5): those slots come back -1."""
         sb = self._seqs[seq_id]
         pages = np.asarray(sb.pages, np.int32)
         page_of = positions // self.page_size
@@ -101,7 +254,9 @@ class BlockManager:
         return slots
 
     def fragmentation(self) -> float:
-        """Fraction of allocated slots that hold no token (paper Fig. 3)."""
-        alloc = sum(len(s.pages) for s in self._seqs.values()) * self.page_size
+        """Fraction of referenced slots that hold no token (paper Fig. 3).
+        Shared pages are counted once — the pooled allocator's whole point."""
+        live = {p for s in self._seqs.values() for p in s.pages}
+        alloc = len(live) * self.page_size
         used = sum(s.num_tokens for s in self._seqs.values())
-        return 1.0 - used / alloc if alloc else 0.0
+        return max(1.0 - used / alloc, 0.0) if alloc else 0.0

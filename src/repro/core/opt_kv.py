@@ -2,8 +2,8 @@
 
 Write phase (Eq. 5): a token's K/V are cached only if its slot index is valid:
 ``slot_idx_i < 0 or slot_idx_i in SkipSet`` => skip. We realise the SkipSet as
-slots pre-marked -1 by the caller (engine policy: padding tokens, duplicate
-tokens, evicted/out-of-window tokens), so the write itself is a single scatter
+slots pre-marked -1 by the caller (engine policy: padding tokens, prefix-cache
+hits, evicted/out-of-window tokens), so the write itself is a single scatter
 with ``mode='drop'`` — negative indices never touch memory, exactly the
 paper's "skip caching of K_i, V_i".
 
@@ -12,7 +12,20 @@ Read phase (Eq. 6): cached K/V are FP8 and dequantized on the fly
 the attention loop; this module is the numerically-identical jnp reference
 used by tests and by the distributed (GSPMD) path.
 
-Cache layout (one layer): kv (2, B, P, ps, Hkv, D) + scale (2, B, P, ps, Hkv).
+Cache layout (one layer) — GLOBAL POOL, no batch dimension:
+    kv (2, P_total, ps, Hkv, D) + scale (2, P_total, ps, Hkv).
+All sequences share the pool; the host-side ``BlockManager`` hands each
+sequence a disjoint set of pages (refcounted, prefix-cache shareable) and the
+per-step batch carries *global* flat slot indices and per-lane page tables.
+Writes only ever target exclusively-owned pages (copy-on-write by
+construction), so lane isolation needs no device-side masking.
+
+Direct (non-engine) callers get a static lane-identity layout: pool =
+``batch * pages(max_len)`` pages, lane b owning the contiguous range
+``[b * P_lane, (b+1) * P_lane)`` — see ``identity_page_table`` /
+``identity_slots``. When the Pallas write kernel is used, the pool's very
+last cache line doubles as the SkipSet sentinel; the engine's BlockManager
+never allocates the final page, so skipped tokens land in reserved space.
 """
 from __future__ import annotations
 
@@ -23,43 +36,65 @@ from repro.cache.quant import dequantize_fp8, quantize_fp8
 from repro.core.coopt import CoOptConfig
 
 
-def make_layer_cache(batch: int, num_pages: int, page_size: int, num_kv_heads: int,
+def make_layer_cache(num_pages: int, page_size: int, num_kv_heads: int,
                      head_dim: int, coopt: CoOptConfig):
-    """Zero-initialised single-layer paged cache (kv, scale|None)."""
-    kv = jnp.zeros((2, batch, num_pages, page_size, num_kv_heads, head_dim),
+    """Zero-initialised single-layer GLOBAL paged cache (kv, scale|None)."""
+    kv = jnp.zeros((2, num_pages, page_size, num_kv_heads, head_dim),
                    coopt.kv_dtype)
-    scale = (jnp.zeros((2, batch, num_pages, page_size, num_kv_heads), jnp.float32)
+    scale = (jnp.zeros((2, num_pages, page_size, num_kv_heads), jnp.float32)
              if coopt.opt_kv else None)
     return kv, scale
 
 
-def write_kv(kv_cache, scale_cache, k_new, v_new, slot_idx, coopt: CoOptConfig):
-    """Write new tokens' K/V into the paged cache.
+# ------------------------------------------------------- identity layout --
+def pages_per_lane(total_pages: int, batch: int) -> int:
+    return max(total_pages // batch, 1)
 
-    k_new/v_new: (B, S, Hkv, D); slot_idx: (B, S) int32 — flat slot
-    (= page * page_size + offset) in this sequence's pool; -1/SkipSet => skip.
-    Returns updated (kv_cache, scale_cache).
+
+def identity_page_table(batch: int, total_pages: int) -> jax.Array:
+    """Static lane-partitioned page table (B, P_lane): lane b owns the
+    contiguous page range [b*P_lane, (b+1)*P_lane). Default for direct
+    (non-engine) callers of prefill/decode_step."""
+    P_lane = pages_per_lane(total_pages, batch)
+    return (jnp.arange(batch, dtype=jnp.int32)[:, None] * P_lane
+            + jnp.arange(P_lane, dtype=jnp.int32)[None, :])
+
+
+def identity_slots(batch: int, positions, total_pages: int,
+                   page_size: int) -> jax.Array:
+    """Logical positions (B, S) -> global flat slots under the lane-identity
+    layout (slot == lane_offset + position)."""
+    P_lane = pages_per_lane(total_pages, batch)
+    off = jnp.arange(batch, dtype=jnp.int32)[:, None] * (P_lane * page_size)
+    return (positions.astype(jnp.int32) + off)
+
+
+def write_kv(kv_cache, scale_cache, k_new, v_new, slot_idx, coopt: CoOptConfig):
+    """Write new tokens' K/V into the global paged cache.
+
+    kv_cache: (2, P, ps, Hkv, D); k_new/v_new: (B, S, Hkv, D);
+    slot_idx: (B, S) int32 — GLOBAL flat slot (= page * page_size + offset)
+    in the shared pool; -1/SkipSet => skip. Returns updated
+    (kv_cache, scale_cache).
     """
-    _, B, P, ps, H, D = kv_cache.shape
+    _, P, ps, H, D = kv_cache.shape
     if coopt.use_kernel:
         from repro.kernels import ops
         return ops.kv_cache_write(kv_cache, scale_cache, k_new, v_new,
                                   slot_idx, opt_kv=coopt.opt_kv)
-    flat = kv_cache.reshape(2, B, P * ps, H, D)
+    flat = kv_cache.reshape(2, P * ps, H, D)
     new = jnp.stack([k_new, v_new])                      # (2,B,S,H,D)
     clipped = jnp.where(slot_idx < 0, -1, slot_idx)      # keep skip sentinel
 
     if coopt.opt_kv:
         q, s = quantize_fp8(new, axis=-1)                # (2,B,S,H,D),(2,B,S,H)
-        flat = flat.at[:, jnp.arange(B)[:, None], clipped].set(
-            q.astype(flat.dtype), mode="drop")
-        sflat = scale_cache.reshape(2, B, P * ps, H)
-        sflat = sflat.at[:, jnp.arange(B)[:, None], clipped].set(s, mode="drop")
-        scale_cache = sflat.reshape(2, B, P, ps, H)
+        flat = flat.at[:, clipped].set(q.astype(flat.dtype), mode="drop")
+        sflat = scale_cache.reshape(2, P * ps, H)
+        sflat = sflat.at[:, clipped].set(s, mode="drop")
+        scale_cache = sflat.reshape(2, P, ps, H)
     else:
-        flat = flat.at[:, jnp.arange(B)[:, None], clipped].set(
-            new.astype(flat.dtype), mode="drop")
-    return flat.reshape(2, B, P, ps, H, D), scale_cache
+        flat = flat.at[:, clipped].set(new.astype(flat.dtype), mode="drop")
+    return flat.reshape(2, P, ps, H, D), scale_cache
 
 
 def dequant_pages(kv_pages, scale_pages, coopt: CoOptConfig, dtype=jnp.bfloat16):
@@ -73,21 +108,22 @@ def gather_cached_kv(kv_cache, scale_cache, page_table, coopt: CoOptConfig,
                      dtype=jnp.bfloat16):
     """Reference of the paper's dedicated ``gather_cached_kv`` kernel.
 
-    page_table: (B, Psel) int32 physical page ids (negative => zero page).
-    Returns (2, B, Psel*ps, Hkv, D) dequantized.
+    kv_cache: (2, P, ps, Hkv, D) global pool; page_table: (B, Psel) int32
+    physical page ids in logical order (negative => zero page). Returns
+    (2, B, Psel*ps, Hkv, D) dequantized — token j of the output is the lane's
+    logical position j, so downstream masks index by position directly.
     """
-    _, B, P, ps, H, D = kv_cache.shape
+    _, P, ps, H, D = kv_cache.shape
+    B, Psel = page_table.shape
     pt = jnp.maximum(page_table, 0)
-    gathered = jnp.take_along_axis(
-        kv_cache, pt[None, :, :, None, None, None], axis=2)  # (2,B,Psel,ps,H,D)
+    gathered = jnp.take(kv_cache, pt, axis=1)            # (2,B,Psel,ps,H,D)
     if coopt.opt_kv:
-        sg = jnp.take_along_axis(scale_cache, pt[None, :, :, None, None], axis=2)
+        sg = jnp.take(scale_cache, pt, axis=1)
         out = dequantize_fp8(gathered, sg, axis=-1, dtype=dtype)
     else:
         out = gathered.astype(dtype)
     valid = (page_table >= 0)[None, :, :, None, None, None]
     out = jnp.where(valid, out, 0)
-    Psel = page_table.shape[1]
     return out.reshape(2, B, Psel * ps, H, D)
 
 
@@ -95,9 +131,12 @@ def window_page_table(cache_len, num_pages: int, page_size: int,
                       window: int, sink_pages: int):
     """Opt-KV SkipSet as block sparsity (DESIGN.md §5 long-context policy).
 
-    Selects sink pages [0, sink) plus the trailing ``ceil(window/ps)+1`` pages
-    covering the sliding window, for a scalar/array ``cache_len`` (inclusive
-    count of tokens already cached). Returns (B, Psel) page ids, -1 = skipped.
+    Operates in the LOGICAL page domain of one sequence: selects sink pages
+    [0, sink) plus the trailing ``ceil(window/ps)+1`` pages covering the
+    sliding window, for a scalar/array ``cache_len`` (inclusive count of
+    tokens already cached). Returns (B, Psel) logical page ids, -1 = skipped;
+    callers translate to physical pages via the per-lane page table
+    (``jnp.take_along_axis(page_table, ...)``).
     """
     wpages = window // page_size + 1
     # page holding the most recent token (cache_len is an inclusive count)
@@ -110,3 +149,11 @@ def window_page_table(cache_len, num_pages: int, page_size: int,
     sink = jnp.where(sink < jnp.minimum(start, sink_pages)[:, None], sink, -1)
     table = jnp.concatenate([sink, win], axis=1).astype(jnp.int32)
     return jnp.minimum(table, num_pages - 1)
+
+
+def logical_to_physical(logical_table, page_table):
+    """Map a (B, NSel) LOGICAL page selection (-1 = skipped) through the
+    per-lane (B, P_lane) physical page table, preserving -1 sentinels."""
+    phys = jnp.take_along_axis(page_table,
+                               jnp.maximum(logical_table, 0), axis=1)
+    return jnp.where(logical_table < 0, -1, phys).astype(jnp.int32)

@@ -1,20 +1,27 @@
 """Opt-Pa — paged attention for long sequences (paper §3.3, Alg. 3).
 
-Decode-phase attention of ONE query token against a paged KV cache.
+Decode-phase attention of ONE query token per lane against the GLOBAL paged
+KV pool: ``kv_pages (2, P_total, ps, Hkv, D)`` shared by every lane, with a
+per-lane ``page_table (B, P_lane)`` naming the lane's physical pages in
+logical order (-1 = unallocated). Lanes never alias pages they can write
+(refcounted pool, CoW prefix sharing), so the gather is race-free.
 
 Two-stage strategy, mapped to TPU (DESIGN.md §3):
-  Phase 1 — *valid-block filtering* (Eq. 9): only pages b in [0, ceil(t/B))
-  participate. In this jnp reference that is masking + (for the sliding-window
-  policy) an actual gather of the selected pages; in the Pallas kernel the
-  invalid pages are skipped inside the grid.
+  Phase 1 — *valid-block filtering* (Eq. 9): only logical pages b in
+  [0, ceil(t/B)) participate; unallocated (-1) table entries never load. In
+  this jnp reference that is a gather of the lane's pages + masking; in the
+  Pallas kernel (``paged_pool_decode``) the page table is scalar-prefetched
+  and dereferenced inside the BlockSpec index_map, so skipped pages are never
+  DMA'd — the paper's "lazy memory mapping" as data-dependent prefetch.
   Phase 2 — *block-wise softmax with shared-memory reduction* (Eq. 10): an
   online-softmax accumulation over page groups. The DCU's ``block_sum``
   shared-memory reduction becomes a VMEM-resident running (max, sum, acc).
 
 The "Original" baseline (`coopt.opt_pa == False`) reproduces unmodified vLLM
-semantics on this platform: ALL allocated pages are uniformly loaded and a
-flat softmax is taken over the whole (padded) history — "all KVs being loaded
-into memory regardless of whether they are actually useful" (paper §2).
+semantics on this platform: every page in the lane's table is uniformly
+loaded and a flat softmax is taken over the whole (padded) history — "all KVs
+being loaded into memory regardless of whether they are actually useful"
+(paper §2).
 
 Opt-KV (fp8 dequant on read) and Opt-GQA (grouped queries) compose here;
 ``LLM-CoOpt`` = all three, which is what the fused kernel implements.
@@ -28,7 +35,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.coopt import CoOptConfig
-from repro.core.opt_kv import dequant_pages, gather_cached_kv, window_page_table
+from repro.core.opt_kv import (dequant_pages, gather_cached_kv,
+                               identity_page_table, logical_to_physical,
+                               window_page_table)
 from repro.models.layers import repeat_kv, shard_act
 
 _NEG = -1e30
@@ -73,43 +82,58 @@ def paged_decode_attention(q, kv_pages, scale_pages, cache_len, *,
                            coopt: CoOptConfig, window: int = 0,
                            sink_pages: int = 1,
                            page_table: Optional[jax.Array] = None) -> jax.Array:
-    """q: (B, Hq, D); kv_pages: (2, B, P, ps, Hkv, D); cache_len: (B,) tokens
-    valid in the cache (the current token must already be written).
+    """q: (B, Hq, D); kv_pages: (2, P_total, ps, Hkv, D) global pool;
+    cache_len: (B,) tokens valid per lane (the current token must already be
+    written); page_table: (B, P_lane) physical pages in logical order
+    (default: static lane-identity partition of the pool).
     Returns (B, Hq, D) in q.dtype.
     """
     B, Hq, D = q.shape
-    _, _, P, ps, Hkv, _ = kv_pages.shape
+    _, P_total, ps, Hkv, _ = kv_pages.shape
+    if page_table is None:
+        page_table = identity_page_table(B, P_total)
 
     if window:
-        # Block-sparse policy: Opt-KV SkipSet = outside {sinks + window}.
-        table = window_page_table(cache_len, P, ps, window, sink_pages)
+        # Block-sparse policy: Opt-KV SkipSet = outside {sinks + window},
+        # decided in the logical page domain then mapped to physical pages.
+        logical = window_page_table(cache_len, page_table.shape[1], ps,
+                                    window, sink_pages)
+        phys = logical_to_physical(logical, page_table)
         if coopt.use_kernel:
             from repro.kernels import ops
-            return ops.paged_gqa_decode_window(
-                q, kv_pages, scale_pages, cache_len, table,
-                opt_kv=coopt.opt_kv, window=window, sink_pages=sink_pages)
-        return _windowed(q, kv_pages, scale_pages, cache_len, table,
+            return ops.paged_pool_decode(
+                q, kv_pages, scale_pages, cache_len, phys, logical,
+                opt_kv=coopt.opt_kv, opt_gqa=True,
+                window=window, sink_pages=sink_pages)
+        return _windowed(q, kv_pages, scale_pages, cache_len, phys, logical,
                          window, sink_pages, coopt)
 
-    if coopt.use_kernel and page_table is None:
+    if coopt.use_kernel:
         from repro.kernels import ops
-        return ops.paged_gqa_decode(
-            q, kv_pages, scale_pages, cache_len, opt_kv=coopt.opt_kv,
-            opt_pa=coopt.opt_pa, opt_gqa=coopt.opt_gqa,
-            page_group=coopt.page_group)
+        logical = jnp.broadcast_to(
+            jnp.arange(page_table.shape[1], dtype=jnp.int32)[None],
+            page_table.shape)
+        if coopt.opt_pa:
+            # Eq. 9 valid-block filtering, host-free: mask table entries
+            # wholly beyond the live context so the kernel never DMAs them.
+            beyond = logical * ps >= cache_len[:, None]
+            phys = jnp.where(beyond, -1, page_table)
+        else:
+            phys = page_table
+        return ops.paged_pool_decode(
+            q, kv_pages, scale_pages, cache_len, phys, logical,
+            opt_kv=coopt.opt_kv, opt_gqa=coopt.opt_gqa, window=0,
+            sink_pages=0)
 
-    if page_table is not None:
-        flat = gather_cached_kv(kv_pages, scale_pages, page_table, coopt)
-        kv_pages = flat.reshape(2, B, page_table.shape[1], ps, Hkv, D)
-        scale_pages = None
-        coopt = coopt.replace(opt_kv=False)  # already dequantized
-        valid = jnp.repeat(page_table >= 0, ps, axis=1)  # (B, Psel*ps)
-    else:
-        valid = None
-
+    # jnp reference: gather the lane's pages (logical order) then reduce.
+    flat = gather_cached_kv(kv_pages, scale_pages, page_table, coopt)
+    Psel = page_table.shape[1]
+    kv_lane = flat.reshape(2, B, Psel, ps, Hkv, D)
+    valid = jnp.repeat(page_table >= 0, ps, axis=1)       # (B, Psel*ps)
+    coopt = coopt.replace(opt_kv=False)                   # already dequantized
     if coopt.opt_pa:
-        return _blockwise(q, kv_pages, scale_pages, cache_len, coopt, valid)
-    return _flat(q, kv_pages, scale_pages, cache_len, coopt, valid)
+        return _blockwise(q, kv_lane, None, cache_len, coopt, valid)
+    return _flat(q, kv_lane, None, cache_len, coopt, valid)
 
 
 # --------------------------------------------------------------- Original --
@@ -173,18 +197,20 @@ def _blockwise(q, kv_pages, scale_pages, cache_len, coopt, valid):
 
 
 # ------------------------------------------------ window/sink block-sparse --
-def _windowed(q, kv_pages, scale_pages, cache_len, table, window, sink_pages,
-              coopt):
+def _windowed(q, kv_pages, scale_pages, cache_len, phys_table, logical_table,
+              window, sink_pages, coopt):
     B, Hq, D = q.shape
-    _, _, P, ps, Hkv, _ = kv_pages.shape
-    flat = gather_cached_kv(kv_pages, scale_pages, table, coopt)  # (2,B,Ts,H,D)
-    k, v = flat
-    pos = jnp.maximum(table, 0)[:, :, None] * ps + jnp.arange(ps)[None, None, :]
-    pos = pos.reshape(B, -1)                                      # (B, Ts)
+    _, P, ps, Hkv, _ = kv_pages.shape
+    flat = gather_cached_kv(kv_pages, scale_pages, phys_table, coopt)
+    k, v = flat                                              # (B,Ts,H,D)
+    pos = jnp.maximum(logical_table, 0)[:, :, None] * ps + \
+        jnp.arange(ps)[None, None, :]
+    pos = pos.reshape(B, -1)                                 # (B, Ts)
     in_ctx = pos < cache_len[:, None]
     in_win = pos >= jnp.maximum(cache_len[:, None] - window, 0)
     in_sink = pos < sink_pages * ps
-    mask = in_ctx & (in_win | in_sink) & (table >= 0).repeat(ps, axis=1)
+    mask = in_ctx & (in_win | in_sink) & \
+        (phys_table >= 0).repeat(ps, axis=1)
     s = _scores(q, k, coopt.opt_gqa)
     s = jnp.where(mask[:, None, :], s, _NEG)
     m = jnp.max(s, axis=-1, keepdims=True)

@@ -1,0 +1,6 @@
+"""jax version compatibility for Pallas TPU kernels."""
+from jax.experimental.pallas import tpu as pltpu
+
+# jax 0.4.x names this TPUCompilerParams; newer releases CompilerParams.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")

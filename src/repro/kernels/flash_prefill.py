@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 _NEG = -1e30
 
 
@@ -122,7 +124,7 @@ def flash_prefill(q, k, v, *, window: int = 0, block_q: int = 256,
             pltpu.VMEM((bq, D), jnp.float32),
         ],
         out_shape=jax.ShapeDtypeStruct((B, Hkv, R, D), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

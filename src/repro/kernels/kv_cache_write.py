@@ -1,16 +1,25 @@
-"""Opt-KV write-path Pallas kernel (paper §3.1 Alg. 1 Phase 1 + Eq. 5).
+"""Opt-KV write-path Pallas kernel (paper §3.1 Alg. 1 Phase 1 + Eq. 5),
+scattering into the GLOBAL paged-KV pool.
 
-Scatters new tokens' K/V into the paged cache with (a) SkipSet filtering —
-tokens whose slot is negative are routed to a sentinel page and never touch
-live cache lines ("skip caching of K_i, V_i"), and (b) fused FP8 e4m3
-quantization: amax-per-(token, head) scale computed in VREGs, quantized tile
-written in the same pass, so the unquantized K/V never round-trip to HBM.
+Scatters new tokens' K/V into the shared pool with (a) SkipSet filtering —
+tokens whose slot is negative are routed to a sentinel cache line and never
+touch live pages ("skip caching of K_i, V_i"; padding, prefix-cache hits),
+and (b) fused FP8 e4m3 quantization: amax-per-(token, head) scale computed in
+VREGs, quantized tile written in the same pass, so the unquantized K/V never
+round-trip to HBM.
 
-Mechanics: the flat slot index is scalar-prefetched and dereferenced inside
-the output BlockSpec index_map — the block written by grid step (b, s) IS the
-cache line of token s (or the sentinel line for SkipSet tokens). The cache is
-passed aliased (donated), so unwritten lines keep their contents — this is the
-TPU analogue of an in-place scatter with ``mode='drop'``.
+Mechanics: the GLOBAL flat slot index (B, S) is scalar-prefetched and
+dereferenced inside the output BlockSpec index_map — the line written by grid
+step (b, s) IS the cache line of lane b's token s (or the sentinel line for
+SkipSet tokens). Because the refcounted BlockManager hands lanes disjoint
+writable pages (shared prefix pages are read-only by construction), lanes
+never race on a line. The cache is passed aliased (donated), so unwritten
+lines keep their contents — this is the TPU analogue of an in-place scatter
+with ``mode='drop'``.
+
+Sentinel convention: the pool's very last cache line (flat slot NSlot-1) is
+reserved — the engine's BlockManager never allocates the final page, so the
+line only ever absorbs skipped tokens.
 """
 from __future__ import annotations
 
@@ -36,33 +45,33 @@ def _write_kernel(slot_ref, k_ref, v_ref,
         v_amax = jnp.max(jnp.abs(v), axis=-1, keepdims=True)
         k_s = jnp.maximum(k_amax, 1e-12) / FP8_MAX
         v_s = jnp.maximum(v_amax, 1e-12) / FP8_MAX
-        kc_ref[0, 0] = (k / k_s).astype(kc_ref.dtype)
-        vc_ref[0, 0] = (v / v_s).astype(vc_ref.dtype)
-        ks_ref[0, 0] = k_s[:, 0]
-        vs_ref[0, 0] = v_s[:, 0]
+        kc_ref[0] = (k / k_s).astype(kc_ref.dtype)
+        vc_ref[0] = (v / v_s).astype(vc_ref.dtype)
+        ks_ref[0] = k_s[:, 0]
+        vs_ref[0] = v_s[:, 0]
     else:
-        kc_ref[0, 0] = k.astype(kc_ref.dtype)
-        vc_ref[0, 0] = v.astype(vc_ref.dtype)
-        ks_ref[0, 0] = jnp.zeros(ks_ref.shape[2:], jnp.float32)
-        vs_ref[0, 0] = jnp.zeros(vs_ref.shape[2:], jnp.float32)
+        kc_ref[0] = k.astype(kc_ref.dtype)
+        vc_ref[0] = v.astype(vc_ref.dtype)
+        ks_ref[0] = jnp.zeros(ks_ref.shape[1:], jnp.float32)
+        vs_ref[0] = jnp.zeros(vs_ref.shape[1:], jnp.float32)
 
 
 def kv_cache_write(k_new, v_new, slot_idx, k_cache, v_cache, k_scale, v_scale,
                    *, opt_kv: bool, interpret: bool = True):
-    """k/v_new: (B, S, Hkv, D); slot_idx: (B, S) int32 (-1 / SkipSet => drop);
-    k/v_cache: (B, NSlot + 1, Hkv, D) flat paged cache WITH one trailing
-    sentinel line; k/v_scale: (B, NSlot + 1, Hkv) f32 (zeros ok if !opt_kv).
-    Returns updated (k_cache, v_cache, k_scale, v_scale)."""
+    """k/v_new: (B, S, Hkv, D); slot_idx: (B, S) int32 GLOBAL flat slots
+    (-1 / SkipSet => drop); k/v_cache: (NSlot, Hkv, D) flat GLOBAL pool whose
+    last line is the reserved sentinel; k/v_scale: (NSlot, Hkv) f32 (zeros ok
+    if !opt_kv). Returns updated (k_cache, v_cache, k_scale, v_scale)."""
     B, S, Hkv, D = k_new.shape
-    NS = k_cache.shape[1]          # includes sentinel line
+    NS = k_cache.shape[0]          # includes the sentinel line
     sentinel = NS - 1
     slots = jnp.where(slot_idx < 0, sentinel, slot_idx).astype(jnp.int32)
 
     def cache_idx(b, s, slot):
-        return (b, slot[b, s], 0, 0)
+        return (slot[b, s], 0, 0)
 
     def scale_idx(b, s, slot):
-        return (b, slot[b, s], 0)
+        return (slot[b, s], 0)
 
     kern = functools.partial(_write_kernel, opt_kv=opt_kv)
     out = pl.pallas_call(
@@ -73,16 +82,16 @@ def kv_cache_write(k_new, v_new, slot_idx, k_cache, v_cache, k_scale, v_scale,
             in_specs=[
                 pl.BlockSpec((1, 1, Hkv, D), lambda b, s, slot: (b, s, 0, 0)),
                 pl.BlockSpec((1, 1, Hkv, D), lambda b, s, slot: (b, s, 0, 0)),
-                pl.BlockSpec((1, 1, Hkv, D), cache_idx),
-                pl.BlockSpec((1, 1, Hkv, D), cache_idx),
-                pl.BlockSpec((1, 1, Hkv), scale_idx),
-                pl.BlockSpec((1, 1, Hkv), scale_idx),
+                pl.BlockSpec((1, Hkv, D), cache_idx),
+                pl.BlockSpec((1, Hkv, D), cache_idx),
+                pl.BlockSpec((1, Hkv), scale_idx),
+                pl.BlockSpec((1, Hkv), scale_idx),
             ],
             out_specs=[
-                pl.BlockSpec((1, 1, Hkv, D), cache_idx),
-                pl.BlockSpec((1, 1, Hkv, D), cache_idx),
-                pl.BlockSpec((1, 1, Hkv), scale_idx),
-                pl.BlockSpec((1, 1, Hkv), scale_idx),
+                pl.BlockSpec((1, Hkv, D), cache_idx),
+                pl.BlockSpec((1, Hkv, D), cache_idx),
+                pl.BlockSpec((1, Hkv), scale_idx),
+                pl.BlockSpec((1, Hkv), scale_idx),
             ],
         ),
         out_shape=[

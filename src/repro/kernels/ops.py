@@ -1,8 +1,13 @@
 """jit'd public wrappers around the Pallas kernels + cache-layout adapters.
 
-The engine-facing cache layout is the models' (2, B, P, ps, Hkv, D) paged
-pool; these wrappers slice it into the kernels' (B, P, ps, Hkv, D) k/v views
+The engine-facing cache layout is the GLOBAL paged pool — per-layer leaves
+``(2, P_total, ps, Hkv, D)`` with NO batch dimension, shared by every lane;
+these wrappers slice it into the kernels' (P_total, ps, Hkv, D) k/v views
 (zero-copy) and plug into ``repro.core`` when ``CoOptConfig.use_kernel``.
+Lanes address the pool through scalar-prefetched page tables (physical page
+to DMA + logical page for positions) dereferenced inside BlockSpec
+index_maps, and the write path scatters to global flat slots (the pool's
+last cache line is the reserved SkipSet sentinel).
 
 On this container the kernels run in interpret mode (CPU); on TPU hardware
 set ``repro.kernels.ops.INTERPRET = False`` (the launcher does this when
@@ -28,54 +33,47 @@ def configure_for_backend() -> None:
 
 
 # ---------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("opt_kv", "opt_pa", "opt_gqa",
-                                   "page_group"))
-def paged_gqa_decode(q, kv_pages, scale_pages, cache_len, *, opt_kv: bool,
-                     opt_pa: bool, opt_gqa: bool, page_group: int = 8):
-    """Fused decode over the engine cache layout.
-    q (B,Hq,D); kv_pages (2,B,P,ps,Hkv,D); scale_pages (2,B,P,ps,Hkv)|None."""
+@partial(jax.jit, static_argnames=("opt_kv", "opt_gqa", "window",
+                                   "sink_pages"))
+def paged_pool_decode(q, kv_pages, scale_pages, cache_len, phys_table,
+                      log_table, *, opt_kv: bool, opt_gqa: bool,
+                      window: int = 0, sink_pages: int = 0):
+    """Fused decode over the global pool. q (B,Hq,D); kv_pages
+    (2,P_total,ps,Hkv,D); scale_pages (2,P_total,ps,Hkv)|None; phys/log_table
+    (B,NSel) int32 (-1 = never DMA'd)."""
     ks = scale_pages[0] if scale_pages is not None else None
     vs = scale_pages[1] if scale_pages is not None else None
-    return _pd.paged_gqa_decode(
+    return _pd.paged_pool_decode(
         q, kv_pages[0], kv_pages[1], ks, vs, cache_len.astype(jnp.int32),
-        opt_kv=opt_kv, opt_pa=opt_pa, opt_gqa=opt_gqa,
-        page_group=page_group, interpret=INTERPRET)
-
-
-@partial(jax.jit, static_argnames=("opt_kv", "window", "sink_pages"))
-def paged_gqa_decode_window(q, kv_pages, scale_pages, cache_len, page_table,
-                            *, opt_kv: bool, window: int, sink_pages: int):
-    ks = scale_pages[0] if scale_pages is not None else None
-    vs = scale_pages[1] if scale_pages is not None else None
-    return _pd.paged_gqa_decode_window(
-        q, kv_pages[0], kv_pages[1], ks, vs, cache_len.astype(jnp.int32),
-        page_table.astype(jnp.int32), opt_kv=opt_kv, window=window,
+        phys_table.astype(jnp.int32), log_table.astype(jnp.int32),
+        opt_kv=opt_kv, opt_gqa=opt_gqa, window=window,
         sink_pages=sink_pages, interpret=INTERPRET)
 
 
 @partial(jax.jit, static_argnames=("opt_kv",))
 def kv_cache_write(kv_cache, scale_cache, k_new, v_new, slot_idx, *,
                    opt_kv: bool):
-    """Engine-layout adapter for the write kernel. kv_cache (2,B,P,ps,Hkv,D)
-    (the pool's LAST line of the last page is reserved as the SkipSet
-    sentinel by the engine); returns updated (kv_cache, scale_cache)."""
-    _, B, P, ps, Hkv, D = kv_cache.shape
-    flat_k = kv_cache[0].reshape(B, P * ps, Hkv, D)
-    flat_v = kv_cache[1].reshape(B, P * ps, Hkv, D)
+    """Engine-layout adapter for the write kernel. kv_cache
+    (2,P_total,ps,Hkv,D) global pool (its LAST flat line is the SkipSet
+    sentinel — the BlockManager never allocates the final page); returns
+    updated (kv_cache, scale_cache)."""
+    _, P, ps, Hkv, D = kv_cache.shape
+    flat_k = kv_cache[0].reshape(P * ps, Hkv, D)
+    flat_v = kv_cache[1].reshape(P * ps, Hkv, D)
     if scale_cache is not None:
-        s_k = scale_cache[0].reshape(B, P * ps, Hkv)
-        s_v = scale_cache[1].reshape(B, P * ps, Hkv)
+        s_k = scale_cache[0].reshape(P * ps, Hkv)
+        s_v = scale_cache[1].reshape(P * ps, Hkv)
     else:
-        s_k = jnp.zeros((B, P * ps, Hkv), jnp.float32)
+        s_k = jnp.zeros((P * ps, Hkv), jnp.float32)
         s_v = s_k
     k_c, v_c, ks_c, vs_c = _kw.kv_cache_write(
         k_new, v_new, slot_idx.astype(jnp.int32), flat_k, flat_v, s_k, s_v,
         opt_kv=opt_kv, interpret=INTERPRET)
-    kv = jnp.stack([k_c.reshape(B, P, ps, Hkv, D),
-                    v_c.reshape(B, P, ps, Hkv, D)])
+    kv = jnp.stack([k_c.reshape(P, ps, Hkv, D),
+                    v_c.reshape(P, ps, Hkv, D)])
     if scale_cache is not None:
-        scale_cache = jnp.stack([ks_c.reshape(B, P, ps, Hkv),
-                                 vs_c.reshape(B, P, ps, Hkv)])
+        scale_cache = jnp.stack([ks_c.reshape(P, ps, Hkv),
+                                 vs_c.reshape(P, ps, Hkv)])
     return kv, scale_cache
 
 

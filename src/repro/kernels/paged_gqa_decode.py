@@ -1,4 +1,5 @@
-"""Fused LLM-CoOpt decode-attention Pallas kernel (the paper's hot path).
+"""Fused LLM-CoOpt decode-attention Pallas kernel (the paper's hot path),
+over the GLOBAL paged-KV pool.
 
 One kernel fuses all three techniques (DESIGN.md §2):
   Opt-KV  — KV pages stored FP8 e4m3 + per-(token, head) scale; dequantized
@@ -7,21 +8,30 @@ One kernel fuses all three techniques (DESIGN.md §2):
             into VMEM ONCE and shared by the G query heads of its group
             (Eq. 7/8). The Original (MHA-semantics) mode re-streams KV per
             query head — the redundancy the paper measures.
-  Opt-Pa  — Phase 1 valid-block filtering (Eq. 9): page groups wholly outside
-            the live context are predicated off with ``pl.when`` (compute +
-            VREG traffic skipped); Phase 2 block-wise softmax (Eq. 10): the
-            DCU ``block_sum`` shared-memory reduction becomes a VMEM-resident
-            running (max, sum, acc) carried across the page-group grid dim.
+  Opt-Pa  — Phase 1 valid-block filtering (Eq. 9): the caller masks page-
+            table entries wholly outside the live context to -1, and the
+            kernel predicates them off with ``pl.when`` (neither DMA'd nor
+            computed); Phase 2 block-wise softmax (Eq. 10): the DCU
+            ``block_sum`` shared-memory reduction becomes a VMEM-resident
+            running (max, sum, acc) carried across the page grid dim.
 
-TPU adaptation notes (DESIGN.md §3): grid = (batch, kv_head, page_group);
-page-group tiles are (pg * page_size, head_dim) — lane dim = head_dim
-(128-aligned for every assigned arch), sublane = tokens. Scratch lives in
-VMEM; (m, l) are kept lane-replicated (G, 128) as on-chip reduction tiles.
+Pool addressing: the cache has NO batch dimension — ``k/v_pages`` are
+``(P_total, ps, Hkv, D)`` shared by every lane. Each lane's *physical* page
+table is scalar-prefetched and dereferenced inside the BlockSpec index_map,
+so the block DMA'd at grid step (b, h, i) IS lane b's i-th logical page —
+the paper's "lazy memory mapping" realised as data-dependent prefetch. A
+parallel *logical* table supplies token positions (logical page id) for the
+causal / sliding-window masks; for dense decode it is simply ``arange``.
 
-The windowed variant (block-sparse long-context policy, DESIGN.md §5) adds a
-scalar-prefetched *page table*: the BlockSpec index_map dereferences it so
-only {sink + sliding-window} pages are ever DMA'd — the paper's "lazy memory
-mapping" realised as data-dependent prefetch.
+TPU adaptation notes (DESIGN.md §3): grid = (batch, kv_head, page); page
+tiles are (page_size, head_dim) — lane dim = head_dim (128-aligned for every
+assigned arch), sublane = tokens. Scratch lives in VMEM; (m, l) are kept
+lane-replicated (G, 128) as on-chip reduction tiles.
+
+The windowed variant (block-sparse long-context policy, DESIGN.md §5) is the
+same kernel with ``window``/``sink_pages`` static parameters: the caller
+passes a {sink + sliding-window} page selection, positions come from the
+logical table, and out-of-policy tokens are masked in-register.
 """
 from __future__ import annotations
 
@@ -35,145 +45,20 @@ from jax.experimental.pallas import tpu as pltpu
 
 _NEG = -1e30
 
-
-# ---------------------------------------------------------------------------
-# dense (full-context) paged decode
-# ---------------------------------------------------------------------------
-def _decode_kernel(len_ref,                      # scalar prefetch (B,)
-                   q_ref, k_ref, v_ref, ks_ref, vs_ref,   # inputs
-                   o_ref,                        # output
-                   m_ref, l_ref, acc_ref,        # VMEM scratch
-                   *, pg: int, ps: int, opt_kv: bool, opt_pa: bool,
-                   num_groups: int):
-    b = pl.program_id(0)
-    g = pl.program_id(2)
-    T = pg * ps
-    G, D = q_ref.shape[2], q_ref.shape[3]
-    length = len_ref[b]
-
-    @pl.when(g == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, _NEG)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    # Opt-Pa Phase 1 (Eq. 9): skip page groups beyond the live context.
-    # Original mode computes every allocated page group ("all KVs loaded
-    # regardless of whether they are actually useful", paper §2).
-    active = (g * T < length) if opt_pa else (g >= 0)
-
-    @pl.when(active)
-    def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)                  # (G, D)
-        k = k_ref[0, :, :, 0, :].reshape(T, D)
-        v = v_ref[0, :, :, 0, :].reshape(T, D)
-        if opt_kv:  # Opt-KV Eq. 6: fused dequant at the VMEM boundary
-            k = k.astype(jnp.float32) * ks_ref[0].reshape(T, 1)
-            v = v.astype(jnp.float32) * vs_ref[0].reshape(T, 1)
-        else:
-            k = k.astype(jnp.float32)
-            v = v.astype(jnp.float32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32)
-        s = s * (1.0 / math.sqrt(D))                         # (G, T)
-        pos = g * T + jax.lax.broadcasted_iota(jnp.int32, (G, T), 1)
-        s = jnp.where(pos < length, s, _NEG)
-
-        # Opt-Pa Phase 2 (Eq. 10): block-wise softmax, VMEM running reduce.
-        m_prev = m_ref[:, 0:1]                               # (G, 1)
-        m_cur = jnp.max(s, axis=-1, keepdims=True)
-        m_new = jnp.maximum(m_prev, m_cur)
-        corr = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new)                               # (G, T)
-        l_new = l_ref[:, 0:1] * corr + jnp.sum(p, -1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
-        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
-
-    @pl.when(g == num_groups - 1)
-    def _finalize():
-        l = l_ref[:, 0:1]
-        o_ref[0, 0] = (acc_ref[...] /
-                       jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+from repro.kernels._compat import CompilerParams as _CompilerParams
 
 
-def paged_gqa_decode(q, k_pages, v_pages, k_scale, v_scale, cache_len, *,
-                     opt_kv: bool, opt_pa: bool, opt_gqa: bool,
-                     page_group: int = 8, interpret: bool = True):
-    """q: (B, Hq, D); k/v_pages: (B, P, ps, Hkv, D) [fp8 if opt_kv];
-    k/v_scale: (B, P, ps, Hkv) f32 or None; cache_len: (B,) int32.
-    Returns (B, Hq, D) in q.dtype."""
-    B, Hq, D = q.shape
-    _, P, ps, Hkv, _ = k_pages.shape
-    pg = page_group
-    while P % pg:
-        pg //= 2
-    pg = max(pg, 1)
-    NG = P // pg
-
-    if opt_gqa:
-        G = Hq // Hkv
-        heads, kv_of_head = Hkv, lambda h: h
-    else:
-        # Original MHA semantics: every query head re-streams its KV head.
-        G = 1
-        heads, kv_of_head = Hq, lambda h: h // max(Hq // Hkv, 1)
-    qf = q.reshape(B, heads, G, D)
-
-    if k_scale is None:
-        k_scale = jnp.zeros((B, P, ps, Hkv), jnp.float32)
-        v_scale = k_scale
-
-    grid = (B, heads, NG)
-    kern = functools.partial(_decode_kernel, pg=pg, ps=ps, opt_kv=opt_kv,
-                             opt_pa=opt_pa, num_groups=NG)
-    out = pl.pallas_call(
-        kern,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, 1, G, D), lambda b, h, g, L: (b, h, 0, 0)),
-                pl.BlockSpec((1, pg, ps, 1, D),
-                             lambda b, h, g, L: (b, g, 0, kv_of_head(h), 0)),
-                pl.BlockSpec((1, pg, ps, 1, D),
-                             lambda b, h, g, L: (b, g, 0, kv_of_head(h), 0)),
-                pl.BlockSpec((1, pg, ps, 1),
-                             lambda b, h, g, L: (b, g, 0, kv_of_head(h))),
-                pl.BlockSpec((1, pg, ps, 1),
-                             lambda b, h, g, L: (b, g, 0, kv_of_head(h))),
-            ],
-            out_specs=pl.BlockSpec((1, 1, G, D),
-                                   lambda b, h, g, L: (b, h, 0, 0)),
-            scratch_shapes=[
-                pltpu.VMEM((G, 128), jnp.float32),
-                pltpu.VMEM((G, 128), jnp.float32),
-                pltpu.VMEM((G, D), jnp.float32),
-            ],
-        ),
-        out_shape=jax.ShapeDtypeStruct((B, heads, G, D), q.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(cache_len, qf, k_pages, v_pages, k_scale, v_scale)
-    return out.reshape(B, Hq, D)
-
-
-# ---------------------------------------------------------------------------
-# windowed (block-sparse SkipSet) paged decode — long_500k policy
-# ---------------------------------------------------------------------------
-def _window_kernel(len_ref, tbl_ref,             # scalar prefetch
-                   q_ref, k_ref, v_ref, ks_ref, vs_ref,
-                   o_ref, m_ref, l_ref, acc_ref,
-                   *, ps: int, opt_kv: bool, window: int, sink: int,
-                   num_sel: int):
+def _pool_kernel(len_ref, phys_ref, log_ref,     # scalar prefetch
+                 q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                 o_ref, m_ref, l_ref, acc_ref,
+                 *, ps: int, opt_kv: bool, window: int, sink: int,
+                 num_sel: int):
     b = pl.program_id(0)
     s_i = pl.program_id(2)
     G, D = q_ref.shape[2], q_ref.shape[3]
     length = len_ref[b]
-    page = tbl_ref[b, s_i]
+    page = phys_ref[b, s_i]
+    lpage = log_ref[b, s_i]
 
     @pl.when(s_i == 0)
     def _init():
@@ -181,29 +66,36 @@ def _window_kernel(len_ref, tbl_ref,             # scalar prefetch
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    @pl.when(page >= 0)  # SkipSet pages (Eq. 5) never compute
+    # Eq. 9 Phase 1: SkipSet / unallocated / beyond-context pages (-1) are
+    # predicated off — their DMA was redirected to page 0 by the index_map
+    # but neither compute nor the running reduction ever sees them.
+    @pl.when(page >= 0)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)
-        k = k_ref[0, 0, :, 0, :]
-        v = v_ref[0, 0, :, 0, :]
-        if opt_kv:
-            k = k.astype(jnp.float32) * ks_ref[0, 0].reshape(ps, 1)
-            v = v.astype(jnp.float32) * vs_ref[0, 0].reshape(ps, 1)
+        q = q_ref[0, 0].astype(jnp.float32)                  # (G, D)
+        k = k_ref[0, :, 0, :]                                # (ps, D)
+        v = v_ref[0, :, 0, :]
+        if opt_kv:  # Opt-KV Eq. 6: fused dequant at the VMEM boundary
+            k = k.astype(jnp.float32) * ks_ref[0].reshape(ps, 1)
+            v = v.astype(jnp.float32) * vs_ref[0].reshape(ps, 1)
         else:
             k = k.astype(jnp.float32)
             v = v.astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
-        s = s * (1.0 / math.sqrt(D))
-        pos = page * ps + jax.lax.broadcasted_iota(jnp.int32, (G, ps), 1)
-        in_ctx = pos < length
-        in_win = pos >= jnp.maximum(length - window, 0)
-        in_sink = pos < sink * ps
-        s = jnp.where(in_ctx & (in_win | in_sink), s, _NEG)
-        m_prev = m_ref[:, 0:1]
+        s = s * (1.0 / math.sqrt(D))                         # (G, ps)
+        pos = lpage * ps + jax.lax.broadcasted_iota(jnp.int32, (G, ps), 1)
+        mask = pos < length
+        if window:
+            in_win = pos >= jnp.maximum(length - window, 0)
+            in_sink = pos < sink * ps
+            mask &= in_win | in_sink
+        s = jnp.where(mask, s, _NEG)
+
+        # Eq. 10 Phase 2: block-wise softmax, VMEM running reduce.
+        m_prev = m_ref[:, 0:1]                               # (G, 1)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
         corr = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new)
+        p = jnp.exp(s - m_new)                               # (G, ps)
         l_new = l_ref[:, 0:1] * corr + jnp.sum(p, -1, keepdims=True)
         acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
@@ -218,52 +110,64 @@ def _window_kernel(len_ref, tbl_ref,             # scalar prefetch
                        jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
 
 
-def paged_gqa_decode_window(q, k_pages, v_pages, k_scale, v_scale, cache_len,
-                            page_table, *, opt_kv: bool, window: int,
-                            sink_pages: int, interpret: bool = True):
-    """Block-sparse decode: only pages named in ``page_table`` (B, NSel;
-    -1 = skipped) are DMA'd. Queries always grouped (Opt-GQA)."""
+def paged_pool_decode(q, k_pages, v_pages, k_scale, v_scale, cache_len,
+                      phys_table, log_table, *, opt_kv: bool, opt_gqa: bool,
+                      window: int = 0, sink_pages: int = 0,
+                      interpret: bool = True):
+    """q: (B, Hq, D); k/v_pages: (P_total, ps, Hkv, D) GLOBAL pool [fp8 if
+    opt_kv]; k/v_scale: (P_total, ps, Hkv) f32 or None; cache_len: (B,) int32;
+    phys_table/log_table: (B, NSel) int32 — physical page to DMA / logical
+    page id for positions; -1 = skip (never DMA'd). Returns (B, Hq, D)."""
     B, Hq, D = q.shape
-    _, P, ps, Hkv, _ = k_pages.shape
-    NSel = page_table.shape[1]
-    G = Hq // Hkv
-    qf = q.reshape(B, Hkv, G, D)
+    P, ps, Hkv, _ = k_pages.shape
+    NSel = phys_table.shape[1]
+
+    if opt_gqa:
+        G = Hq // Hkv
+        heads, kv_of_head = Hkv, lambda h: h
+    else:
+        # Original MHA semantics: every query head re-streams its KV head.
+        G = 1
+        heads, kv_of_head = Hq, lambda h: h // max(Hq // Hkv, 1)
+    qf = q.reshape(B, heads, G, D)
+
     if k_scale is None:
-        k_scale = jnp.zeros((B, P, ps, Hkv), jnp.float32)
+        k_scale = jnp.zeros((P, ps, Hkv), jnp.float32)
         v_scale = k_scale
 
-    def kv_idx(b, h, s, L, tbl):
-        return (b, jnp.maximum(tbl[b, s], 0), 0, h, 0)
+    def kv_idx(b, h, s, L, phys, log):
+        return (jnp.maximum(phys[b, s], 0), 0, kv_of_head(h), 0)
 
-    def sc_idx(b, h, s, L, tbl):
-        return (b, jnp.maximum(tbl[b, s], 0), 0, h)
+    def sc_idx(b, h, s, L, phys, log):
+        return (jnp.maximum(phys[b, s], 0), 0, kv_of_head(h))
 
-    kern = functools.partial(_window_kernel, ps=ps, opt_kv=opt_kv,
+    kern = functools.partial(_pool_kernel, ps=ps, opt_kv=opt_kv,
                              window=window, sink=sink_pages, num_sel=NSel)
     out = pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
-            grid=(B, Hkv, NSel),
+            num_scalar_prefetch=3,
+            grid=(B, heads, NSel),
             in_specs=[
                 pl.BlockSpec((1, 1, G, D),
-                             lambda b, h, s, L, tbl: (b, h, 0, 0)),
-                pl.BlockSpec((1, 1, ps, 1, D), kv_idx),
-                pl.BlockSpec((1, 1, ps, 1, D), kv_idx),
-                pl.BlockSpec((1, 1, ps, 1), sc_idx),
-                pl.BlockSpec((1, 1, ps, 1), sc_idx),
+                             lambda b, h, s, L, phys, log: (b, h, 0, 0)),
+                pl.BlockSpec((1, ps, 1, D), kv_idx),
+                pl.BlockSpec((1, ps, 1, D), kv_idx),
+                pl.BlockSpec((1, ps, 1), sc_idx),
+                pl.BlockSpec((1, ps, 1), sc_idx),
             ],
             out_specs=pl.BlockSpec((1, 1, G, D),
-                                   lambda b, h, s, L, tbl: (b, h, 0, 0)),
+                                   lambda b, h, s, L, phys, log: (b, h, 0, 0)),
             scratch_shapes=[
                 pltpu.VMEM((G, 128), jnp.float32),
                 pltpu.VMEM((G, 128), jnp.float32),
                 pltpu.VMEM((G, D), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        out_shape=jax.ShapeDtypeStruct((B, heads, G, D), q.dtype),
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(cache_len, page_table, qf, k_pages, v_pages, k_scale, v_scale)
+    )(cache_len, phys_table, log_table, qf, k_pages, v_pages,
+      k_scale, v_scale)
     return out.reshape(B, Hq, D)

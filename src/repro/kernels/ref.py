@@ -1,7 +1,8 @@
 """Pure-jnp oracles for every Pallas kernel (flat softmax, no blocking, no
 online accumulation) — the ground truth for the per-kernel allclose sweeps.
 Deliberately written in the most naive form so a kernel bug cannot be
-mirrored here.
+mirrored here. Layouts follow the GLOBAL paged pool: kv pages carry no batch
+dimension; lanes address the pool through (physical, logical) page tables.
 """
 from __future__ import annotations
 
@@ -21,42 +22,38 @@ def _dq(pages, scales, opt_kv):
     return pages.astype(jnp.float32)
 
 
-def paged_gqa_decode_ref(q, k_pages, v_pages, k_scale, v_scale, cache_len, *,
-                         opt_kv: bool):
-    """Flat-softmax oracle of the fused decode kernel (modes agree
-    numerically; Opt-Pa/Opt-GQA only change the compute schedule)."""
+def paged_pool_decode_ref(q, k_pages, v_pages, k_scale, v_scale, cache_len,
+                          phys_table, log_table, *, opt_kv: bool,
+                          window: int = 0, sink_pages: int = 0):
+    """Flat-softmax oracle of the fused pooled decode kernel.
+
+    q (B,Hq,D); k/v_pages (P_total, ps, Hkv, D); phys/log_table (B, NSel),
+    -1 = skipped. Gathers each lane's selected pages, places token j of
+    logical page L at position L*ps+j, and reduces with one flat softmax —
+    the kernel's online accumulation must match this exactly (modes agree
+    numerically; Opt-Pa/Opt-GQA only change the compute schedule).
+    """
     B, Hq, D = q.shape
-    _, P, ps, Hkv, _ = k_pages.shape
+    P, ps, Hkv, _ = k_pages.shape
     G = Hq // Hkv
-    k = _dq(k_pages, k_scale, opt_kv).reshape(B, P * ps, Hkv, D)
-    v = _dq(v_pages, v_scale, opt_kv).reshape(B, P * ps, Hkv, D)
+    pt = jnp.maximum(phys_table, 0)
+    k = _dq(jnp.take(k_pages, pt, axis=0),
+            None if k_scale is None else jnp.take(k_scale, pt, axis=0),
+            opt_kv)                                     # (B,NSel,ps,Hkv,D)
+    v = _dq(jnp.take(v_pages, pt, axis=0),
+            None if v_scale is None else jnp.take(v_scale, pt, axis=0),
+            opt_kv)
+    NSel = phys_table.shape[1]
+    k = k.reshape(B, NSel * ps, Hkv, D)
+    v = v.reshape(B, NSel * ps, Hkv, D)
     qf = q.reshape(B, Hkv, G, D).astype(jnp.float32)
     s = jnp.einsum("bhgd,bthd->bhgt", qf, k) / math.sqrt(D)
-    pos = jnp.arange(P * ps)[None, None, None, :]
-    s = jnp.where(pos < cache_len[:, None, None, None], s, _NEG)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhgt,bthd->bhgd", p, v)
-    return o.reshape(B, Hq, D).astype(q.dtype)
-
-
-def paged_gqa_decode_window_ref(q, k_pages, v_pages, k_scale, v_scale,
-                                cache_len, page_table, *, opt_kv: bool,
-                                window: int, sink_pages: int):
-    B, Hq, D = q.shape
-    _, P, ps, Hkv, _ = k_pages.shape
-    G = Hq // Hkv
-    k = _dq(k_pages, k_scale, opt_kv).reshape(B, P * ps, Hkv, D)
-    v = _dq(v_pages, v_scale, opt_kv).reshape(B, P * ps, Hkv, D)
-    qf = q.reshape(B, Hkv, G, D).astype(jnp.float32)
-    s = jnp.einsum("bhgd,bthd->bhgt", qf, k) / math.sqrt(D)
-    pos = jnp.arange(P * ps)[None, :]
-    sel = jnp.zeros((B, P), bool).at[
-        jnp.arange(B)[:, None], jnp.maximum(page_table, 0)].max(
-        page_table >= 0)
-    ok = (pos < cache_len[:, None]) \
-        & ((pos >= jnp.maximum(cache_len[:, None] - window, 0))
-           | (pos < sink_pages * ps)) \
-        & jnp.repeat(sel, ps, axis=1)
+    pos = (jnp.maximum(log_table, 0)[:, :, None] * ps
+           + jnp.arange(ps)[None, None]).reshape(B, -1)
+    ok = (pos < cache_len[:, None]) & jnp.repeat(phys_table >= 0, ps, axis=1)
+    if window:
+        ok &= ((pos >= jnp.maximum(cache_len[:, None] - window, 0))
+               | (pos < sink_pages * ps))
     s = jnp.where(ok[:, None, None, :], s, _NEG)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgt,bthd->bhgd", p, v)
@@ -65,12 +62,11 @@ def paged_gqa_decode_window_ref(q, k_pages, v_pages, k_scale, v_scale,
 
 def kv_cache_write_ref(k_new, v_new, slot_idx, k_cache, v_cache, k_scale,
                        v_scale, *, opt_kv: bool):
-    """Scatter-with-drop oracle (sentinel line NS-1 is dont-care — the
-    kernel routes SkipSet tokens there; callers must compare only real
-    lines)."""
+    """Scatter-with-drop oracle over the GLOBAL flat pool (NSlot, Hkv, D)
+    (sentinel line NSlot-1 is dont-care — the kernel routes SkipSet tokens
+    there; callers must compare only real lines)."""
     B, S, Hkv, D = k_new.shape
-    rows = jnp.arange(B)[:, None]
-    slots = jnp.where(slot_idx < 0, -1, slot_idx)
+    slots = jnp.where(slot_idx < 0, -1, slot_idx)       # (B, S)
 
     def put(cache, scale, new):
         newf = new.astype(jnp.float32)
@@ -78,11 +74,11 @@ def kv_cache_write_ref(k_new, v_new, slot_idx, k_cache, v_cache, k_scale,
             amax = jnp.max(jnp.abs(newf), axis=-1)
             sc = jnp.maximum(amax, 1e-12) / FP8_MAX
             qv = (newf / sc[..., None]).astype(cache.dtype)
-            cache = cache.at[rows, slots].set(qv, mode="drop")
-            scale = scale.at[rows, slots].set(sc, mode="drop")
+            cache = cache.at[slots].set(qv, mode="drop")
+            scale = scale.at[slots].set(sc, mode="drop")
         else:
-            cache = cache.at[rows, slots].set(newf.astype(cache.dtype),
-                                              mode="drop")
+            cache = cache.at[slots].set(newf.astype(cache.dtype),
+                                        mode="drop")
         return cache, scale
 
     k_cache, k_scale = put(k_cache, k_scale, k_new)

@@ -1,0 +1,3 @@
+"""Launchers: mesh/dryrun/HLO-cost tooling, training and serving entry
+points. Import submodules directly (``repro.launch.serve`` etc.) — they pull
+in heavy deps (jax mesh setup) lazily."""

@@ -45,6 +45,13 @@ def serve_workload(arch: str, mode: str, *, requests: int = 16,
         "decode_time_s": round(s.decode_time, 4),
         "latency_s": round(s.total_time, 4),          # Eq. 11
         "throughput_tok_s": round(s.throughput(), 2),  # Eq. 12
+        # shared-pool health (global refcounted allocator)
+        "pool_pages": s.pool_pages,
+        "peak_pool_utilization": round(
+            s.peak_pages_in_use / max(s.pool_pages, 1), 4),
+        "prefix_hit_rate": round(s.prefix_hit_rate(), 4),
+        "preemptions": s.preemptions,
+        "rejected": s.rejected,
     }
 
 

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.coopt import CoOptConfig, COOPT
-from repro.core.opt_kv import write_kv
+from repro.core.opt_kv import identity_page_table, identity_slots, write_kv
 from repro.core.opt_pa import paged_decode_attention
 from repro.models.layers import (Spec, apply_rope, causal_attention, init_tree,
                                  linear, repeat_kv, rmsnorm, shard_act)
@@ -277,7 +277,11 @@ class GriffinModel:
         h = params["embed"][tokens].astype(jnp.bfloat16)
         h = shard_act(h, ("batch", "seq", None))
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
-        slots = batch.get("slot_idx", positions).astype(jnp.int32)
+        P_total = cache["kv"].shape[2]
+        if "slot_idx" in batch:
+            slots = batch["slot_idx"].astype(jnp.int32)
+        else:
+            slots = identity_slots(B, positions, P_total, coopt.page_size)
         valid = batch.get("pad_mask")
         last_pos = batch.get("last_pos")
 
@@ -288,8 +292,11 @@ class GriffinModel:
 
         h, cache = self._period_scan(params, cache, h, positions, slots,
                                      coopt, attn_fn, valid, last_pos)
-        added = S if valid is None else jnp.sum(valid, axis=1)
-        cache["length"] = (cache["length"] + added).astype(jnp.int32)
+        new_len = batch.get("cache_len")
+        if new_len is None:
+            added = S if valid is None else jnp.sum(valid, axis=1)
+            new_len = cache["length"] + added
+        cache["length"] = new_len.astype(jnp.int32)
         h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
         if last_pos is not None:
             h_last = jnp.take_along_axis(
@@ -303,9 +310,23 @@ class GriffinModel:
         cfg = self.cfg
         h = params["embed"][batch["token"]].astype(jnp.bfloat16)
         B = h.shape[0]
-        positions = cache["length"][:, None]
-        slots = batch.get("slot_idx", positions).astype(jnp.int32)
-        new_len = cache["length"] + 1
+        positions = batch.get("positions")
+        if positions is None:
+            positions = cache["length"][:, None]
+        positions = positions.astype(jnp.int32)
+        P_total = cache["kv"].shape[2]
+        page_table = batch.get("page_table")
+        if page_table is None:
+            page_table = identity_page_table(B, P_total)
+        page_table = page_table.astype(jnp.int32)
+        if "slot_idx" in batch:
+            slots = batch["slot_idx"].astype(jnp.int32)
+        else:
+            slots = identity_slots(B, positions, P_total, coopt.page_size)
+        new_len = batch.get("cache_len")
+        if new_len is None:
+            new_len = cache["length"] + 1
+        new_len = new_len.astype(jnp.int32)
         H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
 
         def attn_fn(ap, x, kv_c, sc_c):
@@ -317,7 +338,8 @@ class GriffinModel:
             kv_c, sc_c = write_kv(kv_c, sc_c, k, v, slots, coopt)
             o = paged_decode_attention(
                 q[:, 0], kv_c, sc_c, new_len, coopt=coopt,
-                window=cfg.local_window, sink_pages=cfg.sink_blocks)
+                window=cfg.local_window, sink_pages=cfg.sink_blocks,
+                page_table=page_table)
             return linear(o.reshape(B, 1, H * D), ap["wo"]), kv_c, sc_c
 
         h, cache = self._period_scan(params, cache, h, positions, slots,
@@ -329,21 +351,24 @@ class GriffinModel:
     # ------------------------------------------------------------- caching --
     def cache_shape(self, batch: int, max_len: int, coopt: CoOptConfig):
         cfg = self.cfg
-        P, ps = _pages(max_len, coopt.page_size), coopt.page_size
+        # GLOBAL-POOL layout for the attention layers' paged KV (see
+        # transformer.TransformerModel.cache_shape); recurrent state
+        # (conv taps, RG-LRU h) is O(1) per lane and stays batch-major.
+        P, ps = batch * _pages(max_len, coopt.page_size), coopt.page_size
         Hkv, D, W = cfg.num_kv_heads, cfg.head_dim, cfg.lru_width
         out = {
             "conv": ((self.n_rec, batch, cfg.conv1d_width - 1, W), jnp.bfloat16,
                      ("layers", "batch", None, "d_model")),
             "lru": ((self.n_rec, batch, W), jnp.float32,
                     ("layers", "batch", "d_model")),
-            "kv": ((self.n_attn, 2, batch, P, ps, Hkv, D), coopt.kv_dtype,
-                   ("layers", None, "batch", "pages", None, "kv_heads",
+            "kv": ((self.n_attn, 2, P, ps, Hkv, D), coopt.kv_dtype,
+                   ("layers", None, "pages", None, "kv_heads",
                     "head_dim")),
             "length": ((batch,), jnp.int32, ("batch",)),
         }
         if coopt.opt_kv:
-            out["scale"] = ((self.n_attn, 2, batch, P, ps, Hkv), jnp.float32,
-                            ("layers", None, "batch", "pages", None,
+            out["scale"] = ((self.n_attn, 2, P, ps, Hkv), jnp.float32,
+                            ("layers", None, "pages", None,
                              "kv_heads"))
         return out
 

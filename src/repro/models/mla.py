@@ -56,12 +56,20 @@ def mla_full_attention(q_nope, q_rope, latent, p, cfg, *, window: int = 0):
 
 
 def mla_paged_decode(q_nope, q_rope, lat_pages, scale_pages, cache_len, p, cfg,
-                     coopt: CoOptConfig, *, window: int = 0, sink_pages: int = 1):
-    """Absorbed decode. q_nope/q_rope (B,H,dn|dr); lat_pages (B,P,ps,R+dr).
-    Returns (B,H,dv)."""
+                     coopt: CoOptConfig, *, window: int = 0, sink_pages: int = 1,
+                     page_table=None):
+    """Absorbed decode against the GLOBAL latent pool. q_nope/q_rope
+    (B,H,dn|dr); lat_pages (P_total,ps,R+dr) shared by all lanes;
+    page_table (B,P_lane) physical pages in logical order (default:
+    lane-identity partition). Returns (B,H,dv)."""
     H, dn, dr, R, dv = (cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
                         cfg.kv_lora_rank, cfg.v_head_dim)
-    B, P, ps, _ = lat_pages.shape
+    B = q_nope.shape[0]
+    P_total, ps, _ = lat_pages.shape
+    if page_table is None:
+        from repro.core.opt_kv import identity_page_table
+        page_table = identity_page_table(B, P_total)
+    P = page_table.shape[1]
     scale = 1.0 / math.sqrt(dn + dr)
     # absorb W_uk into q: score_h(t) = <q_lat_h, c_t> + <q_rope_h, k_rope_t>
     # (q_lat resharded once per layer to match the model-sharded latent
@@ -82,19 +90,20 @@ def mla_paged_decode(q_nope, q_rope, lat_pages, scale_pages, cache_len, p, cfg,
         return pages.astype(jnp.float32)
 
     if window:
-        from repro.core.opt_kv import window_page_table
-        table = window_page_table(cache_len, P, ps, window, sink_pages)
-        pt = jnp.maximum(table, 0)
-        lat = jnp.take_along_axis(lat_pages, pt[:, :, None, None], axis=1)
-        sc = (jnp.take_along_axis(scale_pages, pt[:, :, None, None], axis=1)
-              if coopt.opt_kv else None)
+        from repro.core.opt_kv import logical_to_physical, window_page_table
+        logical = window_page_table(cache_len, P, ps, window, sink_pages)
+        phys = logical_to_physical(logical, page_table)
+        pt = jnp.maximum(phys, 0)
+        lat = jnp.take(lat_pages, pt, axis=0)          # (B,NSel,ps,R+dr)
+        sc = (jnp.take(scale_pages, pt, axis=0) if coopt.opt_kv else None)
         lat = dequant(lat, sc)
         lat = lat.reshape(B, -1, R + dr)
-        pos = (pt[:, :, None] * ps + jnp.arange(ps)[None, None]).reshape(B, -1)
+        pos = (jnp.maximum(logical, 0)[:, :, None] * ps
+               + jnp.arange(ps)[None, None]).reshape(B, -1)
         ok = (pos < cache_len[:, None]) \
             & ((pos >= jnp.maximum(cache_len[:, None] - window, 0))
                | (pos < sink_pages * ps)) \
-            & jnp.repeat(table >= 0, ps, axis=1)
+            & jnp.repeat(phys >= 0, ps, axis=1)
         s = (jnp.einsum("bhr,btr->bht", q_lat, lat[..., :R])
              + jnp.einsum("bhe,bte->bht", q_rope.astype(jnp.float32),
                           lat[..., R:])) * scale
@@ -107,13 +116,21 @@ def mla_paged_decode(q_nope, q_rope, lat_pages, scale_pages, cache_len, p, cfg,
                           p["w_uv"].reshape(R, H, dv).astype(jnp.float32)
                           ).astype(q_nope.dtype)
 
+    # dense path: gather the lane's pages in logical order, then reduce —
+    # token j of the gathered view is logical position j.
+    pt = jnp.maximum(page_table, 0)
+    lat_lane = jnp.take(lat_pages, pt, axis=0)         # (B,P,ps,R+dr)
+    sc_lane = (jnp.take(scale_pages, pt, axis=0) if coopt.opt_kv else None)
+    valid = jnp.repeat(page_table >= 0, ps, axis=1)    # (B, P*ps)
+
     pg = coopt.page_group if coopt.opt_pa else P
     while P % pg:
         pg //= 2
     pg = max(pg, 1)
     NG, T = P // pg, pg * ps
-    lat_g = lat_pages.reshape(B, NG, T, R + dr)
-    sc_g = scale_pages.reshape(B, NG, T, 2) if coopt.opt_kv else None
+    lat_g = lat_lane.reshape(B, NG, T, R + dr)
+    sc_g = sc_lane.reshape(B, NG, T, 2) if coopt.opt_kv else None
+    valid_g = valid.reshape(B, NG, T)
 
     def body(carry, g):
         m, l, acc = carry
@@ -129,7 +146,8 @@ def mla_paged_decode(q_nope, q_rope, lat_pages, scale_pages, cache_len, p, cfg,
                           lat_r)) * scale
         s = shard_act(s, ("batch", None, None))
         pos = g * T + jnp.arange(T)[None, None, :]
-        s = jnp.where(pos < cache_len[:, None, None], s, _NEG)
+        ok = (pos < cache_len[:, None, None]) & valid_g[:, g][:, None, :]
+        s = jnp.where(ok, s, _NEG)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
         corr = jnp.exp(m - m_new)
         pr = jnp.exp(s - m_new)

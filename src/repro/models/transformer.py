@@ -18,7 +18,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.coopt import CoOptConfig, COOPT
-from repro.core.opt_kv import write_kv
+from repro.core.opt_kv import (gather_cached_kv, identity_page_table,
+                               identity_slots, write_kv)
 from repro.core.opt_pa import paged_decode_attention
 from repro.models import mla as mla_mod
 from repro.models.layers import (Spec, apply_rope, causal_attention, init_tree,
@@ -165,11 +166,12 @@ class TransformerModel:
                                  repeat_kv(v, H // Hkv), window=cfg.attn_window)
         return linear(o.reshape(B, S, H * D), p["wo"]), k, v
 
-    def _attention_decode(self, p, x, kv_slice, positions, new_len, coopt,
-                          long_window: int):
-        """One-token attention against the paged cache slice.
-        kv_slice: ("kv", "scale") for this layer (already containing the new
-        token). Returns projected output (B,1,d)."""
+    def _attention_decode(self, p, x, kv_slice, positions, new_len,
+                          page_table, coopt, long_window: int):
+        """One-token attention against this layer's slice of the GLOBAL
+        paged pool. kv_slice: ("kv", "scale") for this layer (already
+        containing the new token); page_table: (B, P_lane) physical pages
+        in logical order. Returns projected output (B,1,d)."""
         cfg = self.cfg
         B = x.shape[0]
         window = cfg.attn_window or long_window
@@ -183,7 +185,7 @@ class TransformerModel:
             o = mla_mod.mla_paged_decode(
                 qn[:, 0], qr[:, 0], kv_slice["kv"], kv_slice.get("scale"),
                 new_len, p, cfg, coopt, window=window,
-                sink_pages=cfg.sink_blocks)
+                sink_pages=cfg.sink_blocks, page_table=page_table)
             return linear(o.reshape(B, 1, -1), p["wo"])
         H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
         q = linear(x, p["wq"], p.get("bq")).reshape(B, 1, H, D)
@@ -192,7 +194,8 @@ class TransformerModel:
         q = apply_rope(q, positions, cfg.rope_theta)
         o = paged_decode_attention(
             q[:, 0], kv_slice["kv"], kv_slice.get("scale"), new_len,
-            coopt=coopt, window=window, sink_pages=cfg.sink_blocks)
+            coopt=coopt, window=window, sink_pages=cfg.sink_blocks,
+            page_table=page_table)
         return linear(o.reshape(B, 1, H * D), p["wo"])
 
     def _new_kv(self, p, x, positions):
@@ -273,31 +276,38 @@ class TransformerModel:
     # ------------------------------------------------------------ caching --
     def cache_shape(self, batch: int, max_len: int, coopt: CoOptConfig):
         """Dict of (shape, dtype, logical axes) — consumed by launch/dryrun
-        for ShapeDtypeStructs + shardings, and by init_cache."""
+        for ShapeDtypeStructs + shardings, and by init_cache.
+
+        GLOBAL-POOL layout: kv/scale leaves carry no batch dimension — the
+        pool holds ``batch * pages(max_len)`` pages shared by every lane
+        (refcounted + prefix-cached by the host-side BlockManager). Direct
+        callers fall back to the static lane-identity partition; the engine
+        reserves the final page so its last line can serve as the Pallas
+        write kernel's SkipSet sentinel. ``length`` stays per-lane."""
         cfg = self.cfg
-        P, ps = _pages(max_len, coopt.page_size), coopt.page_size
+        P, ps = batch * _pages(max_len, coopt.page_size), coopt.page_size
         out: Dict[str, Any] = {}
         if cfg.family == "mla":
             width = cfg.kv_lora_rank + cfg.qk_rope_head_dim
-            out["kv"] = ((cfg.num_layers, batch, P, ps, width),
+            out["kv"] = ((cfg.num_layers, P, ps, width),
                          coopt.kv_dtype,
-                         ("layers", "batch", "pages", None, "latent"))
+                         ("layers", "pages", None, "latent"))
             if coopt.opt_kv:
                 # two scales per token: c_kv and k_rope magnitudes differ,
                 # a shared scale would crush the smaller segment's mantissa
-                out["scale"] = ((cfg.num_layers, batch, P, ps, 2),
+                out["scale"] = ((cfg.num_layers, P, ps, 2),
                                 jnp.float32,
-                                ("layers", "batch", "pages", None, None))
+                                ("layers", "pages", None, None))
         else:
             Hkv, D = cfg.num_kv_heads, cfg.head_dim
-            out["kv"] = ((cfg.num_layers, 2, batch, P, ps, Hkv, D),
+            out["kv"] = ((cfg.num_layers, 2, P, ps, Hkv, D),
                          coopt.kv_dtype,
-                         ("layers", None, "batch", "pages", None, "kv_heads",
+                         ("layers", None, "pages", None, "kv_heads",
                           "head_dim"))
             if coopt.opt_kv:
-                out["scale"] = ((cfg.num_layers, 2, batch, P, ps, Hkv),
+                out["scale"] = ((cfg.num_layers, 2, P, ps, Hkv),
                                 jnp.float32,
-                                ("layers", None, "batch", "pages", None,
+                                ("layers", None, "pages", None,
                                  "kv_heads"))
         out["length"] = ((batch,), jnp.int32, ("batch",))
         return out
@@ -308,36 +318,36 @@ class TransformerModel:
                 self.cache_shape(batch, max_len, coopt).items()}
 
     def _write_layer(self, kv_c, sc_c, new_a, new_b, slots, coopt):
-        """Write cache entries for one layer. MLA: new_a=(B,S,R+dr)."""
+        """Write cache entries for one layer (GLOBAL flat slots; -1 =
+        SkipSet drop). MLA: new_a=(B,S,R+dr), kv_c=(P,ps,R+dr)."""
         if self.cfg.family == "mla":
             B, S, W = new_a.shape
             R = self.cfg.kv_lora_rank
-            _, P, ps, _ = kv_c.shape
-            flat = kv_c.reshape(B, P * ps, W)
+            P, ps, _ = kv_c.shape
+            flat = kv_c.reshape(P * ps, W)
+            clipped = jnp.where(slots < 0, -1, slots)
             if coopt.opt_kv:
                 from repro.cache.quant import quantize_fp8
                 qc, s_c = quantize_fp8(new_a[..., :R], axis=-1)
                 qr, s_r = quantize_fp8(new_a[..., R:], axis=-1)
                 qv = jnp.concatenate([qc, qr], axis=-1)
                 s = jnp.stack([s_c, s_r], axis=-1)            # (B,S,2)
-                flat = flat.at[jnp.arange(B)[:, None], slots].set(
-                    qv.astype(flat.dtype), mode="drop")
-                sf = sc_c.reshape(B, P * ps, 2)
-                sf = sf.at[jnp.arange(B)[:, None], slots].set(s, mode="drop")
-                sc_c = sf.reshape(B, P, ps, 2)
+                flat = flat.at[clipped].set(qv.astype(flat.dtype),
+                                            mode="drop")
+                sf = sc_c.reshape(P * ps, 2)
+                sf = sf.at[clipped].set(s, mode="drop")
+                sc_c = sf.reshape(P, ps, 2)
             else:
-                flat = flat.at[jnp.arange(B)[:, None], slots].set(
-                    new_a.astype(flat.dtype), mode="drop")
-            return flat.reshape(B, P, ps, W), sc_c
+                flat = flat.at[clipped].set(new_a.astype(flat.dtype),
+                                            mode="drop")
+            return flat.reshape(P, ps, W), sc_c
         return write_kv(kv_c, sc_c, new_a, new_b, slots, coopt)
 
-    def _scan_with_cache(self, params, cache, h, positions, slots, coopt,
-                         step_fn):
-        """Scan layers threading per-layer cache slices as xs/ys."""
+    def _scan_with_cache(self, params, cache, h, new_len, coopt, step_fn):
+        """Scan layers threading per-layer cache slices as xs/ys.
+        ``new_len`` (B,) is the per-lane token count after this step —
+        supplied by the engine (global slots carry no length info)."""
         cfg = self.cfg
-        # highest written slot + 1 (robust to -1 / SkipSet-padded tails)
-        new_len = jnp.maximum(cache["length"],
-                              jnp.max(slots, axis=1) + 1).astype(jnp.int32)
         start = 0
         kv_out, sc_out = [], []
         for seg_params, (count, kind) in zip(params["segments"],
@@ -372,11 +382,15 @@ class TransformerModel:
         cache["length"] = new_len
         return h, cache
 
-    def _attention_chunk(self, p, x, positions, kv_c, sc_c, coopt):
-        """Prefill-continuation attention (chunked prefill): the chunk's
-        K/V are already written to the paged cache; queries attend over the
-        WHOLE cache (previous chunks + this one) with true positions —
-        cache slots are identity-mapped so slot index == position.
+    def _attention_chunk(self, p, x, positions, kv_c, sc_c, page_table,
+                         coopt):
+        """Prefill-continuation attention (chunked prefill / mixed step):
+        the chunk's K/V are already written to the GLOBAL paged cache;
+        queries attend over the lane's WHOLE cache (previous chunks + this
+        one) gathered via its page table — key j of the gathered view is the
+        lane's logical position j, so causality is a plain position compare.
+        Supports PER-LANE query positions (the token-budget scheduler mixes
+        decode lanes, chunk length 1, with prefill-chunk lanes in one call).
         Non-MLA families only."""
         cfg = self.cfg
         B, S, _ = x.shape
@@ -385,24 +399,49 @@ class TransformerModel:
         if cfg.qk_norm:
             q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
         q = apply_rope(q, positions, cfg.rope_theta)
-        from repro.core.opt_kv import dequant_pages
-        kv = dequant_pages(kv_c, sc_c, coopt)          # (2,B,P,ps,Hkv,D)
-        _, _, P, ps, _, _ = kv_c.shape
-        k, v = kv.reshape(2, B, P * ps, Hkv, D)
-        # queries at absolute positions (uniform offset across the batch);
-        # keys at slot == position
-        o = causal_attention(q, k, v, window=cfg.attn_window,
-                             q_offset=positions[0, 0])
-        return linear(o.reshape(B, S, H * D), p["wo"])
+        flat = gather_cached_kv(kv_c, sc_c, page_table, coopt)
+        k, v = flat                                    # (B,T,Hkv,D) each
+        T, ps = k.shape[1], kv_c.shape[2]
+        if not coopt.opt_gqa and Hkv != H:
+            # Original: KV physically expanded per query head (Fig. 2)
+            k, v = repeat_kv(k, H // Hkv), repeat_kv(v, H // Hkv)
+            Hg, G = H, 1
+        else:
+            Hg, G = Hkv, H // Hkv
+        qg = q.reshape(B, S, Hg, G, D).astype(jnp.float32)
+        s = jnp.einsum("bshgd,bthd->bhgst", qg, k.astype(jnp.float32))
+        s = s * (1.0 / math.sqrt(D))
+        kpos = jnp.arange(T, dtype=jnp.int32)[None, None, :]
+        qpos = positions[:, :, None]
+        mask = (kpos <= qpos) & \
+            jnp.repeat(page_table >= 0, ps, axis=1)[:, None, :]
+        if cfg.attn_window:
+            mask &= kpos > qpos - cfg.attn_window
+        s = jnp.where(mask[:, None, None], s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgst,bthd->bshgd", pr, v.astype(jnp.float32))
+        o = o.reshape(B, S, H * D).astype(x.dtype)
+        return linear(o, p["wo"])
+
+    def _pool_defaults(self, cache, batch, B):
+        """(page_table, total_pages) — batch-provided or lane-identity."""
+        axis = 1 if self.cfg.family == "mla" else 2
+        P_total = cache["kv"].shape[axis]
+        pt = batch.get("page_table")
+        if pt is None:
+            pt = identity_page_table(B, P_total)
+        return pt.astype(jnp.int32), P_total
 
     def prefill(self, params, batch, cache, coopt: CoOptConfig = COOPT):
         """Full-prompt forward + cache population. Returns
         (last-token logits (B,V), cache).
 
-        Chunked-prefill continuation: pass ``batch["positions"]`` (B, S)
-        with the chunk's absolute positions (and matching ``slot_idx``);
-        attention then runs over the whole cache so chunk k+1 sees chunks
-        0..k (transformer families except MLA)."""
+        Chunked-prefill continuation (Sarathi-style / mixed decode+prefill
+        step): pass ``batch["positions"]`` (B, S) with each lane's absolute
+        positions plus matching GLOBAL ``slot_idx``, the lane ``page_table``
+        and the post-step ``cache_len``; attention then runs over the whole
+        gathered cache so chunk k+1 sees chunks 0..k — and a decode lane is
+        just a chunk of length 1 (transformer families except MLA)."""
         cfg = self.cfg
         h, off = self._embed(params, batch)
         B, S, _ = h.shape
@@ -416,7 +455,16 @@ class TransformerModel:
         else:
             positions = jnp.broadcast_to(jnp.arange(S), (B, S))
         h = shard_act(h, ("batch", "seq", None))
-        slots = batch.get("slot_idx", positions).astype(jnp.int32)
+        page_table, P_total = self._pool_defaults(cache, batch, B)
+        if "slot_idx" in batch:
+            slots = batch["slot_idx"].astype(jnp.int32)
+        else:
+            slots = identity_slots(B, positions, P_total, coopt.page_size)
+        new_len = batch.get("cache_len")
+        if new_len is None:
+            new_len = jnp.maximum(cache["length"],
+                                  jnp.max(positions, axis=1) + 1)
+        new_len = new_len.astype(jnp.int32)
 
         def step(hh, pl, kv_c, sc_c, kind):
             x = rmsnorm(hh, pl["ln1"], cfg.norm_eps)
@@ -425,7 +473,7 @@ class TransformerModel:
                 kv_c, sc_c = self._write_layer(kv_c, sc_c, new_a, new_b,
                                                slots, coopt)
                 a = self._attention_chunk(pl, x, positions, kv_c, sc_c,
-                                          coopt)
+                                          page_table, coopt)
             else:
                 a, new_a, new_b = self._attention_full(pl, x, positions,
                                                        coopt)
@@ -436,8 +484,8 @@ class TransformerModel:
                              coopt)
             return shard_act(hh + f, ("batch", "seq", None)), kv_c, sc_c
 
-        h, cache = self._scan_with_cache(params, cache, h, positions, slots,
-                                         coopt, step)
+        h, cache = self._scan_with_cache(params, cache, h, new_len, coopt,
+                                         step)
         h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
         last = batch.get("last_pos", jnp.full((B,), S - 1, jnp.int32))
         h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
@@ -446,13 +494,25 @@ class TransformerModel:
     def decode_step(self, params, batch, cache, coopt: CoOptConfig = COOPT,
                     long_window: int = 0):
         """ONE token (B,1) against the paged cache. Returns (logits (B,V),
-        cache)."""
+        cache). The engine supplies ``positions``/``slot_idx``/``page_table``
+        /``cache_len``; direct callers fall back to the per-lane ``length``
+        leaf and the lane-identity pool partition."""
         cfg = self.cfg
         h = params["embed"][batch["token"]].astype(jnp.bfloat16)  # (B,1,d)
         B = h.shape[0]
-        positions = cache["length"][:, None]                       # (B,1)
-        slots = batch.get("slot_idx", positions).astype(jnp.int32)
-        new_len = cache["length"] + 1
+        positions = batch.get("positions")
+        if positions is None:
+            positions = cache["length"][:, None]                   # (B,1)
+        positions = positions.astype(jnp.int32)
+        page_table, P_total = self._pool_defaults(cache, batch, B)
+        if "slot_idx" in batch:
+            slots = batch["slot_idx"].astype(jnp.int32)
+        else:
+            slots = identity_slots(B, positions, P_total, coopt.page_size)
+        new_len = batch.get("cache_len")
+        if new_len is None:
+            new_len = cache["length"] + 1
+        new_len = new_len.astype(jnp.int32)
 
         def step(hh, pl, kv_c, sc_c, kind):
             x = rmsnorm(hh, pl["ln1"], cfg.norm_eps)
@@ -460,14 +520,15 @@ class TransformerModel:
             kv_c, sc_c = self._write_layer(kv_c, sc_c, new_a, new_b, slots,
                                            coopt)
             a = self._attention_decode(pl, x, {"kv": kv_c, "scale": sc_c},
-                                       positions, new_len, coopt, long_window)
+                                       positions, new_len, page_table,
+                                       coopt, long_window)
             hh = hh + a
             f, _ = self._ffn(pl, rmsnorm(hh, pl["ln2"], cfg.norm_eps), kind,
                              coopt)
             return hh + f, kv_c, sc_c
 
-        h, cache = self._scan_with_cache(params, cache, h, positions, slots,
-                                         coopt, step)
+        h, cache = self._scan_with_cache(params, cache, h, new_len, coopt,
+                                         step)
         h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
         return linear(h[:, 0], params["lm_head"]), cache
 

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.coopt import CoOptConfig, COOPT
-from repro.core.opt_kv import write_kv
+from repro.core.opt_kv import identity_page_table, identity_slots, write_kv
 from repro.core.opt_pa import paged_decode_attention
 from repro.cache.quant import quantize_fp8, dequantize_fp8
 from repro.models.layers import (Spec, causal_attention, gelu_mlp, init_tree,
@@ -159,14 +159,19 @@ class WhisperModel:
 
     # -------------------------------------------------------------- decoder --
     def _decoder(self, params, tokens, cache, coopt, positions, slots,
-                 write_cache: bool, long_window: int = 0):
+                 write_cache: bool, long_window: int = 0,
+                 page_table=None, cache_len=None):
         cfg = self.cfg
         B, S = tokens.shape
         H, D = cfg.num_heads, cfg.head_dim
         h = params["embed"][tokens].astype(jnp.bfloat16)
         h = h + params["pos_dec"][positions].astype(jnp.bfloat16)
         h = shard_act(h, ("batch", "seq", None))
-        new_len = (cache["length"] + S).astype(jnp.int32)
+        if page_table is None:
+            page_table = identity_page_table(B, cache["kv"].shape[2])
+        page_table = page_table.astype(jnp.int32)
+        new_len = (cache["length"] + S if cache_len is None
+                   else cache_len).astype(jnp.int32)
 
         xs = (params["dec"], cache["kv"], cache["xk"], cache["xv"])
         if coopt.opt_kv:
@@ -186,7 +191,8 @@ class WhisperModel:
             if S == 1:
                 o = paged_decode_attention(
                     q[:, 0], kv_c, sc_c, new_len, coopt=coopt,
-                    window=long_window, sink_pages=cfg.sink_blocks)[:, None]
+                    window=long_window, sink_pages=cfg.sink_blocks,
+                    page_table=page_table)[:, None]
             else:
                 o = causal_attention(q, k, v)
             hh = hh + linear(o.reshape(B, S, H * D), pl["wo"], pl["bo"])
@@ -235,8 +241,10 @@ class WhisperModel:
         cache = self.init_cache(B, S, coopt)
         cache = self._fill_cross(params, cache, enc, coopt)
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        slots = identity_slots(B, positions, cache["kv"].shape[2],
+                               coopt.page_size)
         h, _ = self._decoder(params, tokens, cache, coopt, positions,
-                             positions.astype(jnp.int32), True)
+                             slots, True)
         return linear(h, params["lm_head"]), {}
 
     def prefill(self, params, batch, cache, coopt: CoOptConfig = COOPT):
@@ -246,9 +254,14 @@ class WhisperModel:
         enc = self.encode(params, batch["frames"])
         cache = self._fill_cross(params, cache, enc, coopt)
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
-        slots = batch.get("slot_idx", positions).astype(jnp.int32)
+        if "slot_idx" in batch:
+            slots = batch["slot_idx"].astype(jnp.int32)
+        else:
+            slots = identity_slots(B, positions, cache["kv"].shape[2],
+                                   coopt.page_size)
         h, cache = self._decoder(params, tokens, cache, coopt, positions,
-                                 slots, True)
+                                 slots, True,
+                                 cache_len=batch.get("cache_len"))
         last_pos = batch.get("last_pos")
         if last_pos is not None:
             # pads carry slot -1 (never cached); length = real token count
@@ -262,22 +275,34 @@ class WhisperModel:
     def decode_step(self, params, batch, cache, coopt: CoOptConfig = COOPT,
                     long_window: int = 0):
         B = batch["token"].shape[0]
-        positions = cache["length"][:, None]
-        slots = batch.get("slot_idx", positions).astype(jnp.int32)
+        positions = batch.get("positions")
+        if positions is None:
+            positions = cache["length"][:, None]
+        positions = positions.astype(jnp.int32)
+        if "slot_idx" in batch:
+            slots = batch["slot_idx"].astype(jnp.int32)
+        else:
+            slots = identity_slots(B, positions, cache["kv"].shape[2],
+                                   coopt.page_size)
         h, cache = self._decoder(params, batch["token"], cache, coopt,
                                  positions, slots, True,
-                                 long_window=long_window)
+                                 long_window=long_window,
+                                 page_table=batch.get("page_table"),
+                                 cache_len=batch.get("cache_len"))
         return linear(h[:, 0], params["lm_head"]), cache
 
     # ------------------------------------------------------------- caching --
     def cache_shape(self, batch: int, max_len: int, coopt: CoOptConfig):
         cfg = self.cfg
-        P, ps = _pages(max_len, coopt.page_size), coopt.page_size
+        P, ps = batch * _pages(max_len, coopt.page_size), coopt.page_size
         L, H, D, F = cfg.num_layers, cfg.num_heads, cfg.head_dim, \
             cfg.num_frames
         out = {
-            "kv": ((L, 2, batch, P, ps, H, D), coopt.kv_dtype,
-                   ("layers", None, "batch", "pages", None, "kv_heads",
+            # decoder self-attn KV: GLOBAL pool (no batch dim); cross-attn
+            # K/V are static per-lane encoder projections and stay
+            # batch-major (quantized once — DESIGN.md §5).
+            "kv": ((L, 2, P, ps, H, D), coopt.kv_dtype,
+                   ("layers", None, "pages", None, "kv_heads",
                     "head_dim")),
             "xk": ((L, batch, F, H, D), coopt.kv_dtype,
                    ("layers", "batch", None, "kv_heads", "head_dim")),
@@ -286,8 +311,8 @@ class WhisperModel:
             "length": ((batch,), jnp.int32, ("batch",)),
         }
         if coopt.opt_kv:
-            out["scale"] = ((L, 2, batch, P, ps, H), jnp.float32,
-                            ("layers", None, "batch", "pages", None,
+            out["scale"] = ((L, 2, P, ps, H), jnp.float32,
+                            ("layers", None, "pages", None,
                              "kv_heads"))
             out["xscale"] = ((L, 2, batch, F, H), jnp.float32,
                              ("layers", None, "batch", None, "kv_heads"))

@@ -1,24 +1,38 @@
-"""LLM-CoOpt serving engine: continuous batching over a paged, quantizable
-KV cache, with the paper's three techniques selected by a ``CoOptConfig``.
+"""LLM-CoOpt serving engine: continuous batching over ONE shared, refcounted,
+prefix-cached paged-KV pool, with the paper's three techniques selected by a
+``CoOptConfig``.
 
 The engine is the "vLLM migration target" of the paper: the Original mode
 reproduces unmodified-vLLM semantics (bf16 cache, every allocated page
 loaded, per-head KV expansion) and each Opt-* flag turns on one technique,
 so Figs. 6-7's five modes are one constructor argument apart.
 
-Design (hardware adaptation, DESIGN.md §3): ``num_lanes`` batch lanes with
-static per-lane page pools; all dynamic paging state (free lists, slot
-indices, SkipSets) lives host-side in the Scheduler/BlockManager; device
-steps are two jit'd functions (bucketed prefill, lockstep decode). Lane
-isolation is enforced by masking cache updates with the admitted-lane mask —
-idle lanes' state is bit-identical across steps (asserted by tests).
+Design (hardware adaptation, DESIGN.md §3): the device cache is a GLOBAL
+paged pool — per-layer leaves ``(2, P_total, ps, Hkv, D)`` with no batch
+dimension, ``P_total = num_lanes * pages(max_len)`` (the final page reserved
+as the write kernel's SkipSet sentinel). All dynamic paging state (free
+lists, refcounts, prefix-cache hash table, slot indices, SkipSets) lives
+host-side in the Scheduler/BlockManager; the device sees only static-shape
+index arrays: global ``slot_idx``, per-lane ``page_table``, per-lane
+``cache_len``. Lane isolation is enforced by slot disjointness — a lane can
+only write pages it exclusively owns (shared prefix pages are read-only by
+refcount construction) — so cache updates need no batch masking; only
+batch-major leaves (per-lane lengths, recurrent state, whisper cross-KV) are
+masked with the admitted-lane mask.
+
+Scheduling (Sarathi-style): each step is composed under a token budget,
+mixing decode tokens and chunked-prefill chunks. For chunk-capable families
+(dense/moe) the whole step is ONE device call through the continuation
+prefill path (a decode lane is a chunk of length 1); other families run one
+bucketed prefill + one decode call per step. Pool exhaustion preempts the
+youngest running request (freed pages, front-of-queue requeue, greedy-exact
+resume) instead of crashing; impossible requests are REJECTED and surfaced.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from functools import partial
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +43,8 @@ from repro.core.coopt import CoOptConfig, COOPT
 from repro.models import get_model
 from repro.serving.request import Request, RequestState
 from repro.serving.sampler import SamplingParams, sample
-from repro.serving.scheduler import Scheduler, bucket_len
+from repro.serving.scheduler import (DecodeItem, PrefillChunk, Scheduler,
+                                     StepPlan, bucket_len)
 
 
 @dataclass(frozen=True)
@@ -40,15 +55,27 @@ class EngineConfig:
     long_window: int = 0            # >0: block-sparse long-context decode
     sampling: SamplingParams = SamplingParams()
     seed: int = 0
+    token_budget: int = 0           # 0 => max(prefill_buckets)
+    enable_prefix_cache: bool = True
 
 
 @dataclass
 class EngineStats:
     prefill_calls: int = 0
     decode_steps: int = 0
+    mixed_steps: int = 0            # decode + prefill fused in one call
     generated_tokens: int = 0
     prefill_time: float = 0.0
     decode_time: float = 0.0
+    # ----------------------------------------------------- pool health ----
+    pool_pages: int = 0
+    pages_in_use: int = 0           # referenced by live sequences (now)
+    peak_pages_in_use: int = 0
+    fresh_pages_allocated: int = 0  # pages handed out over the run
+    prefix_cache_queries: int = 0
+    prefix_cache_hits: int = 0      # full prompt pages reused, not recomputed
+    preemptions: int = 0
+    rejected: int = 0
 
     @property
     def total_time(self) -> float:
@@ -58,6 +85,13 @@ class EngineStats:
         """Paper Eq. 12: generated tokens / generation time."""
         return self.generated_tokens / self.decode_time \
             if self.decode_time else 0.0
+
+    def pool_utilization(self) -> float:
+        return self.pages_in_use / self.pool_pages if self.pool_pages else 0.0
+
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_cache_hits / self.prefix_cache_queries \
+            if self.prefix_cache_queries else 0.0
 
 
 class Engine:
@@ -77,17 +111,26 @@ class Engine:
         self.cache = self.model.init_cache(B, M, coopt)
         self._patch_offset = (model_cfg.num_patches
                               if model_cfg.family == "vlm" else 0)
+        # chunked continuation prefill (and therefore mixed steps + prefix
+        # caching): attention families able to attend over the gathered
+        # cache with true positions (see TransformerModel.prefill)
+        self._chunked = model_cfg.family in ("dense", "moe")
         self.scheduler = Scheduler(
             B, M, coopt.page_size, list(engine_cfg.prefill_buckets),
             extra_tokens=self._patch_offset,
-            # chunked continuation prefill: attention families with
-            # identity slot mapping (see TransformerModel.prefill)
-            allow_chunked=model_cfg.family in ("dense", "moe"))
+            allow_chunked=self._chunked,
+            token_budget=engine_cfg.token_budget or None,
+            enable_prefix_cache=engine_cfg.enable_prefix_cache)
         self.stats = EngineStats()
+        self.stats.pool_pages = self.scheduler.manager.num_pages
 
+        # only batch-major leaves (length, recurrent state, whisper x-KV)
+        # need lane masking; global-pool leaves are isolated by slot
+        # disjointness.
         shapes = self.model.cache_shape(B, M, coopt)
         self._batch_axis = {k: axes.index("batch")
-                            for k, (_, _, axes) in shapes.items()}
+                            for k, (_, _, axes) in shapes.items()
+                            if "batch" in axes}
 
         self._prefill_fn = jax.jit(self._prefill_impl)
         self._decode_fn = jax.jit(self._decode_impl)
@@ -96,7 +139,10 @@ class Engine:
     def _mask_lanes(self, new_cache, old_cache, lane_mask):
         out = {}
         for name, leaf in new_cache.items():
-            ax = self._batch_axis[name]
+            ax = self._batch_axis.get(name)
+            if ax is None:
+                out[name] = leaf
+                continue
             m = lane_mask.reshape((1,) * ax + (-1,) +
                                   (1,) * (leaf.ndim - ax - 1))
             out[name] = jnp.where(m, leaf, old_cache[name])
@@ -113,42 +159,147 @@ class Engine:
             long_window=self.ecfg.long_window)
         return logits, self._mask_lanes(new_cache, cache, lane_mask)
 
-    # ------------------------------------------------------------- prefill --
-    def _run_prefill(self, admitted: List[Request]) -> None:
-        # oversized prompts (no bucket) go through chunked prefill alone
-        big = [r for r in admitted
-               if bucket_len(r.prompt_len, self.scheduler.prefill_buckets)
-               is None]
-        for r in big:
-            self._run_chunked_prefill(r)
-        admitted = [r for r in admitted if r not in big]
-        if not admitted:
-            return
+    # -------------------------------------------------------------- common --
+    def _sample(self, logits) -> np.ndarray:
+        self.key, sub = jax.random.split(self.key)
+        sp = self.ecfg.sampling
+        return np.asarray(sample(logits, sub, temperature=sp.temperature,
+                                 top_k=sp.top_k, top_p=sp.top_p))
+
+    def _emit(self, req: Request, tok: int, now: float,
+              first: bool) -> None:
+        req.output.append(tok)
+        self.stats.generated_tokens += 1
+        if first:
+            req.prefill_time = now
+
+    def _finish_done(self, reqs: List[Request]) -> None:
+        done = [r for r in reqs if r.done()]
+        now = time.perf_counter()
+        for r in done:
+            r.finish_time = now
+            self.scheduler.finish(r)
+
+    def _update_pool_stats(self) -> None:
+        mgr = self.scheduler.manager
+        s = self.stats
+        s.pool_pages = mgr.num_pages
+        s.pages_in_use = mgr.pages_in_use
+        s.peak_pages_in_use = max(s.peak_pages_in_use, mgr.pages_in_use)
+        s.fresh_pages_allocated = mgr.fresh_pages_allocated
+        s.prefix_cache_queries = mgr.prefix_queries
+        s.prefix_cache_hits = mgr.prefix_hits
+        s.preemptions = self.scheduler.preemptions
+        s.rejected = len(self.scheduler.rejected)
+
+    # -------------------------------------------------- mixed (dense/moe) --
+    def _run_mixed(self, plan: StepPlan) -> None:
+        """One device call for the whole step: prefill chunks + decode
+        tokens through the chunked-continuation path (a decode lane is a
+        chunk of length 1)."""
+        B = self.ecfg.num_lanes
+        NP = self.scheduler.pages_per_lane
+        mgr = self.scheduler.manager
+        S = bucket_len(max([c.n for c in plan.prefill] or [1]),
+                       self.scheduler.prefill_buckets) or \
+            max(c.n for c in plan.prefill)
+
+        tokens = np.zeros((B, S), np.int32)
+        positions = np.zeros((B, S), np.int32)
+        slot_idx = np.full((B, S), -1, np.int32)     # Eq. 5 SkipSet: pads
+        page_table = np.full((B, NP), -1, np.int32)
+        cache_len = np.zeros(B, np.int32)
+        last_pos = np.zeros(B, np.int32)
+        lane_mask = np.zeros(B, bool)
+
+        for c in plan.prefill:
+            lane, n = c.req.lane, c.n
+            tokens[lane, :n] = c.tokens
+            positions[lane] = np.minimum(c.start + np.arange(S),
+                                         c.start + n - 1)
+            slot_idx[lane, :n] = mgr.slot_indices(
+                c.req.pool_id, np.arange(c.start, c.start + n))
+            page_table[lane] = self.scheduler.page_table(c.req)
+            cache_len[lane] = c.start + n
+            last_pos[lane] = n - 1
+            lane_mask[lane] = True
+        for d in plan.decode:
+            lane = d.req.lane
+            tokens[lane, 0] = d.req.output[-1]
+            positions[lane] = d.pos
+            slot_idx[lane, 0] = d.slot
+            page_table[lane] = self.scheduler.page_table(d.req)
+            cache_len[lane] = d.pos + 1
+            last_pos[lane] = 0
+            lane_mask[lane] = True
+
+        batch = {"tokens": jnp.asarray(tokens),
+                 "positions": jnp.asarray(positions),
+                 "slot_idx": jnp.asarray(slot_idx),
+                 "page_table": jnp.asarray(page_table),
+                 "cache_len": jnp.asarray(cache_len),
+                 "last_pos": jnp.asarray(last_pos)}
+        t0 = time.perf_counter()
+        logits, self.cache = self._prefill_fn(self.params, batch, self.cache,
+                                              jnp.asarray(lane_mask))
+        logits.block_until_ready()
+        dt = time.perf_counter() - t0
+        if plan.decode:
+            self.stats.decode_time += dt
+            self.stats.decode_steps += 1
+            if plan.prefill:
+                self.stats.mixed_steps += 1
+        else:
+            self.stats.prefill_time += dt
+        if plan.prefill:
+            self.stats.prefill_calls += 1
+
+        toks = self._sample(logits)
+        now = time.perf_counter()
+        for c in plan.prefill:
+            self.scheduler.note_prefilled(c.req, c.n)
+            if c.final:
+                self._emit(c.req, int(toks[c.req.lane]), now, first=True)
+        for d in plan.decode:
+            self._emit(d.req, int(toks[d.req.lane]), now, first=False)
+        self._finish_done([c.req for c in plan.prefill if c.final] +
+                          [d.req for d in plan.decode])
+
+    # --------------------------------------- monolithic prefill (others) --
+    def _run_prefill(self, chunks: List[PrefillChunk]) -> None:
+        """Bucketed whole-prompt prefill for families without the chunked
+        continuation path (mla/vlm/whisper/rwkv6/griffin)."""
         B = self.ecfg.num_lanes
         off = self._patch_offset
-        bucket = max(bucket_len(r.prompt_len, self.scheduler.prefill_buckets)
-                     for r in admitted)
+        mgr = self.scheduler.manager
+        bucket = max(bucket_len(c.req.prompt_len + c.req.num_generated,
+                                self.scheduler.prefill_buckets)
+                     for c in chunks)
         S = off + bucket
         tokens = np.zeros((B, bucket), np.int32)
         slot_idx = np.full((B, S), -1, np.int32)       # Eq. 5 SkipSet: pads
         pad_mask = np.zeros((B, S), bool)
+        cache_len = np.zeros(B, np.int32)
         last_pos = np.zeros(B, np.int32)
         lane_mask = np.zeros(B, bool)
-        for r in admitted:
-            plen = r.prompt_len
-            tokens[r.lane, :plen] = r.prompt
-            mgr = self.scheduler.managers[r.lane]
-            # lane-local physical slots for positions [0, off + plen)
+        for c in chunks:
+            r = c.req
+            eff = r.effective_prompt()
+            plen = len(eff)
+            tokens[r.lane, :plen] = eff
+            # lane pages -> global slots for positions [0, off + plen)
             # (vlm: patch embeddings occupy the leading ``off`` positions)
             pos = np.arange(off + plen)
-            slot_idx[r.lane, :off + plen] = mgr.slot_indices(r.req_id, pos)
+            slot_idx[r.lane, :off + plen] = mgr.slot_indices(r.pool_id, pos)
             pad_mask[r.lane, :off + plen] = True
+            cache_len[r.lane] = off + plen
             last_pos[r.lane] = off + plen - 1
             lane_mask[r.lane] = True
 
         batch = {"tokens": jnp.asarray(tokens),
                  "slot_idx": jnp.asarray(slot_idx),
                  "pad_mask": jnp.asarray(pad_mask),
+                 "cache_len": jnp.asarray(cache_len),
                  "last_pos": jnp.asarray(last_pos)}
         if self.cfg.family == "vlm":
             batch["patches"] = jnp.zeros((B, off, self.cfg.d_model),
@@ -164,68 +315,40 @@ class Engine:
         self.stats.prefill_time += time.perf_counter() - t0
         self.stats.prefill_calls += 1
 
-        self.key, sub = jax.random.split(self.key)
-        sp = self.ecfg.sampling
-        toks = np.asarray(sample(logits, sub, temperature=sp.temperature,
-                                 top_k=sp.top_k, top_p=sp.top_p))
+        toks = self._sample(logits)
         now = time.perf_counter()
-        for r in admitted:
-            r.output.append(int(toks[r.lane]))
-            r.prefill_time = now
-            self.stats.generated_tokens += 1
-
-    def _run_chunked_prefill(self, r: Request) -> None:
-        """Sarathi-style continuation prefill for prompts longer than the
-        largest bucket: fixed-size chunks with absolute positions, each
-        chunk attending over the whole cache (dense/moe families)."""
-        B = self.ecfg.num_lanes
-        C = self.scheduler.prefill_buckets[-1]
-        plen = r.prompt_len
-        mgr = self.scheduler.managers[r.lane]
-        lane_mask = np.zeros(B, bool)
-        lane_mask[r.lane] = True
-        nchunk = (plen + C - 1) // C
-        t0 = time.perf_counter()
-        for ci in range(nchunk):
-            lo = ci * C
-            valid = min(C, plen - lo)
-            tokens = np.zeros((B, C), np.int32)
-            tokens[r.lane, :valid] = r.prompt[lo:lo + valid]
-            slot_idx = np.full((B, C), -1, np.int32)
-            slot_idx[r.lane, :valid] = mgr.slot_indices(
-                r.req_id, np.arange(lo, lo + valid))
-            positions = np.broadcast_to(np.arange(lo, lo + C),
-                                        (B, C)).astype(np.int32)
-            batch = {"tokens": jnp.asarray(tokens),
-                     "slot_idx": jnp.asarray(slot_idx),
-                     "positions": jnp.asarray(positions),
-                     "last_pos": jnp.full((B,), valid - 1, jnp.int32)}
-            logits, self.cache = self._prefill_fn(
-                self.params, batch, self.cache, jnp.asarray(lane_mask))
-        logits.block_until_ready()
-        self.stats.prefill_time += time.perf_counter() - t0
-        self.stats.prefill_calls += 1
-
-        self.key, sub = jax.random.split(self.key)
-        sp = self.ecfg.sampling
-        toks = np.asarray(sample(logits, sub, temperature=sp.temperature,
-                                 top_k=sp.top_k, top_p=sp.top_p))
-        r.output.append(int(toks[r.lane]))
-        r.prefill_time = time.perf_counter()
-        self.stats.generated_tokens += 1
+        for c in chunks:
+            # monolithic prefill covers the modality-stub prefix too — the
+            # chunk carries only text tokens, but ``off`` patch positions
+            # were written as well
+            self.scheduler.note_prefilled(c.req, off + c.n)
+            self._emit(c.req, int(toks[c.req.lane]), now, first=True)
+        self._finish_done([c.req for c in chunks])
 
     # -------------------------------------------------------------- decode --
-    def _run_decode(self) -> None:
+    def _run_decode(self, items: List[DecodeItem]) -> None:
         B = self.ecfg.num_lanes
+        NP = self.scheduler.pages_per_lane
         tokens = np.zeros((B, 1), np.int32)
+        positions = np.zeros((B, 1), np.int32)
+        slots = np.full((B, 1), -1, np.int32)
+        page_table = np.full((B, NP), -1, np.int32)
+        cache_len = np.zeros(B, np.int32)
         lane_mask = np.zeros(B, bool)
-        for lane, r in self.scheduler.running.items():
-            tokens[lane, 0] = r.output[-1]
+        for d in items:
+            lane = d.req.lane
+            tokens[lane, 0] = d.req.output[-1]
+            positions[lane, 0] = d.pos
+            slots[lane, 0] = d.slot
+            page_table[lane] = self.scheduler.page_table(d.req)
+            cache_len[lane] = d.pos + 1
             lane_mask[lane] = True
-        slots = self.scheduler.decode_slots()[:, None]   # (B,1), -1 idle
 
         batch = {"token": jnp.asarray(tokens),
-                 "slot_idx": jnp.asarray(slots)}
+                 "positions": jnp.asarray(positions),
+                 "slot_idx": jnp.asarray(slots),
+                 "page_table": jnp.asarray(page_table),
+                 "cache_len": jnp.asarray(cache_len)}
         t0 = time.perf_counter()
         logits, self.cache = self._decode_fn(self.params, batch, self.cache,
                                              jnp.asarray(lane_mask))
@@ -233,30 +356,29 @@ class Engine:
         self.stats.decode_time += time.perf_counter() - t0
         self.stats.decode_steps += 1
 
-        self.key, sub = jax.random.split(self.key)
-        sp = self.ecfg.sampling
-        toks = np.asarray(sample(logits, sub, temperature=sp.temperature,
-                                 top_k=sp.top_k, top_p=sp.top_p))
-        finished = []
-        for lane, r in self.scheduler.running.items():
-            r.output.append(int(toks[lane]))
-            self.stats.generated_tokens += 1
-            if r.done():
-                r.finish_time = time.perf_counter()
-                finished.append(r)
-        for r in finished:
-            self.scheduler.finish(r)
+        toks = self._sample(logits)
+        now = time.perf_counter()
+        for d in items:
+            self._emit(d.req, int(toks[d.req.lane]), now, first=False)
+        self._finish_done([d.req for d in items])
 
     # ---------------------------------------------------------------- API --
     def add_request(self, req: Request) -> None:
         self.scheduler.add_request(req)
 
     def step(self) -> None:
-        admitted = self.scheduler.schedule_prefills()
-        if admitted:
-            self._run_prefill(admitted)
-        elif self.scheduler.running:
-            self._run_decode()
+        plan = self.scheduler.schedule_step()
+        if plan.empty:
+            self._update_pool_stats()       # rejections still count
+            return
+        if self._chunked and plan.prefill:
+            self._run_mixed(plan)           # decode + prefill, one call
+        else:
+            if plan.prefill:
+                self._run_prefill(plan.prefill)
+            if plan.decode:
+                self._run_decode(plan.decode)
+        self._update_pool_stats()
 
     def run(self, max_steps: int = 100_000) -> None:
         steps = 0
@@ -265,11 +387,20 @@ class Engine:
             steps += 1
 
     def generate(self, prompts: Sequence[np.ndarray], max_new_tokens: int = 32,
-                 eos_token: Optional[int] = None) -> List[List[int]]:
+                 eos_token: Optional[int] = None,
+                 return_requests: bool = False):
+        """Serve ``prompts`` to completion. Returns the per-prompt output
+        token lists (or the full Request objects with ``return_requests`` —
+        inspect ``state`` to distinguish FINISHED from REJECTED; rejected
+        requests surface with empty output and are counted in
+        ``stats.rejected``)."""
         reqs = [Request(req_id=1000 + i, prompt=np.asarray(p, np.int32),
-                        max_new_tokens=max_new_tokens, eos_token=eos_token)
+                        max_new_tokens=max_new_tokens, eos_token=eos_token,
+                        arrival_time=float(i))
                 for i, p in enumerate(prompts)]
         for r in reqs:
             self.add_request(r)
         self.run()
+        if return_requests:
+            return reqs
         return [r.output for r in reqs]

@@ -1,4 +1,17 @@
-"""Inference request lifecycle (vLLM-style)."""
+"""Inference request lifecycle (vLLM-style).
+
+States: WAITING -> RUNNING -> FINISHED, plus
+  REJECTED  — can never be served (prompt + generation budget exceeds the
+              per-request cap, or no prefill bucket fits a non-chunkable
+              family). Surfaced by ``Engine.generate`` instead of silently
+              returning an empty output.
+  PREEMPTED — evicted mid-flight by the token-budget scheduler to relieve
+              pool pressure (OutOfBlocks); its non-shared pages were freed
+              and it waits at the FRONT of the queue. On re-admission the
+              effective prompt is ``prompt + output`` (everything generated
+              so far is re-prefilled — possibly straight from the prefix
+              cache), so greedy decoding resumes token-for-token.
+"""
 from __future__ import annotations
 
 import enum
@@ -12,6 +25,8 @@ class RequestState(enum.Enum):
     WAITING = "waiting"
     RUNNING = "running"
     FINISHED = "finished"
+    REJECTED = "rejected"
+    PREEMPTED = "preempted"
 
 
 @dataclass
@@ -26,6 +41,13 @@ class Request:
     state: RequestState = RequestState.WAITING
     lane: int = -1                           # engine batch lane
     output: List[int] = field(default_factory=list)
+    num_computed: int = 0                    # prompt tokens with KV in cache
+    prefill_target: int = 0                  # prompt tokens to compute (set
+                                             # at admission; fixed until
+                                             # preemption re-admits)
+    num_preemptions: int = 0
+    pool_id: int = -1                        # BlockManager key (engine-unique,
+                                             # reassigned on re-admission)
     prefill_time: float = -1.0               # first-token timestamp
     finish_time: float = -1.0
 
@@ -40,6 +62,14 @@ class Request:
     @property
     def total_len(self) -> int:
         return self.prompt_len + self.num_generated
+
+    def effective_prompt(self) -> np.ndarray:
+        """What prefill must (re)compute: the prompt plus everything already
+        generated — identical greedy continuation after preemption."""
+        if not self.output:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.output, np.int32)])
 
     def done(self) -> bool:
         if self.num_generated >= self.max_new_tokens:

@@ -1,24 +1,39 @@
-"""Continuous-batching scheduler (vLLM-style, lane-based).
+"""Token-budget continuous-batching scheduler over ONE shared paged-KV pool.
 
-The engine exposes ``num_lanes`` batch lanes, each backed by a private paged
-pool of ``max_len`` tokens (JetStream-style static allocation — XLA-friendly;
-DESIGN.md §3 "allocator mismatch" adaptation). The scheduler:
+The engine exposes ``num_lanes`` batch lanes, but — unlike the old
+JetStream-style static partition — lanes do NOT own private page pools: all
+lanes draw pages from a single refcounted ``BlockManager`` (prefix-cached,
+LRU-evicted), so memory follows actual sequence lengths instead of reserving
+``max_len`` per lane (the paper §2 allocator-fragmentation bottleneck).
 
-  * admits WAITING requests into free lanes when their prompt + generation
-    budget fits the lane's page pool,
-  * groups the admissions of one step into a single bucketed prefill,
-  * evicts FINISHED requests and recycles lanes,
-  * tracks per-lane BlockManagers so slot indices (and the Opt-KV SkipSet for
-    padding) are exactly the paper's Eq. 5 write-filter inputs.
+Each engine step is composed under a TOKEN BUDGET (Sarathi-style):
+
+  * every running, prefill-complete request contributes one decode token;
+  * the remaining budget is filled with prefill work — continuation chunks
+    of partially-prefilled prompts first, then new admissions (possibly
+    only the first chunk of a long prompt). For chunk-capable families
+    (dense/moe) the engine executes decode tokens and prefill chunks in ONE
+    device call; other families get one prefill + one decode call per step.
+  * prefix-cache hits shrink a new request's prefill to the uncached tail
+    (full shared pages are reused copy-on-write, never recomputed);
+  * on ``OutOfBlocks`` the YOUNGEST running request is preempted — its
+    non-shared pages freed, its registered pages parked in the prefix
+    cache, and the request requeued at the front with
+    ``effective_prompt = prompt + output`` so greedy decoding resumes
+    token-for-token instead of the engine crashing;
+  * requests that can NEVER be served (prompt + generation budget over the
+    per-request cap ``max_len``, or no bucket for a non-chunkable family)
+    are marked ``REJECTED`` and surfaced, not silently dropped.
 """
 from __future__ import annotations
 
 from collections import deque
+from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
-from repro.cache.block_manager import BlockManager
+from repro.cache.block_manager import BlockManager, OutOfBlocks
 from repro.serving.request import Request, RequestState
 
 
@@ -29,74 +44,230 @@ def bucket_len(n: int, buckets: List[int]) -> Optional[int]:
     return None
 
 
+@dataclass
+class PrefillChunk:
+    req: Request
+    start: int                 # logical position of the chunk's first token
+    tokens: np.ndarray         # (n,) token ids fed this step
+    final: bool                # completes the prompt -> sample first token
+
+    @property
+    def n(self) -> int:
+        return int(len(self.tokens))
+
+
+@dataclass
+class DecodeItem:
+    req: Request
+    pos: int                   # logical position of the fed token
+    slot: int                  # global flat slot receiving its KV
+
+
+@dataclass
+class StepPlan:
+    prefill: List[PrefillChunk] = field(default_factory=list)
+    decode: List[DecodeItem] = field(default_factory=list)
+
+    @property
+    def empty(self) -> bool:
+        return not self.prefill and not self.decode
+
+
 class Scheduler:
     def __init__(self, num_lanes: int, max_len: int, page_size: int,
                  prefill_buckets: List[int], extra_tokens: int = 0,
-                 allow_chunked: bool = False):
+                 allow_chunked: bool = False,
+                 token_budget: Optional[int] = None,
+                 enable_prefix_cache: bool = True):
         self.num_lanes = num_lanes
-        self.max_len = max_len
+        self.max_len = max_len                 # per-REQUEST cap, not per-lane
         self.page_size = page_size
         self.prefill_buckets = sorted(prefill_buckets)
-        self.extra_tokens = extra_tokens     # modality-stub prefix (vlm)
-        # prompts longer than the largest bucket are admitted and prefilled
-        # chunk-by-chunk (Sarathi-style) when the model family supports it
+        self.extra_tokens = extra_tokens       # modality-stub prefix (vlm)
         self.allow_chunked = allow_chunked
+        self.token_budget = token_budget or max(self.prefill_buckets)
         self.waiting: Deque[Request] = deque()
-        self.running: Dict[int, Request] = {}        # lane -> request
+        self.running: Dict[int, Request] = {}            # lane -> request
         self.free_lanes: List[int] = list(range(num_lanes - 1, -1, -1))
-        pages = (max_len + page_size - 1) // page_size
-        self.managers = [BlockManager(pages, page_size)
-                         for _ in range(num_lanes)]
+        self.pages_per_lane = (max_len + page_size - 1) // page_size
+        # ONE pool for all lanes; the final page is reserved so its last
+        # line can serve as the Pallas write kernel's SkipSet sentinel.
+        total = max(num_lanes * self.pages_per_lane - 1, 1)
+        # prefix reuse needs the chunked continuation path (skipped tokens
+        # must still be attendable); monolithic-prefill families recompute.
+        self.manager = BlockManager(
+            total, page_size,
+            enable_prefix_cache=enable_prefix_cache and allow_chunked)
+        self.preemptions = 0
+        self.rejected: List[Request] = []
+        self._next_pool_id = 0             # engine-unique allocator keys
+                                           # (req_ids may collide across
+                                           # streams; the pool must not)
 
     # -------------------------------------------------------------- admit --
     def add_request(self, req: Request) -> None:
         self.waiting.append(req)
 
-    def schedule_prefills(self) -> List[Request]:
-        """Pop admissible requests into free lanes (one scheduling step)."""
-        admitted = []
-        while self.waiting and self.free_lanes:
-            req = self.waiting[0]
-            if req.prompt_len + self.extra_tokens + req.max_new_tokens \
-                    > self.max_len:
-                # request can never fit: reject (truncate policy lives here)
-                self.waiting.popleft()
-                req.state = RequestState.FINISHED
+    def _target(self, req: Request) -> int:
+        """Prompt-side tokens that must be in the cache before decoding
+        (frozen at admission — generated tokens arrive via decode slots,
+        not prefill chunks)."""
+        return req.prefill_target
+
+    def _reject(self, req: Request) -> None:
+        req.state = RequestState.REJECTED
+        self.rejected.append(req)
+
+    def _youngest_running(self, exclude: Optional[Request] = None):
+        cands = [r for r in self.running.values() if r is not exclude]
+        if not cands:
+            return None
+        return max(cands, key=lambda r: (r.arrival_time, r.req_id))
+
+    def preempt(self, req: Request) -> None:
+        """Evict a running request: free its references (shared pages stay
+        alive under their other owners / the prefix cache) and requeue it at
+        the FRONT with everything-so-far as its new prompt."""
+        self.manager.free(req.pool_id)
+        del self.running[req.lane]
+        self.free_lanes.append(req.lane)
+        req.lane = -1
+        req.num_computed = 0
+        req.num_preemptions += 1
+        req.state = RequestState.PREEMPTED
+        self.waiting.appendleft(req)
+        self.preemptions += 1
+
+    def _append_with_preemption(self, req: Request) -> Optional[int]:
+        """Grow ``req`` by one decode slot, preempting the youngest running
+        request on pool exhaustion. Returns None if ``req`` itself was the
+        youngest and had to be preempted."""
+        while True:
+            try:
+                return self.manager.append_token(req.pool_id)
+            except OutOfBlocks:
+                victim = self._youngest_running(exclude=req)
+                if victim is None or _younger(req, victim):
+                    self.preempt(req)
+                    return None
+                self.preempt(victim)
+
+    # --------------------------------------------------------------- plan --
+    def schedule_step(self) -> StepPlan:
+        """Compose one engine step under the token budget."""
+        plan = StepPlan()
+        budget = self.token_budget
+        mgr = self.manager
+
+        # 1) decode: every prefill-complete running request, oldest first
+        #    (so OutOfBlocks preemption always hits a not-yet-planned,
+        #    younger victim).
+        decode_reqs = sorted(
+            (r for r in self.running.values()
+             if r.num_computed >= self._target(r)),
+            key=lambda r: (r.arrival_time, r.req_id))
+        for r in decode_reqs:
+            if budget <= 0:
+                break
+            if r.state is not RequestState.RUNNING:
+                continue                               # preempted this step
+            slot = self._append_with_preemption(r)
+            if slot is None:
                 continue
-            if bucket_len(req.prompt_len, self.prefill_buckets) is None \
+            plan.decode.append(
+                DecodeItem(r, pos=mgr.num_tokens(r.pool_id) - 1, slot=slot))
+            budget -= 1
+
+        # 2) continuation chunks of partially-prefilled prompts
+        chunk_cap = max(self.prefill_buckets)
+        for r in sorted(self.running.values(),
+                        key=lambda r: (r.arrival_time, r.req_id)):
+            tgt = self._target(r)
+            if r.num_computed >= tgt or budget <= 0:
+                continue
+            n = min(tgt - r.num_computed, budget, chunk_cap)
+            eff = r.effective_prompt()
+            lo = r.num_computed
+            plan.prefill.append(PrefillChunk(
+                r, start=lo,
+                tokens=eff[max(lo - self.extra_tokens, 0):
+                           lo - self.extra_tokens + n],
+                final=(r.num_computed + n >= tgt)))
+            budget -= n
+
+        # 3) admissions
+        while self.waiting and self.free_lanes and budget > 0:
+            r = self.waiting[0]
+            eff = r.effective_prompt()
+            total = len(eff) + self.extra_tokens
+            cap = min(self.max_len, self.manager.num_pages * self.page_size)
+            if total + (r.max_new_tokens - r.num_generated) > cap:
+                self.waiting.popleft()
+                self._reject(r)
+                continue
+            # buckets size the TEXT tokens; the modality-stub prefix is
+            # appended by the engine on top of the bucket (S = off + bucket)
+            if bucket_len(len(eff), self.prefill_buckets) is None \
                     and not self.allow_chunked:
                 self.waiting.popleft()
-                req.state = RequestState.FINISHED
+                self._reject(r)
                 continue
-            lane = self.free_lanes.pop()
+            if not self.allow_chunked and len(eff) > budget:
+                break              # monolithic prefill must fit this step
+            pool_id = self._next_pool_id
+            try:
+                _, cached = mgr.allocate(
+                    pool_id, total,
+                    token_ids=eff if self.allow_chunked else None)
+            except OutOfBlocks:
+                break              # admission never preempts running work
+            self._next_pool_id += 1
+            r.pool_id = pool_id
             self.waiting.popleft()
-            req.lane = lane
-            req.state = RequestState.RUNNING
-            mgr = self.managers[lane]
-            mgr.allocate(seq_id=req.req_id,
-                         num_tokens=req.prompt_len + self.extra_tokens)
-            self.running[lane] = req
-            admitted.append(req)
-        return admitted
+            lane = self.free_lanes.pop()
+            r.lane = lane
+            r.state = RequestState.RUNNING
+            r.num_computed = cached
+            r.prefill_target = total
+            self.running[lane] = r
+            n = min(total - cached, budget, chunk_cap) \
+                if self.allow_chunked else total
+            lo = cached
+            plan.prefill.append(PrefillChunk(
+                r, start=lo,
+                tokens=eff[max(lo - self.extra_tokens, 0):
+                           lo - self.extra_tokens + n],
+                final=(cached + n >= total)))
+            budget -= n
+        return plan
 
-    # -------------------------------------------------------------- decode --
-    def active_lanes(self) -> List[int]:
-        return sorted(self.running)
-
-    def decode_slots(self) -> np.ndarray:
-        """Per-lane flat slot for the next generated token (-1 = idle lane)."""
-        slots = np.full(self.num_lanes, -1, np.int32)
-        for lane, req in self.running.items():
-            slots[lane] = self.managers[lane].append_token(req.req_id)
-        return slots
+    # ---------------------------------------------------------- execution --
+    def note_prefilled(self, req: Request, n: int) -> None:
+        """Engine callback after a chunk's KV landed on device: advance the
+        request and register now-complete full pages for prefix reuse."""
+        req.num_computed += n
+        if self.allow_chunked:
+            self.manager.commit_prefill(req.pool_id, req.num_computed,
+                                        token_ids=req.effective_prompt())
 
     def finish(self, req: Request) -> None:
         req.state = RequestState.FINISHED
-        self.managers[req.lane].free(req.req_id)
+        self.manager.free(req.pool_id)
         del self.running[req.lane]
         self.free_lanes.append(req.lane)
         req.lane = -1
 
+    # ------------------------------------------------------------ queries --
+    def active_lanes(self) -> List[int]:
+        return sorted(self.running)
+
+    def page_table(self, req: Request) -> np.ndarray:
+        return self.manager.page_table(req.pool_id, self.pages_per_lane)
+
     @property
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
+
+
+def _younger(a: Request, b: Request) -> bool:
+    return (a.arrival_time, a.req_id) > (b.arrival_time, b.req_id)

@@ -1,0 +1,89 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (see conftest.py).
+
+The container image does not ship hypothesis (it IS declared in the ``dev``
+extra of pyproject.toml — CI installs the real thing). Rather than letting
+five test modules die at collection and abort the whole tier-1 run, conftest
+registers this shim when the real package is missing: ``@given`` draws a
+fixed number of examples from a seeded RNG, so the property tests still
+exercise their invariants, just without shrinking/database/replay.
+
+Only the API surface these tests use is implemented: ``given``, ``settings``
+and ``strategies.{integers, floats, booleans, sampled_from, lists, tuples}``.
+"""
+from __future__ import annotations
+
+import types
+
+import numpy as np
+
+DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _floats(min_value, max_value, **_):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def _booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def _sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+
+def _lists(elem, min_size=0, max_size=10, **_):
+    return _Strategy(lambda rng: [
+        elem.example(rng)
+        for _ in range(int(rng.integers(min_size, max_size + 1)))])
+
+
+def _tuples(*elems):
+    return _Strategy(lambda rng: tuple(e.example(rng) for e in elems))
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.floats = _floats
+strategies.booleans = _booleans
+strategies.sampled_from = _sampled_from
+strategies.lists = _lists
+strategies.tuples = _tuples
+
+
+def given(*arg_strats, **kw_strats):
+    def deco(fn):
+        # NOTE: the wrapper deliberately takes no parameters and does not
+        # copy fn's signature — pytest must not mistake strategy params for
+        # fixtures.
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", DEFAULT_EXAMPLES)
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                args = [s.example(rng) for s in arg_strats]
+                kwargs = {k: s.example(rng) for k, s in kw_strats.items()}
+                fn(*args, **kwargs)
+        wrapper.__name__ = getattr(fn, "__name__", "given_wrapper")
+        wrapper.__doc__ = getattr(fn, "__doc__", None)
+        wrapper.__module__ = getattr(fn, "__module__", __name__)
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = DEFAULT_EXAMPLES, deadline=None, **_):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

@@ -1,4 +1,5 @@
-"""BlockManager free-list properties (hypothesis)."""
+"""Global refcounted BlockManager: free-list, prefix-cache and LRU
+properties (hypothesis)."""
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -8,8 +9,8 @@ from repro.cache.block_manager import BlockManager, OutOfBlocks
 
 def test_allocate_free_roundtrip():
     m = BlockManager(num_pages=8, page_size=16)
-    pages = m.allocate(seq_id=1, num_tokens=40)     # 3 pages
-    assert len(pages) == 3 and m.free_pages == 5
+    pages, cached = m.allocate(seq_id=1, num_tokens=40)     # 3 pages
+    assert len(pages) == 3 and cached == 0 and m.free_pages == 5
     m.free(1)
     assert m.free_pages == 8
 
@@ -19,8 +20,8 @@ def test_append_token_grows_pages():
     m.allocate(1, 4)                                 # exactly one page
     slot = m.append_token(1)                         # needs a new page
     assert m.num_tokens(1) == 5
-    assert slot // 4 != m.page_table(1)[0] or True   # new page allocated
     assert m.free_pages == 6
+    assert slot == m.page_table(1)[1] * 4            # first slot of page 2
 
 
 def test_out_of_blocks_raises():
@@ -46,24 +47,87 @@ def test_fragmentation_metric():
     assert abs(m.fragmentation() - (1 - 17 / 32)) < 1e-9
 
 
+# ------------------------------------------------------- prefix caching ----
+def test_prefix_cache_hit_shares_pages():
+    """Two sequences with a shared 2-page prefix allocate the pages ONCE."""
+    m = BlockManager(8, page_size=4)
+    toks = list(range(11))                           # 2 full pages + tail
+    p1, cached1 = m.allocate(1, 11, token_ids=toks)
+    assert cached1 == 0
+    m.commit_prefill(1, 11, token_ids=toks)          # registers pages 0..1
+    p2, cached2 = m.allocate(2, 11, token_ids=toks)
+    assert cached2 == 8                              # 2 full pages reused
+    assert p2[:2] == p1[:2] and p2[2] != p1[2]       # tail page is fresh
+    assert m.prefix_hits == 2
+    # pool accounting: 4 unique pages live, not 6
+    assert m.pages_in_use == 4
+
+
+def test_prefix_cache_never_matches_whole_prompt():
+    """At least one token is always recomputed (prefill must emit logits)."""
+    m = BlockManager(8, page_size=4)
+    toks = list(range(8))                            # exactly 2 pages
+    m.allocate(1, 8, token_ids=toks)
+    m.commit_prefill(1, 8, token_ids=toks)
+    _, cached = m.allocate(2, 8, token_ids=toks)
+    assert cached == 4                               # page 2 NOT matched
+
+
+def test_freed_registered_pages_park_in_lru_then_evict():
+    m = BlockManager(4, page_size=4)
+    toks = list(range(8))
+    m.allocate(1, 8, token_ids=toks)
+    m.commit_prefill(1, 8, token_ids=toks)
+    m.free(1)
+    assert m.free_pages == 2 and m.evictable_pages == 2
+    # a cold hit resurrects them
+    _, cached = m.allocate(2, 9, token_ids=toks + [99])
+    assert cached == 8                               # both full pages hit
+    m.free(2)
+    # allocation pressure evicts the LRU entries
+    m.allocate(3, 16)                                # needs all 4 pages
+    assert m.evictable_pages == 0 and m.evictions >= 1
+    # the cache no longer serves the evicted prefix
+    m.free(3)
+    _, cached = m.allocate(4, 8, token_ids=toks)
+    assert cached == 0
+
+
+def test_refcounted_free_keeps_shared_pages_alive():
+    m = BlockManager(8, page_size=4)
+    toks = list(range(9))
+    m.allocate(1, 9, token_ids=toks)
+    m.commit_prefill(1, 9, token_ids=toks)
+    m.allocate(2, 9, token_ids=toks)                 # shares 2 pages
+    m.free(1)                                        # seq 2 still holds them
+    table = m.page_table(2)
+    # gathering seq 2's pages must still be legal (pages not on free list)
+    assert all(p not in m._free for p in table.tolist())
+    m.free(2)
+
+
 @settings(max_examples=30, deadline=None)
 @given(st.lists(st.tuples(st.integers(1, 60), st.booleans()),
                 min_size=1, max_size=30))
 def test_no_double_allocation_property(ops):
-    """Pages handed out concurrently are always disjoint; free returns
-    exactly what was allocated."""
+    """Pages referenced by live sequences are disjoint from the free list
+    and the LRU; every page is accounted for exactly once."""
     m = BlockManager(num_pages=64, page_size=8)
     live = {}
     for i, (ntok, do_free) in enumerate(ops):
-        need = (ntok + 7) // 8
-        if need <= m.free_pages:
-            pages = m.allocate(i, ntok)
+        toks = list(range(i, i + ntok))              # mostly distinct
+        if m.can_allocate(ntok):
+            pages, cached = m.allocate(i, ntok, token_ids=toks)
+            m.commit_prefill(i, ntok, token_ids=toks)
             live[i] = pages
         if do_free and live:
             sid = next(iter(live))
             m.free(sid)
             del live[sid]
-        # invariant: all live pages disjoint
-        flat = [p for ps in live.values() for p in ps]
-        assert len(flat) == len(set(flat))
-        assert len(flat) + m.free_pages == 64
+        # invariants: live pages never on the free list or evictable list;
+        # free + evictable + referenced == total
+        flat = {p for ps in live.values() for p in ps}
+        assert not (flat & set(m._free))
+        assert not (flat & set(m._lru))
+        assert len(flat) == m.pages_in_use
+        assert m.pages_in_use + m.free_pages + m.evictable_pages == 64

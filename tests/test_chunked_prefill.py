@@ -1,6 +1,7 @@
 """Chunked prefill (Sarathi-style continuation) must equal monolithic
 prefill: same cache contents, same final logits, decode continues
-identically."""
+identically — now over the GLOBAL pool (chunks carry global slot indices
+under the lane-identity partition)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +9,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.core.coopt import COOPT, ORIGINAL
+from repro.core.opt_kv import identity_slots
 from repro.models import get_model
 
 
@@ -26,11 +28,13 @@ def test_chunked_equals_monolithic_prefill(arch, coopt):
                                         coopt)
 
     ch_cache = m.init_cache(B, S + 8, coopt)
+    P_total = ch_cache["kv"].shape[2]
     for i in range(0, S, C):
         pos = jnp.broadcast_to(jnp.arange(i, i + C), (B, C)).astype(jnp.int32)
+        slots = identity_slots(B, pos, P_total, coopt.page_size)
         ch_logits, ch_cache = m.prefill(
             p, {"tokens": toks[:, i:i + C], "positions": pos,
-                "slot_idx": pos}, ch_cache, coopt)
+                "slot_idx": slots}, ch_cache, coopt)
 
     np.testing.assert_array_equal(np.asarray(ch_cache["length"]),
                                   np.asarray(mono_cache["length"]))
@@ -47,6 +51,37 @@ def test_chunked_equals_monolithic_prefill(arch, coopt):
     d2, _ = m.decode_step(p, {"token": tok}, ch_cache, coopt)
     np.testing.assert_allclose(np.asarray(d1, np.float32),
                                np.asarray(d2, np.float32), atol=atol)
+
+
+def test_mixed_step_decode_lane_matches_pure_decode():
+    """A decode token fed through the chunked path (chunk of length 1, the
+    token-budget scheduler's mixed step) must produce the same logits as the
+    dedicated decode path — bf16 mode, exact schedule equivalence."""
+    cfg = get_config("qwen3-4b-reduced")
+    m = get_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    B, S = 1, 24
+    coopt = ORIGINAL
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    cache = m.init_cache(B, S + 8, coopt)
+    logits, cache = m.prefill(p, {"tokens": toks}, cache, coopt)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+
+    P_total = cache["kv"].shape[2]
+    pos = jnp.full((B, 1), S, jnp.int32)
+    slots = identity_slots(B, pos, P_total, coopt.page_size)
+    via_decode, _ = m.decode_step(
+        p, {"token": tok, "positions": pos, "slot_idx": slots,
+            "cache_len": jnp.full((B,), S + 1, jnp.int32)}, cache, coopt)
+    via_chunk, _ = m.prefill(
+        p, {"tokens": tok, "positions": pos, "slot_idx": slots,
+            "cache_len": jnp.full((B,), S + 1, jnp.int32),
+            "last_pos": jnp.zeros((B,), jnp.int32)}, cache, coopt)
+    a = np.asarray(via_decode, np.float32)
+    b = np.asarray(via_chunk, np.float32)
+    atol = 0.05 * max(np.abs(a).max(), 1.0)
+    np.testing.assert_allclose(a, b, atol=atol)
 
 
 def test_chunked_prefill_mla_raises():

@@ -1,4 +1,4 @@
-"""Opt-GQA (Eq. 7/8) and Opt-Pa (Eq. 9/10) numerics."""
+"""Opt-GQA (Eq. 7/8) and Opt-Pa (Eq. 9/10) numerics over the GLOBAL pool."""
 import math
 
 import jax
@@ -10,6 +10,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core.coopt import CoOptConfig, MODES
 from repro.core.opt_gqa import fold_queries, group_index, mha_to_gqa, \
     unfold_outputs
+from repro.core.opt_kv import identity_page_table
 from repro.core.opt_pa import paged_decode_attention
 from repro.cache.quant import quantize_fp8
 from repro.models.layers import causal_attention, repeat_kv
@@ -50,10 +51,12 @@ def test_grouped_equals_expanded_attention():
 
 # ------------------------------------------------------------- Opt-Pa ------
 def _paged(B=2, P=8, ps=16, Hq=8, Hkv=2, D=32, opt_kv=False, seed=0):
+    """Global pool holding B lanes x P pages each (lane-identity layout)."""
     ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    PT = B * P
     q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32)
-    k = jax.random.normal(ks[1], (B, P, ps, Hkv, D), jnp.float32)
-    v = jax.random.normal(ks[2], (B, P, ps, Hkv, D), jnp.float32)
+    k = jax.random.normal(ks[1], (PT, ps, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (PT, ps, Hkv, D), jnp.float32)
     if opt_kv:
         kq, ksc = quantize_fp8(k)
         vq, vsc = quantize_fp8(v)
@@ -88,6 +91,42 @@ def test_all_modes_agree_bf16():
     np.testing.assert_allclose(outs["original"], outs["opt-pa"], atol=2e-2)
 
 
+def test_explicit_page_table_matches_identity_default():
+    """Passing the lane-identity table explicitly == the default."""
+    q, kv, sc = _paged()
+    cl = jnp.array([100, 37], jnp.int32)
+    pt = identity_page_table(2, kv.shape[1])
+    a = paged_decode_attention(q, kv, sc, cl, coopt=MODES["opt-pa"])
+    b = paged_decode_attention(q, kv, sc, cl, coopt=MODES["opt-pa"],
+                               page_table=pt)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_permuted_page_table_matches_contiguous():
+    """A lane whose pages are scattered across the pool (the whole point of
+    the shared allocator) must attend identically to a contiguous lane with
+    the same logical content."""
+    B, P, ps, Hq, Hkv, D = 1, 4, 16, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32)
+    pages_k = jax.random.normal(ks[1], (P, ps, Hkv, D), jnp.float32)
+    pages_v = jax.random.normal(ks[2], (P, ps, Hkv, D), jnp.float32)
+    perm = [2, 0, 3, 1]                       # physical placement
+    scat_k = jnp.zeros((8, ps, Hkv, D)).at[jnp.array(perm)].set(pages_k)
+    scat_v = jnp.zeros((8, ps, Hkv, D)).at[jnp.array(perm)].set(pages_v)
+    cl = jnp.array([P * ps], jnp.int32)
+    a = paged_decode_attention(
+        q, jnp.stack([pages_k, pages_v]).astype(jnp.bfloat16), None, cl,
+        coopt=MODES["opt-pa"],
+        page_table=jnp.arange(P, dtype=jnp.int32)[None])
+    b = paged_decode_attention(
+        q, jnp.stack([scat_k, scat_v]).astype(jnp.bfloat16), None, cl,
+        coopt=MODES["opt-pa"],
+        page_table=jnp.array(perm, jnp.int32)[None])
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=1e-5)
+
+
 def test_fp8_mode_close_to_bf16():
     q, kvq, scq = _paged(opt_kv=True)
     _, kvb, _ = _paged(opt_kv=False)
@@ -114,9 +153,9 @@ def test_window_policy_drops_middle_tokens():
     """With a small window, only {sink + recent window} tokens attend."""
     B, P, ps, Hq, Hkv, D = 1, 8, 16, 4, 1, 32
     q = jnp.ones((B, Hq, D), jnp.float32)
-    k = jnp.zeros((B, P, ps, Hkv, D))
+    k = jnp.zeros((P, ps, Hkv, D))
     # middle token with huge key would dominate IF not skipped
-    k = k.at[0, 3, 0].set(100.0)
+    k = k.at[3, 0].set(100.0)
     v = jnp.ones_like(k)
     kv = jnp.stack([k, v]).astype(jnp.bfloat16)
     cl = jnp.array([128], jnp.int32)

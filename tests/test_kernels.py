@@ -1,5 +1,7 @@
 """Per-kernel allclose sweeps vs the pure-jnp oracles (ref.py), across
-shapes, dtypes and mode flags — interpret=True on CPU."""
+shapes, dtypes and mode flags — interpret=True on CPU. Layouts follow the
+GLOBAL paged pool (no batch dim on kv pages; lanes address the pool through
+scalar-prefetched page tables)."""
 import itertools
 
 import jax
@@ -8,36 +10,45 @@ import numpy as np
 import pytest
 
 from repro.cache.quant import quantize_fp8
-from repro.core.opt_kv import window_page_table
+from repro.core.opt_kv import (identity_page_table, logical_to_physical,
+                               window_page_table)
 from repro.kernels import ops, ref
 
 KEY = jax.random.PRNGKey(0)
 
 
-def _paged_inputs(B, P, ps, Hkv, G, D, opt_kv, seed=0):
+def _pool_inputs(B, P, ps, Hkv, G, D, opt_kv, seed=0):
+    """Pool of B*P pages, lane-identity partitioned."""
     ks = jax.random.split(jax.random.PRNGKey(seed), 3)
     Hq = Hkv * G
+    PT = B * P
     q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32).astype(jnp.bfloat16)
-    k = jax.random.normal(ks[1], (B, P, ps, Hkv, D), jnp.float32)
-    v = jax.random.normal(ks[2], (B, P, ps, Hkv, D), jnp.float32)
+    k = jax.random.normal(ks[1], (PT, ps, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (PT, ps, Hkv, D), jnp.float32)
+    phys = identity_page_table(B, PT)
+    log = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32)[None], (B, P))
     if opt_kv:
         kq, ksc = quantize_fp8(k)
         vq, vsc = quantize_fp8(v)
-        return q, jnp.stack([kq, vq]), jnp.stack([ksc, vsc])
-    return q, jnp.stack([k, v]).astype(jnp.bfloat16), None
+        return q, jnp.stack([kq, vq]), jnp.stack([ksc, vsc]), phys, log
+    return q, jnp.stack([k, v]).astype(jnp.bfloat16), None, phys, log
+
+
+def _scales(sc):
+    return (sc[0], sc[1]) if sc is not None else (None, None)
 
 
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("opt_kv,opt_pa,opt_gqa",
-                         list(itertools.product([False, True], repeat=3)))
-def test_paged_decode_all_modes(opt_kv, opt_pa, opt_gqa):
-    q, kv, sc = _paged_inputs(2, 8, 16, 2, 4, 128, opt_kv)
+@pytest.mark.parametrize("opt_kv,opt_gqa",
+                         list(itertools.product([False, True], repeat=2)))
+def test_pool_decode_modes(opt_kv, opt_gqa):
+    q, kv, sc, phys, log = _pool_inputs(2, 8, 16, 2, 4, 128, opt_kv)
     cl = jnp.array([8 * 16, 55], jnp.int32)
-    out = ops.paged_gqa_decode(q, kv, sc, cl, opt_kv=opt_kv, opt_pa=opt_pa,
-                               opt_gqa=opt_gqa, page_group=4)
-    ks = sc[0] if sc is not None else None
-    vs = sc[1] if sc is not None else None
-    exp = ref.paged_gqa_decode_ref(q, kv[0], kv[1], ks, vs, cl, opt_kv=opt_kv)
+    out = ops.paged_pool_decode(q, kv, sc, cl, phys, log, opt_kv=opt_kv,
+                                opt_gqa=opt_gqa)
+    ks, vs = _scales(sc)
+    exp = ref.paged_pool_decode_ref(q, kv[0], kv[1], ks, vs, cl, phys, log,
+                                    opt_kv=opt_kv)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(exp, np.float32), atol=3e-2)
 
@@ -48,29 +59,48 @@ def test_paged_decode_all_modes(opt_kv, opt_pa, opt_gqa):
     (2, 16, 32, 4, 4, 128),    # larger pages
     (2, 8, 16, 8, 1, 64),      # MHA-as-GQA (whisper: G=1)
 ])
-def test_paged_decode_shape_sweep(B, P, ps, Hkv, G, D):
-    q, kv, sc = _paged_inputs(B, P, ps, Hkv, G, D, opt_kv=True)
+def test_pool_decode_shape_sweep(B, P, ps, Hkv, G, D):
+    q, kv, sc, phys, log = _pool_inputs(B, P, ps, Hkv, G, D, opt_kv=True)
     lens = (np.arange(B) * 17 + 3) % (P * ps) + 1
     cl = jnp.asarray(lens, jnp.int32)
-    out = ops.paged_gqa_decode(q, kv, sc, cl, opt_kv=True, opt_pa=True,
-                               opt_gqa=True)
-    exp = ref.paged_gqa_decode_ref(q, kv[0], kv[1], sc[0], sc[1], cl,
-                                   opt_kv=True)
+    out = ops.paged_pool_decode(q, kv, sc, cl, phys, log, opt_kv=True,
+                                opt_gqa=True)
+    exp = ref.paged_pool_decode_ref(q, kv[0], kv[1], sc[0], sc[1], cl,
+                                    phys, log, opt_kv=True)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(exp, np.float32), atol=3e-2)
 
 
+def test_pool_decode_scattered_table():
+    """Pages physically scattered across the shared pool (the refcounted
+    allocator's normal state) must decode identically to contiguous
+    placement with the same logical content."""
+    B, P, ps, Hkv, G, D = 1, 4, 16, 2, 4, 64
+    q, kv, sc, phys, log = _pool_inputs(B, P, ps, Hkv, G, D, opt_kv=True)
+    cl = jnp.array([P * ps], jnp.int32)
+    base = ops.paged_pool_decode(q, kv, sc, cl, phys, log, opt_kv=True,
+                                 opt_gqa=True)
+    perm = jnp.array([3, 1, 0, 2], jnp.int32)
+    kv_s = kv.at[:, perm].set(kv[:, :P])          # scatter the 4 pages
+    sc_s = sc.at[:, perm].set(sc[:, :P])
+    out = ops.paged_pool_decode(q, kv_s, sc_s, cl, perm[None], log,
+                                opt_kv=True, opt_gqa=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(base, np.float32), atol=1e-5)
+
+
 @pytest.mark.parametrize("window,sink", [(32, 1), (64, 2), (16, 0)])
-def test_paged_decode_window_sweep(window, sink):
+def test_pool_decode_window_sweep(window, sink):
     B, P, ps = 2, 16, 16
-    q, kv, sc = _paged_inputs(B, P, ps, 2, 4, 128, opt_kv=True)
+    q, kv, sc, pt, _ = _pool_inputs(B, P, ps, 2, 4, 128, opt_kv=True)
     cl = jnp.array([P * ps, 100], jnp.int32)
-    tbl = window_page_table(cl, P, ps, window, sink)
-    out = ops.paged_gqa_decode_window(q, kv, sc, cl, tbl, opt_kv=True,
-                                      window=window, sink_pages=sink)
-    exp = ref.paged_gqa_decode_window_ref(q, kv[0], kv[1], sc[0], sc[1], cl,
-                                          tbl, opt_kv=True, window=window,
-                                          sink_pages=sink)
+    log = window_page_table(cl, P, ps, window, sink)
+    phys = logical_to_physical(log, pt)
+    out = ops.paged_pool_decode(q, kv, sc, cl, phys, log, opt_kv=True,
+                                opt_gqa=True, window=window, sink_pages=sink)
+    exp = ref.paged_pool_decode_ref(q, kv[0], kv[1], sc[0], sc[1], cl,
+                                    phys, log, opt_kv=True, window=window,
+                                    sink_pages=sink)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(exp, np.float32), atol=3e-2)
 
@@ -79,46 +109,47 @@ def test_paged_decode_window_sweep(window, sink):
 @pytest.mark.parametrize("opt_kv", [False, True])
 @pytest.mark.parametrize("Hkv,D", [(2, 128), (1, 64), (4, 64)])
 def test_cache_write_sweep(opt_kv, Hkv, D):
-    B, S, P, ps = 2, 8, 4, 16
+    B, S, P, ps = 2, 8, 8, 16
     kn = jax.random.normal(KEY, (B, S, Hkv, D), jnp.float32) \
         .astype(jnp.bfloat16)
     vn = jax.random.normal(jax.random.PRNGKey(9), (B, S, Hkv, D),
                            jnp.float32).astype(jnp.bfloat16)
+    # lanes write DISJOINT global slots; -1 = SkipSet
     slots = jnp.array([[0, 5, -1, 17, 33, -1, 62, 2],
-                       [1, -1, 9, 10, 11, 40, -1, 61]], jnp.int32)
+                       [64, -1, 73, 74, 75, 104, -1, 125]], jnp.int32)
     dt = jnp.float8_e4m3fn if opt_kv else jnp.bfloat16
-    kv_c = jnp.zeros((2, B, P, ps, Hkv, D), dt)
-    sc_c = jnp.zeros((2, B, P, ps, Hkv), jnp.float32) if opt_kv else None
+    kv_c = jnp.zeros((2, P, ps, Hkv, D), dt)
+    sc_c = jnp.zeros((2, P, ps, Hkv), jnp.float32) if opt_kv else None
     kv2, sc2 = ops.kv_cache_write(kv_c, sc_c, kn, vn, slots, opt_kv=opt_kv)
 
     NS = P * ps
-    flat_k = kv_c[0].reshape(B, NS, Hkv, D)
-    flat_v = kv_c[1].reshape(B, NS, Hkv, D)
-    zeros_s = jnp.zeros((B, NS, Hkv))
+    flat_k = kv_c[0].reshape(NS, Hkv, D)
+    flat_v = kv_c[1].reshape(NS, Hkv, D)
+    zeros_s = jnp.zeros((NS, Hkv))
     ek, ev, esk, esv = ref.kv_cache_write_ref(
         kn, vn, slots, flat_k, flat_v, zeros_s, zeros_s, opt_kv=opt_kv)
-    got = np.asarray(kv2[0].reshape(B, NS, Hkv, D)[:, :NS - 1], np.float32)
-    expd = np.asarray(ek[:, :NS - 1], np.float32)
+    got = np.asarray(kv2[0].reshape(NS, Hkv, D)[:NS - 1], np.float32)
+    expd = np.asarray(ek[:NS - 1], np.float32)
     # fp8 e4m3 (3-bit mantissa): allow 1 ULP rounding skew vs the oracle
     tol = np.maximum(np.abs(expd), 1.0) * 2.0 ** -3 + 1e-6
     assert np.all(np.abs(got - expd) <= tol)
     if opt_kv:
         np.testing.assert_allclose(
-            np.asarray(sc2[0].reshape(B, NS, Hkv)[:, :NS - 1]),
-            np.asarray(esk[:, :NS - 1]), atol=1e-7)
+            np.asarray(sc2[0].reshape(NS, Hkv)[:NS - 1]),
+            np.asarray(esk[:NS - 1]), atol=1e-7)
 
 
 def test_cache_write_preserves_other_lines():
     """Aliasing semantics: unwritten cache lines keep their old contents."""
     B, S, Hkv, D, P, ps = 1, 2, 1, 64, 2, 8
-    old = jnp.full((2, B, P, ps, Hkv, D), 7.0, jnp.bfloat16)
+    old = jnp.full((2, P, ps, Hkv, D), 7.0, jnp.bfloat16)
     kn = jnp.ones((B, S, Hkv, D), jnp.bfloat16)
     slots = jnp.array([[3, -1]], jnp.int32)
     kv2, _ = ops.kv_cache_write(old, None, kn, kn, slots, opt_kv=False)
-    flat = np.asarray(kv2[0].reshape(B, P * ps, Hkv, D), np.float32)
-    assert np.all(flat[0, 3] == 1.0)
+    flat = np.asarray(kv2[0].reshape(P * ps, Hkv, D), np.float32)
+    assert np.all(flat[3] == 1.0)
     untouched = [i for i in range(P * ps - 1) if i != 3]
-    assert np.all(flat[0, untouched] == 7.0)
+    assert np.all(flat[untouched] == 7.0)
 
 
 # ---------------------------------------------------------------------------
