@@ -28,7 +28,7 @@ def write_csv(name: str, header: List[str], rows: List[List]) -> str:
 def run_engine_workload(cfg, coopt, *, requests: int = 8, num_lanes: int = 3,
                         max_len: int = 256, max_new_tokens: int = 12,
                         scale: float = 0.1, seed: int = 0,
-                        warmup: bool = True) -> Dict:
+                        warmup: bool = True, num_shards: int = 1) -> Dict:
     """One (model, mode) cell of Figs. 6-7: a fixed synthetic ShareGPT mix
     through the continuous-batching engine. Returns Eq. 11/12 metrics
     measured AFTER a warmup pass (jit compile excluded, like the paper's
@@ -38,7 +38,7 @@ def run_engine_workload(cfg, coopt, *, requests: int = 8, num_lanes: int = 3,
 
     ecfg = EngineConfig(num_lanes=num_lanes, max_len=max_len,
                         prefill_buckets=(16, 32, 64, 128, max_len),
-                        seed=seed)
+                        seed=seed, num_shards=num_shards)
     engine = Engine(cfg, coopt, ecfg)
     stream = RequestStream(cfg.vocab_size, seed=seed, scale=scale)
     reqs = stream.take(requests, max_new_tokens=max_new_tokens)
@@ -69,4 +69,12 @@ def run_engine_workload(cfg, coopt, *, requests: int = 8, num_lanes: int = 3,
             s.peak_pages_in_use / max(s.pool_pages, 1), 4),
         "prefix_hit_rate": round(s.prefix_hit_rate(), 4),
         "preemptions": s.preemptions,
+        # page-range sharding health (per-shard utilization + placement)
+        "kv_shards": s.num_shards,
+        "shard_peak_utilization": [
+            round(p / max(c, 1), 4)
+            for p, c in zip(s.peak_shard_pages_in_use, s.shard_pages)],
+        "shard_preemptions": list(s.shard_preemptions),
+        "placement_prefix_hits": s.placement_prefix_hits,
+        "placement_misses": s.placement_misses,
     }

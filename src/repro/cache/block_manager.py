@@ -1,4 +1,4 @@
-"""Global refcounted paged-KV pool with prefix caching (host-side, pure
+"""Sharded, refcounted paged-KV pool with prefix caching (host-side, pure
 Python).
 
 XLA wants static shapes, so the device cache is ONE preallocated paged pool
@@ -6,25 +6,35 @@ shared by every sequence (``repro.core.opt_kv.make_layer_cache`` / model
 ``init_cache`` — leaves shaped ``(2, P_total, ps, Hkv, D)`` with no batch
 dimension) and all dynamic paging happens here as *indices*: each sequence
 owns a logical-ordered list of physical pages; token slot =
-page_table[pos // ps] * ps + pos % ps, now a *global* flat slot.
+page_table[pos // ps] * ps + pos % ps, a *global* flat slot.
 
-Design (paper §2 "allocator mismatch" + Opt-KV Eq. 5):
+Design (paper §2 "allocator mismatch" + Opt-KV Eq. 5 + Opt-Pa §3.3):
 
+* **Page-range sharding** — the device leaves map the ``pages`` axis onto the
+  mesh ``(pod, data)`` axes (launch/steps CACHE_RULES), so physical page p
+  lives on exactly one shard. The allocator mirrors that partition: shard s
+  owns the contiguous range ``shard_page_ranges(num_pages, num_shards)[s]``
+  and keeps its OWN free list, LRU and prefix-hash table. A sequence is
+  pinned to one shard at ``allocate`` time and only ever draws pages from
+  that shard's range, so the scalar-prefetched page gather of Opt-Pa's "lazy
+  memory mapping" never crosses the interconnect. ``OutOfBlocks`` carries the
+  pressured shard so the scheduler can preempt *on that shard*.
 * **Refcounts** — a physical page may back several sequences (shared prompt
   prefix). Writers only ever touch pages they exclusively own: the trailing
   partial page of a prompt and decode-appended pages are always fresh, so
   sharing is copy-on-write by construction (a shared page is never written).
 * **Prefix caching** — full pages of a prompt are registered under a chain
   hash ``h_i = H(h_{i-1}, tokens_of_page_i)`` once their KV has actually been
-  computed (``commit_prefill``). ``allocate`` walks the chain and reuses every
-  leading full-page hit, so a request sharing a >= 1-page prefix allocates
-  fewer fresh pages and skips recomputing those tokens. At least one prompt
-  token is always left uncached so prefill still emits last-token logits.
+  computed (``commit_prefill``), in the owning shard's table. ``allocate``
+  walks the chain within the sequence's shard and reuses every leading
+  full-page hit; ``preferred_shard`` exposes where a prompt's chain-hash head
+  lives so the scheduler can place for shard-local CoW reuse. At least one
+  prompt token is always left uncached so prefill still emits logits.
 * **LRU eviction** — when the last reference to a registered page drops, the
-  page parks in a cached-but-unreferenced LRU list instead of the free list;
-  allocation pressure evicts from its cold end (hash entry removed, page
-  recycled). ``OutOfBlocks`` is raised only when free + evictable both run
-  dry — the scheduler reacts by preempting the youngest running request.
+  page parks in its shard's cached-but-unreferenced LRU list instead of the
+  free list; allocation pressure evicts from its cold end (hash entry
+  removed, page recycled). ``OutOfBlocks`` is raised only when the shard's
+  free + evictable both run dry.
 * **SkipSet** — the manager emits slot indices of -1 for tokens the policy
   says never to cache (padding, prefix-cache hits, out-of-window tokens), so
   the device-side scatter drops them without touching memory (Eq. 5).
@@ -38,8 +48,43 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 
+def padded_pool_pages(num_pages: int, num_shards: int) -> int:
+    """Device page count rounded up so the ``pages`` axis tiles evenly over
+    the mesh axes it is sharded on (CACHE_RULES: pages -> (pod, data)).
+    Models' ``init_cache`` and the scheduler's pool sizing must agree on
+    this so host page ids == device page ids."""
+    s = max(int(num_shards), 1)
+    return ((num_pages + s - 1) // s) * s
+
+
+def shard_page_ranges(num_pages: int,
+                      num_shards: int) -> List[Tuple[int, int]]:
+    """Contiguous ``[lo, hi)`` page ranges owned by each shard — the host
+    mirror of the device pages-axis sharding. Splits like
+    ``np.array_split``: the first ``num_pages % num_shards`` shards get one
+    extra page. When the device pool is ``padded_pool_pages`` wide and the
+    final page is reserved (write-kernel SkipSet sentinel), the usable
+    ``num_pages = P_dev - 1`` splits so every boundary coincides with a
+    device shard boundary and only the LAST shard loses the sentinel page.
+    """
+    s = max(int(num_shards), 1)
+    base, rem = divmod(num_pages, s)
+    ranges, lo = [], 0
+    for i in range(s):
+        hi = lo + base + (1 if i < rem else 0)
+        ranges.append((lo, hi))
+        lo = hi
+    return ranges
+
+
 class OutOfBlocks(RuntimeError):
-    pass
+    """Raised when an allocation cannot be served. ``shard`` names the
+    pressured shard (always set by a sharded manager) so the scheduler can
+    target preemption."""
+
+    def __init__(self, msg: str, shard: int = 0):
+        super().__init__(msg)
+        self.shard = shard
 
 
 @dataclass
@@ -48,6 +93,7 @@ class SeqBlocks:
     num_tokens: int = 0
     cached_tokens: int = 0        # leading tokens served by the prefix cache
     committed_pages: int = 0      # full pages registered in the hash table
+    shard: int = 0                # owning shard — all pages stay in its range
 
 
 def _chain_hash(prev: int, toks: Sequence[int]) -> int:
@@ -55,19 +101,29 @@ def _chain_hash(prev: int, toks: Sequence[int]) -> int:
 
 
 class BlockManager:
-    """Refcounted free-list allocator over ONE pool of ``num_pages`` pages."""
+    """Refcounted free-list allocator over ONE pool of ``num_pages`` pages,
+    partitioned into ``num_shards`` contiguous page ranges (the host mirror
+    of the device pages-axis sharding)."""
 
     def __init__(self, num_pages: int, page_size: int,
-                 enable_prefix_cache: bool = True):
+                 enable_prefix_cache: bool = True, num_shards: int = 1):
         self.num_pages = num_pages
         self.page_size = page_size
         self.enable_prefix_cache = enable_prefix_cache
-        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self.num_shards = max(int(num_shards), 1)
+        self.shard_ranges: List[Tuple[int, int]] = \
+            shard_page_ranges(num_pages, self.num_shards)
+        self._shard_starts = np.asarray([lo for lo, _ in self.shard_ranges])
+        # per-shard allocator state
+        self._free_by_shard: List[List[int]] = [
+            list(range(hi - 1, lo - 1, -1)) for lo, hi in self.shard_ranges]
+        self._lru_by_shard: List["OrderedDict[int, None]"] = [
+            OrderedDict() for _ in range(self.num_shards)]
+        self._hash_by_shard: List[Dict[int, int]] = [
+            {} for _ in range(self.num_shards)]
+        self._page_to_hash: Dict[int, int] = {}
         self._seqs: Dict[int, SeqBlocks] = {}
         self._ref: Dict[int, int] = {}                 # page -> refcount
-        self._hash_to_page: Dict[int, int] = {}
-        self._page_to_hash: Dict[int, int] = {}
-        self._lru: "OrderedDict[int, None]" = OrderedDict()  # cached, ref==0
         # ------------------------------------------------------------ stats --
         self.prefix_queries = 0       # full prompt pages looked up
         self.prefix_hits = 0          # full prompt pages served from cache
@@ -76,28 +132,74 @@ class BlockManager:
 
     # ------------------------------------------------------------- queries --
     @property
+    def _free(self) -> List[int]:
+        """Flat view of every shard's free list (read-only compat)."""
+        return [p for fl in self._free_by_shard for p in fl]
+
+    @property
+    def _lru(self) -> "OrderedDict[int, None]":
+        """Flat view of every shard's LRU (read-only compat)."""
+        out: "OrderedDict[int, None]" = OrderedDict()
+        for lru in self._lru_by_shard:
+            out.update(lru)
+        return out
+
+    @property
     def free_pages(self) -> int:
-        return len(self._free)
+        return sum(len(fl) for fl in self._free_by_shard)
 
     @property
     def evictable_pages(self) -> int:
-        return len(self._lru)
+        return sum(len(lru) for lru in self._lru_by_shard)
 
     @property
     def pages_in_use(self) -> int:
         """Pages referenced by at least one live sequence."""
-        return self.num_pages - len(self._free) - len(self._lru)
+        return self.num_pages - self.free_pages - self.evictable_pages
+
+    def shard_of(self, page: int) -> int:
+        """Owning shard of a physical page id."""
+        return int(np.searchsorted(self._shard_starts, page, "right") - 1)
+
+    def shard_capacity(self, shard: int) -> int:
+        lo, hi = self.shard_ranges[shard]
+        return hi - lo
+
+    def max_shard_capacity(self) -> int:
+        return max(hi - lo for lo, hi in self.shard_ranges)
+
+    def free_pages_in(self, shard: int) -> int:
+        return len(self._free_by_shard[shard])
+
+    def evictable_pages_in(self, shard: int) -> int:
+        return len(self._lru_by_shard[shard])
+
+    def pages_in_use_in(self, shard: int) -> int:
+        return (self.shard_capacity(shard) - self.free_pages_in(shard)
+                - self.evictable_pages_in(shard))
+
+    def seq_shard(self, seq_id: int) -> int:
+        return self._seqs[seq_id].shard
 
     def utilization(self) -> float:
         return self.pages_in_use / self.num_pages if self.num_pages else 0.0
+
+    def shard_utilization(self, shard: int) -> float:
+        cap = self.shard_capacity(shard)
+        return self.pages_in_use_in(shard) / cap if cap else 0.0
 
     def prefix_hit_rate(self) -> float:
         return self.prefix_hits / self.prefix_queries \
             if self.prefix_queries else 0.0
 
-    def can_allocate(self, num_tokens: int) -> bool:
+    def can_allocate(self, num_tokens: int,
+                     shard: Optional[int] = None) -> bool:
         need = (num_tokens + self.page_size - 1) // self.page_size
-        return need <= self.free_pages + self.evictable_pages
+        if shard is not None:
+            return need <= (self.free_pages_in(shard)
+                            + self.evictable_pages_in(shard))
+        return any(need <= self.free_pages_in(s) + self.evictable_pages_in(s)
+                   for s in range(self.num_shards))
 
     def num_tokens(self, seq_id: int) -> int:
         return self._seqs[seq_id].num_tokens
@@ -105,38 +207,66 @@ class BlockManager:
     def cached_tokens(self, seq_id: int) -> int:
         return self._seqs[seq_id].cached_tokens
 
+    # ---------------------------------------------------------- placement --
+    def preferred_shard(self, token_ids: Optional[Sequence[int]],
+                        num_tokens: int) -> Optional[int]:
+        """Shard where this prompt's chain-hash HEAD (first full page) is
+        registered, or None — the scheduler's prefix-affinity placement
+        hint (reuse is only possible shard-locally)."""
+        if (not self.enable_prefix_cache or token_ids is None
+                or num_tokens <= self.page_size):
+            return None
+        h = _chain_hash(0, token_ids[: self.page_size])
+        for s in range(self.num_shards):
+            if h in self._hash_by_shard[s]:
+                return s
+        return None
+
+    def least_loaded_shard(self) -> int:
+        """Shard with the most allocatable (free + evictable) pages; ties
+        break toward the fewest live pages, then the lowest id."""
+        return min(range(self.num_shards), key=self.load_key)
+
+    def load_key(self, shard: int):
+        """Sort key ordering shards least-loaded first."""
+        return (-(self.free_pages_in(shard) + self.evictable_pages_in(shard)),
+                self.pages_in_use_in(shard), shard)
+
     # -------------------------------------------------------------- alloc --
-    def _evict_one(self) -> None:
-        page, _ = self._lru.popitem(last=False)        # cold end
+    def _evict_one(self, shard: int) -> None:
+        page, _ = self._lru_by_shard[shard].popitem(last=False)  # cold end
         h = self._page_to_hash.pop(page)
-        if self._hash_to_page.get(h) == page:
-            del self._hash_to_page[h]
-        self._free.append(page)
+        table = self._hash_by_shard[shard]
+        if table.get(h) == page:
+            del table[h]
+        self._free_by_shard[shard].append(page)
         self.evictions += 1
 
-    def _take_free(self) -> int:
-        if not self._free:
-            if not self._lru:
-                raise OutOfBlocks("pool exhausted (free + cached empty)")
-            self._evict_one()
+    def _take_free(self, shard: int) -> int:
+        if not self._free_by_shard[shard]:
+            if not self._lru_by_shard[shard]:
+                raise OutOfBlocks(
+                    f"shard {shard} exhausted (free + cached empty)", shard)
+            self._evict_one(shard)
         self.fresh_pages_allocated += 1
-        return self._free.pop()
+        return self._free_by_shard[shard].pop()
 
     def _match_prefix(self, token_ids: Optional[Sequence[int]],
-                      num_tokens: int) -> Tuple[List[int], int]:
-        """Leading full-page cache hits for this prompt. Returns
-        (hit pages, matched token count). Never matches the ENTIRE prompt —
-        at least one token is recomputed so prefill emits logits."""
+                      num_tokens: int, shard: int) -> Tuple[List[int], int]:
+        """Leading full-page cache hits for this prompt WITHIN ``shard``.
+        Returns (hit pages, matched token count). Never matches the ENTIRE
+        prompt — at least one token is recomputed so prefill emits logits."""
         if not self.enable_prefix_cache or token_ids is None:
             return [], 0
         max_match = (num_tokens - 1) // self.page_size   # full pages, < all
+        table = self._hash_by_shard[shard]
         hits: List[int] = []
         h = 0
         for i in range(max_match):
             lo = i * self.page_size
             h = _chain_hash(h, token_ids[lo:lo + self.page_size])
             self.prefix_queries += 1
-            page = self._hash_to_page.get(h)
+            page = table.get(h)
             if page is None:
                 break
             hits.append(page)
@@ -144,47 +274,62 @@ class BlockManager:
         return hits, len(hits) * self.page_size
 
     def allocate(self, seq_id: int, num_tokens: int,
-                 token_ids: Optional[Sequence[int]] = None) -> Tuple[List[int], int]:
-        """Allocate pages for a new sequence of ``num_tokens`` prompt tokens.
+                 token_ids: Optional[Sequence[int]] = None,
+                 shard: Optional[int] = None) -> Tuple[List[int], int]:
+        """Allocate pages for a new sequence of ``num_tokens`` prompt tokens,
+        pinned to ``shard`` (default: the least-loaded shard; with one shard
+        this is the PR-1 behaviour unchanged).
 
         ``token_ids`` (when given) enables prefix caching: leading full pages
-        whose chain hash is registered are reused (refcount bumped, zero fresh
-        pages, zero recompute). Returns (pages, cached_token_count).
+        whose chain hash is registered ON THIS SHARD are reused (refcount
+        bumped, zero fresh pages, zero recompute). Returns
+        (pages, cached_token_count).
         """
         assert seq_id not in self._seqs
+        if shard is None:
+            shard = self.least_loaded_shard()
         need = (num_tokens + self.page_size - 1) // self.page_size
-        hits, cached = self._match_prefix(token_ids, num_tokens)
+        stats_snap = (self.prefix_queries, self.prefix_hits)
+        hits, cached = self._match_prefix(token_ids, num_tokens, shard)
         for p in hits:                                  # commit the reuse
             self._ref[p] = self._ref.get(p, 0) + 1      # may come off the LRU
-            self._lru.pop(p, None)
+            self._lru_by_shard[shard].pop(p, None)
         fresh_need = need - len(hits)
         # capacity check AFTER pinning the hits — a hit sitting in the LRU
         # must not be double-counted as evictable capacity
-        if fresh_need > self.free_pages + self.evictable_pages:
+        avail = self.free_pages_in(shard) + self.evictable_pages_in(shard)
+        if fresh_need > avail:
             for p in reversed(hits):                    # unwind the pins
                 self._ref[p] -= 1
                 if self._ref[p] == 0:
                     del self._ref[p]
-                    self._lru[p] = None                 # back to the cache
+                    self._lru_by_shard[shard][p] = None  # back to the cache
+            # a failed attempt reused nothing: keep the surfaced hit-rate
+            # stats clean when the scheduler probes several shards
+            self.prefix_queries, self.prefix_hits = stats_snap
             raise OutOfBlocks(
-                f"need {fresh_need} fresh pages, "
-                f"{self.free_pages}+{self.evictable_pages} free+cached")
+                f"shard {shard}: need {fresh_need} fresh pages, "
+                f"{self.free_pages_in(shard)}+"
+                f"{self.evictable_pages_in(shard)} free+cached", shard)
         pages = list(hits)
         for _ in range(fresh_need):
-            p = self._take_free()
+            p = self._take_free(shard)
             self._ref[p] = 1
             pages.append(p)
         self._seqs[seq_id] = SeqBlocks(pages, num_tokens, cached,
-                                       committed_pages=len(hits))
+                                       committed_pages=len(hits),
+                                       shard=shard)
         return pages, cached
 
     def commit_prefill(self, seq_id: int, computed_tokens: int,
                        token_ids: Optional[Sequence[int]] = None) -> None:
         """Register full prompt pages whose KV is now actually written, so
-        later arrivals can prefix-hit them. Idempotent per page."""
+        later arrivals can prefix-hit them (in the owning shard's table).
+        Idempotent per page."""
         if not self.enable_prefix_cache or token_ids is None:
             return
         sb = self._seqs[seq_id]
+        table = self._hash_by_shard[sb.shard]
         full = computed_tokens // self.page_size
         if full <= sb.committed_pages:
             return
@@ -195,18 +340,19 @@ class BlockManager:
             if i < sb.committed_pages:
                 continue                                # already registered
             page = sb.pages[i]
-            if h not in self._hash_to_page and page not in self._page_to_hash:
-                self._hash_to_page[h] = page
+            if h not in table and page not in self._page_to_hash:
+                table[h] = page
                 self._page_to_hash[page] = h
         sb.committed_pages = full
 
     def append_token(self, seq_id: int) -> int:
-        """Account one generated token; grows the page list on boundary.
-        Returns the token's global flat slot index."""
+        """Account one generated token; grows the page list on boundary
+        (drawing ONLY from the sequence's own shard). Returns the token's
+        global flat slot index."""
         sb = self._seqs[seq_id]
         pos = sb.num_tokens
         if pos // self.page_size >= len(sb.pages):
-            p = self._take_free()                       # may evict; may raise
+            p = self._take_free(sb.shard)               # may evict; may raise
             self._ref[p] = 1
             sb.pages.append(p)
         sb.num_tokens += 1
@@ -215,8 +361,9 @@ class BlockManager:
 
     def free(self, seq_id: int) -> None:
         """Drop the sequence's references. Registered pages whose refcount
-        hits zero park in the LRU prefix cache; others return to the free
-        list. Used both for FINISHED requests and for preemption."""
+        hits zero park in their shard's LRU prefix cache; others return to
+        the shard free list. Used both for FINISHED requests and for
+        preemption."""
         sb = self._seqs.pop(seq_id, None)
         if not sb:
             return
@@ -226,9 +373,9 @@ class BlockManager:
                 continue
             del self._ref[p]
             if p in self._page_to_hash:
-                self._lru[p] = None                     # cached, evictable
+                self._lru_by_shard[sb.shard][p] = None  # cached, evictable
             else:
-                self._free.append(p)
+                self._free_by_shard[sb.shard].append(p)
 
     # ------------------------------------------------------------ mapping --
     def page_table(self, seq_id: int, width: Optional[int] = None) -> np.ndarray:

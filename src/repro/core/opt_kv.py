@@ -36,6 +36,15 @@ from repro.cache.quant import dequantize_fp8, quantize_fp8
 from repro.core.coopt import CoOptConfig
 
 
+# ------------------------------------------------------- shard ownership --
+# Pure-integer page-range math lives with the host-side allocator (which
+# must stay importable without jax); re-exported here because the device
+# side — models' ``init_cache`` pool sizing and mesh-aware page-table
+# construction — keys off the same partition.
+from repro.cache.block_manager import (padded_pool_pages,   # noqa: F401
+                                       shard_page_ranges)
+
+
 def make_layer_cache(num_pages: int, page_size: int, num_kv_heads: int,
                      head_dim: int, coopt: CoOptConfig):
     """Zero-initialised single-layer GLOBAL paged cache (kv, scale|None)."""
@@ -137,6 +146,11 @@ def window_page_table(cache_len, num_pages: int, page_size: int,
     tokens already cached). Returns (B, Psel) logical page ids, -1 = skipped;
     callers translate to physical pages via the per-lane page table
     (``jnp.take_along_axis(page_table, ...)``).
+
+    A logical page id beyond the lane's table width (``cache_len`` larger
+    than the table can back) becomes -1 — a SKIP, never an alias: clamping
+    it onto page ``num_pages - 1`` would silently attend the wrong page's
+    content.
     """
     wpages = window // page_size + 1
     # page holding the most recent token (cache_len is an inclusive count)
@@ -148,7 +162,7 @@ def window_page_table(cache_len, num_pages: int, page_size: int,
                             (win.shape[0], sink_pages))
     sink = jnp.where(sink < jnp.minimum(start, sink_pages)[:, None], sink, -1)
     table = jnp.concatenate([sink, win], axis=1).astype(jnp.int32)
-    return jnp.minimum(table, num_pages - 1)
+    return jnp.where(table >= num_pages, -1, table)
 
 
 def logical_to_physical(logical_table, page_table):

@@ -29,7 +29,7 @@ Opt-KV (fp8 dequant on read) and Opt-GQA (grouped queries) compose here;
 from __future__ import annotations
 
 import math
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -156,13 +156,33 @@ def _flat(q, kv_pages, scale_pages, cache_len, coopt, valid):
 
 
 # ----------------------------------------------------- Opt-Pa (block-wise) --
+def effective_page_group(num_pages: int, page_group: int) -> Tuple[int, int]:
+    """Opt-Pa group size actually used by ``_blockwise`` for a pool of
+    ``num_pages`` pages: (group, padded page count). The page axis is PADDED
+    (masked) up to the next multiple of ``page_group`` instead of silently
+    degrading the group — a group of 1 would turn Eq. 10's shared-memory
+    block reduction into a per-page scan."""
+    pg = max(min(page_group, num_pages), 1)
+    return pg, num_pages + (-num_pages) % pg
+
+
 def _blockwise(q, kv_pages, scale_pages, cache_len, coopt, valid):
     B, Hq, D = q.shape
     _, _, P, ps, Hkv, _ = kv_pages.shape
-    pg = coopt.page_group
-    while P % pg:
-        pg //= 2
-    pg = max(pg, 1)
+    pg, P_pad = effective_page_group(P, coopt.page_group)
+    if P_pad != P:
+        # keep the configured group: pad the page axis with masked pages
+        # rather than halving pg down to a degenerate per-page scan
+        pad = P_pad - P
+        kv_pages = jnp.pad(kv_pages,
+                           ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        if scale_pages is not None:
+            scale_pages = jnp.pad(
+                scale_pages, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        if valid is None:                     # pad pages must be masked out
+            valid = jnp.ones((B, P * ps), bool)
+        valid = jnp.pad(valid, ((0, 0), (0, pad * ps)))
+        P = P_pad
     NG, T = P // pg, pg * ps
 
     kv_g = kv_pages.reshape(2, B, NG, T, Hkv, D)

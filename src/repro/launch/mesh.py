@@ -11,6 +11,8 @@ state (the dry-run sets XLA_FLAGS before any jax import).
 """
 from __future__ import annotations
 
+import math
+
 import jax
 
 
@@ -23,6 +25,24 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Degenerate 1-device mesh for smoke tests on the CPU container."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_sim_mesh(data: int = 4, model: int = 2, pod: int = 1):
+    """Simulated small mesh for CPU verification of the sharded KV pool
+    (needs ``XLA_FLAGS=--xla_force_host_platform_device_count>=pod*data*model``
+    set before the first jax import — see the tier1-mesh8 CI job)."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def kv_shard_count(mesh) -> int:
+    """Number of KV-pool page-range shards a mesh implies: the product of
+    the mesh axes the cache ``pages`` axis is sharded over (CACHE_RULES:
+    pages -> (pod, data)). Feed this to ``EngineConfig.num_shards`` so the
+    host allocator's page ranges coincide with device shard boundaries."""
+    return math.prod(mesh.shape[a] for a in ("pod", "data")
+                     if a in mesh.shape)
 
 
 # TPU v5e hardware constants (per chip) — roofline denominators.

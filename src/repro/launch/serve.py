@@ -24,13 +24,14 @@ def serve_workload(arch: str, mode: str, *, requests: int = 16,
                    num_lanes: int = 4, max_len: int = 512,
                    max_new_tokens: int = 24, scale: float = 0.15,
                    seed: int = 0, use_kernel: bool = False,
-                   temperature: float = 0.0):
+                   temperature: float = 0.0, num_shards: int = 1):
     cfg = get_config(arch)
     coopt = MODES[mode].replace(use_kernel=use_kernel)
     ecfg = EngineConfig(
         num_lanes=num_lanes, max_len=max_len,
         prefill_buckets=(32, 64, 128, 256, max_len),
-        sampling=SamplingParams(temperature=temperature), seed=seed)
+        sampling=SamplingParams(temperature=temperature), seed=seed,
+        num_shards=num_shards)
     engine = Engine(cfg, coopt, ecfg)
     stream = RequestStream(cfg.vocab_size, seed=seed, scale=scale)
     reqs = stream.take(requests, max_new_tokens=max_new_tokens)
@@ -52,6 +53,14 @@ def serve_workload(arch: str, mode: str, *, requests: int = 16,
         "prefix_hit_rate": round(s.prefix_hit_rate(), 4),
         "preemptions": s.preemptions,
         "rejected": s.rejected,
+        # per-shard page-range ownership (mesh (pod, data) axes)
+        "kv_shards": s.num_shards,
+        "shard_peak_utilization": [
+            round(p / max(c, 1), 4)
+            for p, c in zip(s.peak_shard_pages_in_use, s.shard_pages)],
+        "shard_preemptions": list(s.shard_preemptions),
+        "placement_prefix_hits": s.placement_prefix_hits,
+        "placement_misses": s.placement_misses,
     }
 
 
@@ -67,6 +76,9 @@ def main(argv=None):
     ap.add_argument("--use-kernel", action="store_true",
                     help="Pallas hot path (interpret mode on CPU)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="KV-pool page-range shards (= mesh pod*data "
+                         "extent; see launch.mesh.kv_shard_count)")
     args = ap.parse_args(argv)
 
     arch = args.arch + ("-reduced" if args.reduced else "")
@@ -74,7 +86,8 @@ def main(argv=None):
                          num_lanes=args.lanes, max_len=args.max_len,
                          max_new_tokens=args.max_new_tokens,
                          use_kernel=args.use_kernel,
-                         temperature=args.temperature)
+                         temperature=args.temperature,
+                         num_shards=args.shards)
     print(json.dumps(out, indent=2))
 
 

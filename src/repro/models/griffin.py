@@ -28,7 +28,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.coopt import CoOptConfig, COOPT
-from repro.core.opt_kv import identity_page_table, identity_slots, write_kv
+from repro.core.opt_kv import (identity_page_table, identity_slots,
+                               padded_pool_pages, write_kv)
 from repro.core.opt_pa import paged_decode_attention
 from repro.models.layers import (Spec, apply_rope, causal_attention, init_tree,
                                  linear, repeat_kv, rmsnorm, shard_act)
@@ -349,12 +350,15 @@ class GriffinModel:
         return linear(h[:, 0], params["lm_head"]), cache
 
     # ------------------------------------------------------------- caching --
-    def cache_shape(self, batch: int, max_len: int, coopt: CoOptConfig):
+    def cache_shape(self, batch: int, max_len: int, coopt: CoOptConfig,
+                    num_shards: int = 1):
         cfg = self.cfg
         # GLOBAL-POOL layout for the attention layers' paged KV (see
-        # transformer.TransformerModel.cache_shape); recurrent state
-        # (conv taps, RG-LRU h) is O(1) per lane and stays batch-major.
-        P, ps = batch * _pages(max_len, coopt.page_size), coopt.page_size
+        # transformer.TransformerModel.cache_shape), pages padded to tile
+        # over the KV shards; recurrent state (conv taps, RG-LRU h) is O(1)
+        # per lane and stays batch-major.
+        P, ps = padded_pool_pages(batch * _pages(max_len, coopt.page_size),
+                                  num_shards), coopt.page_size
         Hkv, D, W = cfg.num_kv_heads, cfg.head_dim, cfg.lru_width
         out = {
             "conv": ((self.n_rec, batch, cfg.conv1d_width - 1, W), jnp.bfloat16,
@@ -372,10 +376,12 @@ class GriffinModel:
                              "kv_heads"))
         return out
 
-    def init_cache(self, batch: int, max_len: int, coopt: CoOptConfig):
+    def init_cache(self, batch: int, max_len: int, coopt: CoOptConfig,
+                   num_shards: int = 1):
         return {k: jnp.zeros(sh, dt)
                 for k, (sh, dt, _) in
-                self.cache_shape(batch, max_len, coopt).items()}
+                self.cache_shape(batch, max_len, coopt,
+                                 num_shards=num_shards).items()}
 
     # -------------------------------------------------------------- specs --
     def input_specs(self, shape) -> Dict[str, jax.ShapeDtypeStruct]:

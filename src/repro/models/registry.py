@@ -5,7 +5,9 @@ Every model exposes the same engine-facing protocol:
   forward(params, batch, coopt)                — teacher-forced logits (+aux)
   prefill(params, batch, cache, coopt)         — last-token logits + filled cache
   decode_step(params, batch, cache, coopt, long_window) — one-token step
-  cache_shape(batch, max_len, coopt) / init_cache(...)
+  cache_shape(batch, max_len, coopt, num_shards=1) / init_cache(...)
+      — num_shards pads the paged-KV pages axis so it tiles evenly over
+        the mesh (pod, data) shards of the sharded pool
   input_specs(shape)                           — ShapeDtypeStructs per input
 """
 from __future__ import annotations

@@ -267,7 +267,10 @@ class RWKV6Model:
         return linear(h[:, 0], params["lm_head"]), cache
 
     # ------------------------------------------------------------- caching --
-    def cache_shape(self, batch: int, max_len: int, coopt: CoOptConfig):
+    def cache_shape(self, batch: int, max_len: int, coopt: CoOptConfig,
+                    num_shards: int = 1):
+        # attention-free: no paged KV pool, so ``num_shards`` (accepted for
+        # engine-call uniformity) shards nothing here
         cfg = self.cfg
         L, d, H, D = cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.head_dim
         return {
@@ -280,7 +283,8 @@ class RWKV6Model:
             "length": ((batch,), jnp.int32, ("batch",)),
         }
 
-    def init_cache(self, batch: int, max_len: int, coopt: CoOptConfig):
+    def init_cache(self, batch: int, max_len: int, coopt: CoOptConfig,
+                   num_shards: int = 1):
         return {k: jnp.zeros(sh, dt)
                 for k, (sh, dt, _) in
                 self.cache_shape(batch, max_len, coopt).items()}

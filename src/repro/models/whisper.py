@@ -28,7 +28,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.coopt import CoOptConfig, COOPT
-from repro.core.opt_kv import identity_page_table, identity_slots, write_kv
+from repro.core.opt_kv import (identity_page_table, identity_slots,
+                               padded_pool_pages, write_kv)
 from repro.core.opt_pa import paged_decode_attention
 from repro.cache.quant import quantize_fp8, dequantize_fp8
 from repro.models.layers import (Spec, causal_attention, gelu_mlp, init_tree,
@@ -292,9 +293,11 @@ class WhisperModel:
         return linear(h[:, 0], params["lm_head"]), cache
 
     # ------------------------------------------------------------- caching --
-    def cache_shape(self, batch: int, max_len: int, coopt: CoOptConfig):
+    def cache_shape(self, batch: int, max_len: int, coopt: CoOptConfig,
+                    num_shards: int = 1):
         cfg = self.cfg
-        P, ps = batch * _pages(max_len, coopt.page_size), coopt.page_size
+        P, ps = padded_pool_pages(batch * _pages(max_len, coopt.page_size),
+                                  num_shards), coopt.page_size
         L, H, D, F = cfg.num_layers, cfg.num_heads, cfg.head_dim, \
             cfg.num_frames
         out = {
@@ -318,10 +321,12 @@ class WhisperModel:
                              ("layers", None, "batch", None, "kv_heads"))
         return out
 
-    def init_cache(self, batch: int, max_len: int, coopt: CoOptConfig):
+    def init_cache(self, batch: int, max_len: int, coopt: CoOptConfig,
+                   num_shards: int = 1):
         return {k: jnp.zeros(sh, dt)
                 for k, (sh, dt, _) in
-                self.cache_shape(batch, max_len, coopt).items()}
+                self.cache_shape(batch, max_len, coopt,
+                                 num_shards=num_shards).items()}
 
     # -------------------------------------------------------------- specs --
     def input_specs(self, shape) -> Dict[str, jax.ShapeDtypeStruct]:

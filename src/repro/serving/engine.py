@@ -9,11 +9,15 @@ so Figs. 6-7's five modes are one constructor argument apart.
 
 Design (hardware adaptation, DESIGN.md §3): the device cache is a GLOBAL
 paged pool — per-layer leaves ``(2, P_total, ps, Hkv, D)`` with no batch
-dimension, ``P_total = num_lanes * pages(max_len)`` (the final page reserved
-as the write kernel's SkipSet sentinel). All dynamic paging state (free
-lists, refcounts, prefix-cache hash table, slot indices, SkipSets) lives
-host-side in the Scheduler/BlockManager; the device sees only static-shape
-index arrays: global ``slot_idx``, per-lane ``page_table``, per-lane
+dimension, ``P_total = num_lanes * pages(max_len)`` padded to tile evenly
+over ``num_shards`` KV shards (the final page reserved as the write
+kernel's SkipSet sentinel). The pool's page range is partitioned along the
+mesh ``(pod, data)`` axes — the axes CACHE_RULES shard the pages axis over —
+and every request is pinned to ONE shard at admission, so its page gathers
+stay shard-local. All dynamic paging state (per-shard free lists, refcounts,
+per-shard prefix-cache hash tables, slot indices, SkipSets) lives host-side
+in the Scheduler/BlockManager; the device sees only static-shape index
+arrays: global ``slot_idx``, per-lane ``page_table``, per-lane
 ``cache_len``. Lane isolation is enforced by slot disjointness — a lane can
 only write pages it exclusively owns (shared prefix pages are read-only by
 refcount construction) — so cache updates need no batch masking; only
@@ -24,9 +28,11 @@ Scheduling (Sarathi-style): each step is composed under a token budget,
 mixing decode tokens and chunked-prefill chunks. For chunk-capable families
 (dense/moe) the whole step is ONE device call through the continuation
 prefill path (a decode lane is a chunk of length 1); other families run one
-bucketed prefill + one decode call per step. Pool exhaustion preempts the
-youngest running request (freed pages, front-of-queue requeue, greedy-exact
-resume) instead of crashing; impossible requests are REJECTED and surfaced.
+bucketed prefill + one decode call per step. Admission is shard-affine
+(prefix-affinity first, least-loaded fallback). Shard exhaustion preempts
+the youngest running request ON THE PRESSURED SHARD (freed pages,
+front-of-queue requeue, greedy-exact resume) instead of crashing;
+impossible requests are REJECTED and surfaced.
 """
 from __future__ import annotations
 
@@ -57,6 +63,10 @@ class EngineConfig:
     seed: int = 0
     token_budget: int = 0           # 0 => max(prefill_buckets)
     enable_prefix_cache: bool = True
+    num_shards: int = 1             # KV-pool page-range shards; matches the
+                                    # mesh (pod, data) extent the cache
+                                    # pages axis is sharded over
+                                    # (launch.mesh.kv_shard_count)
 
 
 @dataclass
@@ -76,6 +86,15 @@ class EngineStats:
     prefix_cache_hits: int = 0      # full prompt pages reused, not recomputed
     preemptions: int = 0
     rejected: int = 0
+    # --------------------------------------------------- sharded pool ----
+    num_shards: int = 1
+    shard_pages: Tuple[int, ...] = ()          # page-range size per shard
+    shard_pages_in_use: Tuple[int, ...] = ()
+    peak_shard_pages_in_use: Tuple[int, ...] = ()
+    shard_preemptions: Tuple[int, ...] = ()    # per-shard pressure evictions
+    placement_prefix_hits: int = 0  # admitted on the prefix-affine shard
+    placement_misses: int = 0       # prefix lived on an unusable shard ->
+                                    # cross-shard CoW reuse lost
 
     @property
     def total_time(self) -> float:
@@ -88,6 +107,11 @@ class EngineStats:
 
     def pool_utilization(self) -> float:
         return self.pages_in_use / self.pool_pages if self.pool_pages else 0.0
+
+    def shard_utilization(self) -> Tuple[float, ...]:
+        return tuple(u / p if p else 0.0
+                     for u, p in zip(self.shard_pages_in_use,
+                                     self.shard_pages))
 
     def prefix_hit_rate(self) -> float:
         return self.prefix_cache_hits / self.prefix_cache_queries \
@@ -108,7 +132,10 @@ class Engine:
         self.key = jax.random.PRNGKey(engine_cfg.seed + 1)
 
         B, M = engine_cfg.num_lanes, engine_cfg.max_len
-        self.cache = self.model.init_cache(B, M, coopt)
+        # the device pool's pages axis is padded so it tiles evenly over the
+        # KV shards (host page ids == device page ids, see opt_kv helpers)
+        self.cache = self.model.init_cache(B, M, coopt,
+                                           num_shards=engine_cfg.num_shards)
         self._patch_offset = (model_cfg.num_patches
                               if model_cfg.family == "vlm" else 0)
         # chunked continuation prefill (and therefore mixed steps + prefix
@@ -120,7 +147,8 @@ class Engine:
             extra_tokens=self._patch_offset,
             allow_chunked=self._chunked,
             token_budget=engine_cfg.token_budget or None,
-            enable_prefix_cache=engine_cfg.enable_prefix_cache)
+            enable_prefix_cache=engine_cfg.enable_prefix_cache,
+            num_shards=engine_cfg.num_shards)
         self.stats = EngineStats()
         self.stats.pool_pages = self.scheduler.manager.num_pages
 
@@ -191,6 +219,18 @@ class Engine:
         s.prefix_cache_hits = mgr.prefix_hits
         s.preemptions = self.scheduler.preemptions
         s.rejected = len(self.scheduler.rejected)
+        # per-shard health (page-range ownership along the mesh data/pod axes)
+        n = mgr.num_shards
+        s.num_shards = n
+        s.shard_pages = tuple(mgr.shard_capacity(i) for i in range(n))
+        s.shard_pages_in_use = tuple(mgr.pages_in_use_in(i)
+                                     for i in range(n))
+        peak = s.peak_shard_pages_in_use or (0,) * n
+        s.peak_shard_pages_in_use = tuple(
+            max(p, u) for p, u in zip(peak, s.shard_pages_in_use))
+        s.shard_preemptions = tuple(self.scheduler.preemptions_by_shard)
+        s.placement_prefix_hits = self.scheduler.placement_prefix_hits
+        s.placement_misses = self.scheduler.placement_misses
 
     # -------------------------------------------------- mixed (dense/moe) --
     def _run_mixed(self, plan: StepPlan) -> None:

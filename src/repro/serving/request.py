@@ -48,6 +48,10 @@ class Request:
     num_preemptions: int = 0
     pool_id: int = -1                        # BlockManager key (engine-unique,
                                              # reassigned on re-admission)
+    shard: int = -1                          # KV-pool shard the request is
+                                             # pinned to (placement hint at
+                                             # admission; all its pages stay
+                                             # in that shard's page range)
     prefill_time: float = -1.0               # first-token timestamp
     finish_time: float = -1.0
 

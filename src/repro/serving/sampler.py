@@ -19,6 +19,25 @@ class SamplingParams:
         return self.temperature == 0.0
 
 
+def top_p_mask(lf, top_p: float):
+    """Nucleus keep-mask (B, V): the SMALLEST set of tokens whose
+    probability mass reaches ``top_p``.
+
+    Ties are broken by sorted RANK, not by logit value — masking on
+    ``lf < cutoff`` would keep every token tied with the cutoff logit and
+    inflate the nucleus beyond ``top_p`` (ties are common after top-k
+    masking quantizes the tail to -inf, and in low-precision logits).
+    """
+    order = jnp.argsort(-lf, axis=-1)                # descending, stable
+    sorted_lf = jnp.take_along_axis(lf, order, axis=-1)
+    cum = jnp.cumsum(jax.nn.softmax(sorted_lf, axis=-1), axis=-1)
+    # smallest prefix with cumulative mass >= top_p (keep first exceeding)
+    cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
+    keep_sorted = jnp.arange(lf.shape[-1])[None, :] <= cutoff_idx
+    rank = jnp.argsort(order, axis=-1)               # token -> sorted rank
+    return jnp.take_along_axis(keep_sorted, rank, axis=-1)
+
+
 @partial(jax.jit, static_argnames=("temperature", "top_k", "top_p"))
 def sample(logits, key, *, temperature: float = 0.0, top_k: int = 0,
            top_p: float = 1.0):
@@ -30,11 +49,5 @@ def sample(logits, key, *, temperature: float = 0.0, top_k: int = 0,
         kth = jax.lax.top_k(lf, top_k)[0][:, -1:]
         lf = jnp.where(lf < kth, -jnp.inf, lf)
     if top_p < 1.0:
-        sorted_lf = jnp.sort(lf, axis=-1)[:, ::-1]
-        probs = jax.nn.softmax(sorted_lf, axis=-1)
-        cum = jnp.cumsum(probs, axis=-1)
-        # smallest set with cumulative mass >= top_p (keep first exceeding)
-        cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
-        cutoff = jnp.take_along_axis(sorted_lf, cutoff_idx, axis=-1)
-        lf = jnp.where(lf < cutoff, -jnp.inf, lf)
+        lf = jnp.where(top_p_mask(lf, top_p), lf, -jnp.inf)
     return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)

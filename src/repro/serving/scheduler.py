@@ -1,10 +1,15 @@
-"""Token-budget continuous-batching scheduler over ONE shared paged-KV pool.
+"""Token-budget continuous-batching scheduler over ONE shared paged-KV pool,
+sharded into per-mesh-shard page ranges.
 
 The engine exposes ``num_lanes`` batch lanes, but — unlike the old
 JetStream-style static partition — lanes do NOT own private page pools: all
 lanes draw pages from a single refcounted ``BlockManager`` (prefix-cached,
 LRU-evicted), so memory follows actual sequence lengths instead of reserving
 ``max_len`` per lane (the paper §2 allocator-fragmentation bottleneck).
+The pool's page range is partitioned along the mesh ``(pod, data)`` axes
+(``num_shards``); each request is pinned to one shard at admission so its
+page gathers stay shard-local (Opt-Pa "lazy memory mapping" never crosses
+the interconnect).
 
 Each engine step is composed under a TOKEN BUDGET (Sarathi-style):
 
@@ -14,16 +19,22 @@ Each engine step is composed under a TOKEN BUDGET (Sarathi-style):
     only the first chunk of a long prompt). For chunk-capable families
     (dense/moe) the engine executes decode tokens and prefill chunks in ONE
     device call; other families get one prefill + one decode call per step.
+  * admission is SHARD-AFFINE: a prompt whose chain-hash head is registered
+    on shard s is placed on s (prefix-affinity — CoW reuse is only possible
+    shard-locally); otherwise the least-loaded shard wins. If the preferred
+    shard lacks capacity the request falls back to another shard and the
+    lost reuse is counted as a ``placement_miss``.
   * prefix-cache hits shrink a new request's prefill to the uncached tail
     (full shared pages are reused copy-on-write, never recomputed);
-  * on ``OutOfBlocks`` the YOUNGEST running request is preempted — its
-    non-shared pages freed, its registered pages parked in the prefix
-    cache, and the request requeued at the front with
-    ``effective_prompt = prompt + output`` so greedy decoding resumes
-    token-for-token instead of the engine crashing;
+  * ``OutOfBlocks`` is per-shard: the YOUNGEST running request ON THE
+    PRESSURED SHARD is preempted — its non-shared pages freed, its
+    registered pages parked in the prefix cache, and the request requeued
+    at the front with ``effective_prompt = prompt + output`` so greedy
+    decoding resumes token-for-token instead of the engine crashing;
   * requests that can NEVER be served (prompt + generation budget over the
-    per-request cap ``max_len``, or no bucket for a non-chunkable family)
-    are marked ``REJECTED`` and surfaced, not silently dropped.
+    per-request cap — ``max_len`` or the largest shard's page range — or no
+    bucket for a non-chunkable family) are marked ``REJECTED`` and
+    surfaced, not silently dropped.
 """
 from __future__ import annotations
 
@@ -33,7 +44,8 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
-from repro.cache.block_manager import BlockManager, OutOfBlocks
+from repro.cache.block_manager import (BlockManager, OutOfBlocks,
+                                       padded_pool_pages)
 from repro.serving.request import Request, RequestState
 
 
@@ -78,7 +90,8 @@ class Scheduler:
                  prefill_buckets: List[int], extra_tokens: int = 0,
                  allow_chunked: bool = False,
                  token_budget: Optional[int] = None,
-                 enable_prefix_cache: bool = True):
+                 enable_prefix_cache: bool = True,
+                 num_shards: int = 1):
         self.num_lanes = num_lanes
         self.max_len = max_len                 # per-REQUEST cap, not per-lane
         self.page_size = page_size
@@ -86,19 +99,29 @@ class Scheduler:
         self.extra_tokens = extra_tokens       # modality-stub prefix (vlm)
         self.allow_chunked = allow_chunked
         self.token_budget = token_budget or max(self.prefill_buckets)
+        self.num_shards = max(int(num_shards), 1)
         self.waiting: Deque[Request] = deque()
         self.running: Dict[int, Request] = {}            # lane -> request
         self.free_lanes: List[int] = list(range(num_lanes - 1, -1, -1))
         self.pages_per_lane = (max_len + page_size - 1) // page_size
-        # ONE pool for all lanes; the final page is reserved so its last
-        # line can serve as the Pallas write kernel's SkipSet sentinel.
-        total = max(num_lanes * self.pages_per_lane - 1, 1)
+        # ONE pool for all lanes, page range padded so it tiles evenly over
+        # the shards; the final device page is reserved so its last line can
+        # serve as the Pallas write kernel's SkipSet sentinel (it belongs to
+        # the LAST shard's device range, which therefore owns one page less).
+        p_dev = padded_pool_pages(num_lanes * self.pages_per_lane,
+                                  self.num_shards)
+        total = max(p_dev - 1, 1)
         # prefix reuse needs the chunked continuation path (skipped tokens
         # must still be attendable); monolithic-prefill families recompute.
         self.manager = BlockManager(
             total, page_size,
-            enable_prefix_cache=enable_prefix_cache and allow_chunked)
+            enable_prefix_cache=enable_prefix_cache and allow_chunked,
+            num_shards=self.num_shards)
         self.preemptions = 0
+        self.preemptions_by_shard = [0] * self.num_shards
+        self.placement_prefix_hits = 0   # admitted on the prefix-affine shard
+        self.placement_misses = 0        # prefix lived on a shard we could
+                                         # not use -> cross-shard reuse lost
         self.rejected: List[Request] = []
         self._next_pool_id = 0             # engine-unique allocator keys
                                            # (req_ids may collide across
@@ -118,8 +141,10 @@ class Scheduler:
         req.state = RequestState.REJECTED
         self.rejected.append(req)
 
-    def _youngest_running(self, exclude: Optional[Request] = None):
-        cands = [r for r in self.running.values() if r is not exclude]
+    def _youngest_running(self, exclude: Optional[Request] = None,
+                          shard: Optional[int] = None):
+        cands = [r for r in self.running.values() if r is not exclude
+                 and (shard is None or r.shard == shard)]
         if not cands:
             return None
         return max(cands, key=lambda r: (r.arrival_time, r.req_id))
@@ -137,20 +162,49 @@ class Scheduler:
         req.state = RequestState.PREEMPTED
         self.waiting.appendleft(req)
         self.preemptions += 1
+        if 0 <= req.shard < self.num_shards:
+            self.preemptions_by_shard[req.shard] += 1
+        req.shard = -1                    # re-placed at re-admission
 
     def _append_with_preemption(self, req: Request) -> Optional[int]:
         """Grow ``req`` by one decode slot, preempting the youngest running
-        request on pool exhaustion. Returns None if ``req`` itself was the
-        youngest and had to be preempted."""
+        request ON THE PRESSURED SHARD on exhaustion. Returns None if
+        ``req`` itself was the youngest there and had to be preempted."""
         while True:
             try:
                 return self.manager.append_token(req.pool_id)
-            except OutOfBlocks:
-                victim = self._youngest_running(exclude=req)
+            except OutOfBlocks as e:
+                victim = self._youngest_running(exclude=req, shard=e.shard)
                 if victim is None or _younger(req, victim):
                     self.preempt(req)
                     return None
                 self.preempt(victim)
+
+    def _place(self, pool_id: int, total: int,
+               token_ids) -> Optional[int]:
+        """Shard-affine admission: try the prefix-affine shard first, then
+        every other shard in least-loaded order. Returns the pages' shard or
+        None when no shard can hold the request right now (admission never
+        preempts running work). Updates placement stats."""
+        mgr = self.manager
+        pref = mgr.preferred_shard(token_ids, total)
+        order = sorted(range(self.num_shards), key=mgr.load_key)
+        if pref is not None:
+            order.remove(pref)
+            order.insert(0, pref)
+        for shard in order:
+            try:
+                mgr.allocate(pool_id, total, token_ids=token_ids,
+                             shard=shard)
+            except OutOfBlocks:
+                continue
+            if pref is not None:
+                if shard == pref:
+                    self.placement_prefix_hits += 1
+                else:
+                    self.placement_misses += 1
+            return shard
+        return None
 
     # --------------------------------------------------------------- plan --
     def schedule_step(self) -> StepPlan:
@@ -195,12 +249,15 @@ class Scheduler:
                 final=(r.num_computed + n >= tgt)))
             budget -= n
 
-        # 3) admissions
+        # 3) admissions (shard-affine placement)
         while self.waiting and self.free_lanes and budget > 0:
             r = self.waiting[0]
             eff = r.effective_prompt()
             total = len(eff) + self.extra_tokens
-            cap = min(self.max_len, self.manager.num_pages * self.page_size)
+            # a request is pinned to ONE shard, so the largest shard's page
+            # range bounds what is ever servable
+            cap = min(self.max_len,
+                      mgr.max_shard_capacity() * self.page_size)
             if total + (r.max_new_tokens - r.num_generated) > cap:
                 self.waiting.popleft()
                 self._reject(r)
@@ -215,14 +272,14 @@ class Scheduler:
             if not self.allow_chunked and len(eff) > budget:
                 break              # monolithic prefill must fit this step
             pool_id = self._next_pool_id
-            try:
-                _, cached = mgr.allocate(
-                    pool_id, total,
-                    token_ids=eff if self.allow_chunked else None)
-            except OutOfBlocks:
+            token_ids = eff if self.allow_chunked else None
+            shard = self._place(pool_id, total, token_ids)
+            if shard is None:
                 break              # admission never preempts running work
+            cached = mgr.cached_tokens(pool_id)
             self._next_pool_id += 1
             r.pool_id = pool_id
+            r.shard = shard
             self.waiting.popleft()
             lane = self.free_lanes.pop()
             r.lane = lane

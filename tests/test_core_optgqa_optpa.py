@@ -11,7 +11,7 @@ from repro.core.coopt import CoOptConfig, MODES
 from repro.core.opt_gqa import fold_queries, group_index, mha_to_gqa, \
     unfold_outputs
 from repro.core.opt_kv import identity_page_table
-from repro.core.opt_pa import paged_decode_attention
+from repro.core.opt_pa import effective_page_group, paged_decode_attention
 from repro.cache.quant import quantize_fp8
 from repro.models.layers import causal_attention, repeat_kv
 
@@ -89,6 +89,31 @@ def test_all_modes_agree_bf16():
             q, kv, sc, cl, coopt=MODES[name]), np.float32)
     np.testing.assert_allclose(outs["original"], outs["opt-gqa"], atol=2e-2)
     np.testing.assert_allclose(outs["original"], outs["opt-pa"], atol=2e-2)
+
+
+def test_effective_page_group_pads_instead_of_degrading():
+    """Regression: a page_group that does not divide P used to be halved
+    all the way to 1 — a silent per-page scan with none of Eq. 10's block
+    reduction. The page axis is now PADDED (masked) to the next multiple,
+    keeping the configured group."""
+    assert effective_page_group(8, 3) == (3, 9)     # pad 8 -> 9, group 3
+    assert effective_page_group(8, 8) == (8, 8)     # divides: no pad
+    assert effective_page_group(2, 8) == (2, 2)     # clamped to pool size
+    assert effective_page_group(7, 4) == (4, 8)
+    assert effective_page_group(1, 8) == (1, 1)
+
+
+def test_blockwise_nondividing_page_group_matches_flat():
+    """Numerics with the padded page axis: page_group=3 over an 8-page lane
+    must equal the flat softmax (the pad pages are fully masked)."""
+    q, kv, sc = _paged()
+    cl = jnp.array([100, 37], jnp.int32)
+    flat = paged_decode_attention(q, kv, sc, cl,
+                                  coopt=CoOptConfig(opt_pa=False))
+    blk = paged_decode_attention(
+        q, kv, sc, cl, coopt=CoOptConfig(opt_pa=True, page_group=3))
+    np.testing.assert_allclose(np.asarray(flat, np.float32),
+                               np.asarray(blk, np.float32), atol=2e-2)
 
 
 def test_explicit_page_table_matches_identity_default():

@@ -107,3 +107,24 @@ class TestWindowPageTable:
         table = jnp.array([[7, 5, 3]], jnp.int32)  # lane's physical pages
         phys = np.asarray(logical_to_physical(logical, table))
         assert phys.tolist() == [[7, 3, -1]]
+
+    def test_beyond_table_width_skips_not_aliases(self):
+        """Regression: cache_len > num_pages * ps used to CLAMP the window
+        pages onto page num_pages-1 (attending the wrong page's content);
+        out-of-range logical ids must come back -1 (a skip)."""
+        # 4-page table, 16-token pages, cache_len far past the table
+        t = np.asarray(window_page_table(jnp.array([400]), 4, 16, 64, 1)[0])
+        assert t.max() < 4                        # nothing aliased onto p3
+        live = t[t >= 0]
+        assert len(live) == len(set(live.tolist()))
+        # every window page (ids 20..24) is out of range -> skipped
+        assert set(live.tolist()) <= {0, 1, 2, 3}
+        assert (t == -1).sum() >= 5
+
+    def test_partially_beyond_table_keeps_in_range_pages(self):
+        # cache_len 100 -> last_page 6; table width 5: pages 5,6 skipped,
+        # pages 2..4 of the window survive
+        t = np.asarray(window_page_table(jnp.array([100]), 5, 16, 64, 1)[0])
+        live = set(t[t >= 0].tolist())
+        assert live == {0, 2, 3, 4}
+        assert t.max() < 5

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.serving.sampler import sample
+from repro.serving.sampler import sample, top_p_mask
 
 
 def test_greedy_is_argmax():
@@ -34,6 +34,42 @@ def test_top_p_excludes_tail():
     for s in range(20):
         t = sample(logits, jax.random.PRNGKey(s), temperature=1.0, top_p=0.9)
         assert int(t[0]) == 3
+
+
+def test_top_p_ties_broken_by_rank():
+    """Regression: four exactly-tied logits with top_p=0.26 must keep TWO
+    tokens (0.25 + 0.25 >= 0.26), not all four — the old ``lf < cutoff``
+    mask kept every token tied with the cutoff logit, inflating the nucleus
+    (common after top-k masking quantizes logits)."""
+    logits = jnp.zeros((1, 4))
+    mask = np.asarray(top_p_mask(logits, 0.26))
+    assert mask.tolist() == [[True, True, False, False]]
+    for s in range(30):
+        t = int(sample(logits, jax.random.PRNGKey(s), temperature=1.0,
+                       top_p=0.26)[0])
+        assert t in (0, 1)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 1000),
+       top_p=st.floats(0.05, 0.95))
+def test_top_p_keeps_smallest_sufficient_set(seed, top_p):
+    """Property: the nucleus is the SMALLEST rank-prefix whose probability
+    mass reaches top_p — kept mass >= top_p, and dropping the kept token of
+    lowest rank takes it below. Logits are quantized to force ties."""
+    rng = np.random.default_rng(seed)
+    lf = jnp.asarray(np.round(rng.normal(size=(3, 32)) * 2) / 2, jnp.float32)
+    mask = np.asarray(top_p_mask(lf, top_p))
+    probs = np.asarray(jax.nn.softmax(lf, axis=-1))
+    order = np.argsort(-np.asarray(lf), axis=-1, kind="stable")
+    for b in range(3):
+        kept_ranked = [i for i in order[b] if mask[b, i]]
+        kept_mass = probs[b, kept_ranked].sum()
+        assert kept_mass >= top_p - 1e-5
+        assert kept_mass - probs[b, kept_ranked[-1]] < top_p + 1e-5
+        # the nucleus is a PREFIX of the descending-sorted order
+        n = len(kept_ranked)
+        assert set(kept_ranked) == set(order[b, :n].tolist())
 
 
 def test_temperature_spreads_distribution():

@@ -1,0 +1,235 @@
+"""Sharded KV pool: page-range ownership along the mesh (pod, data) axes,
+shard-affine admission with prefix-affinity placement, per-shard preemption,
+and bit-identical greedy serving vs the single-shard pool.
+
+The BlockManager partition is pure host-side Python, so most tests run on a
+single device; the mesh-gated test at the bottom exercises a real
+(data=4, model=2) simulated mesh when the process was started with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the tier1-mesh8 CI
+job).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.cache.block_manager import BlockManager, OutOfBlocks
+from repro.configs import get_config
+from repro.core.coopt import MODES, ORIGINAL
+from repro.core.opt_kv import padded_pool_pages, shard_page_ranges
+from repro.serving import Engine, EngineConfig, Request
+
+CFG = get_config("qwen3-4b-reduced")
+
+
+def _prompt(rng, n):
+    return rng.integers(0, CFG.vocab_size, n, dtype=np.int32)
+
+
+# ------------------------------------------------------------- partition --
+def test_shard_ranges_tile_pages_axis():
+    """Host page ranges are contiguous, disjoint, cover the pool, and line
+    up with the device pages-axis shard boundaries (the final sentinel page
+    comes out of the LAST shard's device range only)."""
+    p_dev = padded_pool_pages(4 * 8, 4)
+    assert p_dev == 32
+    ranges = shard_page_ranges(p_dev - 1, 4)
+    assert ranges == [(0, 8), (8, 16), (16, 24), (24, 31)]
+    span = p_dev // 4
+    for s, (lo, hi) in enumerate(ranges):
+        assert lo == s * span                      # device shard boundary
+        assert hi <= (s + 1) * span
+    assert padded_pool_pages(30, 4) == 32          # rounds up
+    assert padded_pool_pages(32, 1) == 32          # single shard: unchanged
+
+
+def test_allocation_stays_in_shard_and_oob_is_per_shard():
+    m = BlockManager(31, page_size=64, num_shards=4)
+    pages, _ = m.allocate(1, 100, shard=2)
+    assert all(16 <= p < 24 for p in pages)
+    assert m.seq_shard(1) == 2 and m.shard_of(pages[0]) == 2
+    m.allocate(2, 64 * 6, shard=2)                 # exhaust shard 2
+    with pytest.raises(OutOfBlocks) as ei:
+        m.allocate(3, 64, shard=2)
+    assert ei.value.shard == 2
+    # other shards remain fully allocatable
+    assert m.free_pages_in(0) == 8
+    assert m.can_allocate(64 * 8, shard=0)
+    # append_token only draws from the sequence's own shard
+    m.allocate(4, 64, shard=1)
+    for _ in range(65):
+        slot = m.append_token(4)
+    assert 8 * 64 <= slot < 16 * 64
+
+
+def test_prefix_cache_is_shard_local():
+    """A committed prefix is only reusable on its own shard; the
+    preferred_shard placement hint names where the chain-hash head lives."""
+    m = BlockManager(16, page_size=4, num_shards=2)
+    toks = list(range(9))                          # 2 full pages + 1
+    m.allocate(1, 9, token_ids=toks, shard=0)
+    m.commit_prefill(1, 9, token_ids=toks)
+    assert m.preferred_shard(toks, 9) == 0
+    _, cached_same = m.allocate(2, 9, token_ids=toks, shard=0)
+    _, cached_other = m.allocate(3, 9, token_ids=toks, shard=1)
+    assert cached_same == 8 and cached_other == 0
+    assert m.preferred_shard(list(range(100, 109)), 9) is None
+
+
+def test_per_shard_accounting_sums_to_totals():
+    m = BlockManager(31, page_size=64, num_shards=4)
+    m.allocate(1, 100, shard=0)
+    m.allocate(2, 300, shard=3)
+    assert sum(m.free_pages_in(s) for s in range(4)) == m.free_pages
+    assert sum(m.pages_in_use_in(s) for s in range(4)) == m.pages_in_use
+    assert sum(m.shard_capacity(s) for s in range(4)) == m.num_pages
+    assert m.pages_in_use_in(0) == 2 and m.pages_in_use_in(3) == 5
+    assert m.pages_in_use_in(1) == m.pages_in_use_in(2) == 0
+
+
+# ------------------------------------------------------- engine, sharded --
+def test_sharded_engine_bit_identical_greedy_and_shard_local_tables():
+    """Acceptance: the sharded pool serves bit-identical greedy outputs to
+    the single-shard pool, and at every step no lane's page table contains a
+    page outside its request's shard range."""
+    rng = np.random.default_rng(0)
+    prompts = [_prompt(rng, n) for n in (30, 70, 15, 90)]
+
+    def run(ns):
+        eng = Engine(CFG, MODES["coopt"],
+                     EngineConfig(num_lanes=4, max_len=256,
+                                  prefill_buckets=(16, 32, 64, 128, 256),
+                                  num_shards=ns))
+        reqs = [Request(req_id=i, prompt=p, max_new_tokens=6,
+                        arrival_time=float(i))
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.add_request(r)
+        mgr = eng.scheduler.manager
+        while eng.scheduler.has_work:
+            eng.step()
+            for r in eng.scheduler.running.values():
+                lo, hi = mgr.shard_ranges[r.shard]
+                table = eng.scheduler.page_table(r)
+                live = table[table >= 0]
+                assert np.all((live >= lo) & (live < hi)), \
+                    f"cross-shard page in lane table: {table} vs [{lo},{hi})"
+        return [r.output for r in reqs], eng.stats
+
+    out1, _ = run(1)
+    out8, s8 = run(8)
+    assert out1 == out8
+    assert s8.num_shards == 8 and len(s8.shard_pages) == 8
+    assert sum(s8.shard_pages) == s8.pool_pages
+    assert len(s8.shard_utilization()) == 8
+    assert max(s8.peak_shard_pages_in_use) > 0
+
+
+def test_least_loaded_placement_spreads_requests():
+    eng = Engine(CFG, MODES["coopt"],
+                 EngineConfig(num_lanes=4, max_len=256,
+                              prefill_buckets=(16, 32, 64, 128, 256),
+                              num_shards=4))
+    rng = np.random.default_rng(7)
+    reqs = [Request(req_id=i, prompt=_prompt(rng, 40), max_new_tokens=4,
+                    arrival_time=float(i)) for i in range(4)]
+    for r in reqs:
+        eng.add_request(r)
+    eng.step()
+    # four equal cold requests land on four distinct shards
+    assert sorted(r.shard for r in reqs) == [0, 1, 2, 3]
+    eng.run()
+
+
+def test_per_shard_pressure_preempts_youngest_on_that_shard():
+    """Satellite: fill one shard while the other is empty — the YOUNGEST
+    request on the pressured shard is preempted (not the oldest, not a
+    request on another shard), resumes greedy-exact, and the cross-shard
+    re-placement is counted as a placement miss in EngineStats."""
+    rng = np.random.default_rng(2)
+    shared = _prompt(rng, 64)                     # one full shared page
+    pa = np.concatenate([shared, _prompt(rng, 6)])
+    pb = np.concatenate([shared, _prompt(rng, 8)])
+
+    def mk(ns, lanes):
+        return Engine(CFG, ORIGINAL,                # bf16: bit-stable resume
+                      EngineConfig(num_lanes=lanes, max_len=256,
+                                   prefill_buckets=(16, 32, 64, 128, 256),
+                                   num_shards=ns))
+
+    def run(eng):
+        a = Request(req_id=1, prompt=pa, max_new_tokens=120, arrival_time=0.0)
+        b = Request(req_id=2, prompt=pb, max_new_tokens=100, arrival_time=1.0)
+        eng.add_request(a)
+        eng.step()            # A prefills fully; its page-0 hash commits
+        eng.add_request(b)    # prefix affinity pins B to A's shard
+        eng.run()
+        return a, b
+
+    # 2 shards of a (2 lanes x 4 pages) pool: shard 0 = 4 pages, shard 1 = 3
+    eng = mk(2, lanes=2)
+    a, b = run(eng)
+    s = eng.stats
+    assert a.shard == 0 and s.placement_prefix_hits >= 1  # B joined shard 0
+    assert s.shard_preemptions[0] >= 1 and s.shard_preemptions[1] == 0
+    assert b.num_preemptions >= 1 and a.num_preemptions == 0  # youngest hit
+    assert s.placement_misses >= 1      # B re-placed off its prefix's shard
+    assert len(a.output) == 120 and len(b.output) == 100
+
+    # greedy-exact resume: identical tokens vs an unpressured engine
+    a2, b2 = run(mk(1, lanes=3))
+    assert a.output == a2.output and b.output == b2.output
+
+
+def test_request_larger_than_shard_rejected():
+    """A request is pinned to ONE shard, so the largest shard's page range
+    caps what is servable — beyond it the request is REJECTED up front
+    instead of live-locking in preempt/retry."""
+    eng = Engine(CFG, MODES["coopt"],
+                 EngineConfig(num_lanes=4, max_len=512,
+                              prefill_buckets=(16, 32, 64, 128, 512),
+                              num_shards=8))
+    # shard capacity = 4*8/8 = 4 pages = 256 tokens < 300 + 8
+    r = Request(req_id=1, prompt=_prompt(np.random.default_rng(3), 300),
+                max_new_tokens=8)
+    eng.add_request(r)
+    eng.run()
+    assert eng.stats.rejected == 1 and r.output == []
+
+
+# ------------------------------------------------------------ mesh-gated --
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8 (tier1-mesh8 CI job)")
+def test_sharded_pool_on_simulated_mesh_bit_identical():
+    """On a real (data=4, model=2) simulated mesh: shard the device cache
+    leaves along the pages axis, run the engine with the matching host
+    page-range partition, and require bit-identical greedy outputs vs the
+    unsharded single-device engine."""
+    from jax.sharding import NamedSharding
+    from repro.launch.mesh import kv_shard_count, make_sim_mesh
+    from repro.launch.steps import CACHE_RULES, axes_pspec
+
+    mesh = make_sim_mesh(data=4, model=2)
+    ns = kv_shard_count(mesh)
+    assert ns == 4
+
+    rng = np.random.default_rng(11)
+    prompts = [_prompt(rng, n) for n in (30, 70, 45)]
+    ecfg = EngineConfig(num_lanes=4, max_len=256,
+                        prefill_buckets=(16, 32, 64, 128, 256))
+
+    ref = Engine(CFG, MODES["coopt"], ecfg)
+    out_ref = ref.generate(prompts, max_new_tokens=5)
+
+    eng = Engine(CFG, MODES["coopt"],
+                 EngineConfig(**{**ecfg.__dict__, "num_shards": ns}))
+    shapes = eng.model.cache_shape(ecfg.num_lanes, ecfg.max_len,
+                                   eng.coopt, num_shards=ns)
+    eng.cache = {
+        k: jax.device_put(
+            leaf, NamedSharding(mesh, axes_pspec(shapes[k][0], shapes[k][2],
+                                                 mesh, CACHE_RULES)))
+        for k, leaf in eng.cache.items()}
+    out_mesh = eng.generate(prompts, max_new_tokens=5)
+    assert out_ref == out_mesh
+    assert eng.stats.num_shards == ns
