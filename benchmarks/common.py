@@ -62,6 +62,9 @@ def run_engine_workload(cfg, coopt, *, requests: int = 8, num_lanes: int = 3,
         "prefill_s": round(s.prefill_time, 4),          # in lockstep engine)
         "decode_s": round(s.decode_time, 4),
         "throughput_tok_s": round(s.generated_tokens / max(wall, 1e-9), 2),
+        # per-request latency: TTFT (enqueue -> first token) and mean TPOT
+        # percentiles over finished requests
+        **s.latency_summary(),
         # shared-pool health (global refcounted allocator): how full the
         # pool ran and how much shared-prompt work the prefix cache saved
         "pool_pages": s.pool_pages,

@@ -39,11 +39,10 @@ def main():
         engine.step()
         step += 1
         if step % 20 == 0:
-            frag = max(m.fragmentation()
-                       for m in engine.scheduler.managers)
+            frag = engine.scheduler.manager.fragmentation()
             print(f"  step {step:4d}  running={len(engine.scheduler.running)}"
                   f"  waiting={len(engine.scheduler.waiting)}"
-                  f"  worst lane fragmentation={frag:.2f}")
+                  f"  pool fragmentation={frag:.2f}")
     wall = time.perf_counter() - t0
 
     s = engine.stats
@@ -53,6 +52,11 @@ def main():
     print(f"latency  (Eq.11): {wall:.2f}s "
           f"(prefill {s.prefill_time:.2f}s, decode {s.decode_time:.2f}s)")
     print(f"throughput(Eq.12): {s.generated_tokens / wall:.1f} tok/s")
+    lat = s.latency_summary()
+    print(f"TTFT p50/p95    : {lat['ttft_p50_s']:.3f}s / "
+          f"{lat['ttft_p95_s']:.3f}s")
+    print(f"TPOT p50/p95    : {lat['tpot_p50_s']:.3f}s / "
+          f"{lat['tpot_p95_s']:.3f}s")
 
 
 if __name__ == "__main__":

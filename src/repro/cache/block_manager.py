@@ -93,11 +93,32 @@ class SeqBlocks:
     num_tokens: int = 0
     cached_tokens: int = 0        # leading tokens served by the prefix cache
     committed_pages: int = 0      # full pages registered in the hash table
+    committed_hash: int = 0       # running chain hash after committed_pages
+                                  # (commit_prefill extends incrementally)
     shard: int = 0                # owning shard — all pages stay in its range
 
 
 def _chain_hash(prev: int, toks: Sequence[int]) -> int:
     return hash((prev, tuple(int(t) for t in toks)))
+
+
+def extend_chain_hash(h: int, token_ids: Sequence[int], from_page: int,
+                      to_page: int, page_size: int) -> int:
+    """Extend a running chain hash from ``from_page`` to ``to_page`` —
+    incremental form so hot paths never rehash from page 0 (O(pages) per
+    request instead of O(pages^2) across its chunk ends)."""
+    for i in range(from_page, to_page):
+        h = _chain_hash(h, token_ids[i * page_size:(i + 1) * page_size])
+    return h
+
+
+def chain_hash_tokens(token_ids: Sequence[int], num_pages: int,
+                      page_size: int) -> int:
+    """Chain hash of the first ``num_pages`` full pages of ``token_ids`` —
+    the key under which those pages are registered in the prefix table.
+    Engines use it to key side-band resume artifacts (e.g. recurrent-state
+    snapshots at committed page boundaries) to the same identity."""
+    return extend_chain_hash(0, token_ids, 0, num_pages, page_size)
 
 
 class BlockManager:
@@ -124,6 +145,12 @@ class BlockManager:
         self._page_to_hash: Dict[int, int] = {}
         self._seqs: Dict[int, SeqBlocks] = {}
         self._ref: Dict[int, int] = {}                 # page -> refcount
+        # Optional hash -> bool veto consulted during prefix matching.
+        # Recurrent-state families (griffin/rwkv6) set this to "a state
+        # snapshot exists for this prefix": reusing KV pages without the
+        # recurrent state at that boundary would skip tokens the state has
+        # never seen, so a match requires BOTH.
+        self.prefix_gate = None
         # ------------------------------------------------------------ stats --
         self.prefix_queries = 0       # full prompt pages looked up
         self.prefix_hits = 0          # full prompt pages served from cache
@@ -216,6 +243,9 @@ class BlockManager:
         if (not self.enable_prefix_cache or token_ids is None
                 or num_tokens <= self.page_size):
             return None
+        # restorability (prefix_gate) is deliberately NOT consulted here:
+        # placement affinity only needs to know where the prompt's pages
+        # LIVE; _match_prefix decides how much of them is actually reusable
         h = _chain_hash(0, token_ids[: self.page_size])
         for s in range(self.num_shards):
             if h in self._hash_by_shard[s]:
@@ -252,15 +282,24 @@ class BlockManager:
         return self._free_by_shard[shard].pop()
 
     def _match_prefix(self, token_ids: Optional[Sequence[int]],
-                      num_tokens: int, shard: int) -> Tuple[List[int], int]:
+                      num_tokens: int,
+                      shard: int) -> Tuple[List[int], int, int]:
         """Leading full-page cache hits for this prompt WITHIN ``shard``.
-        Returns (hit pages, matched token count). Never matches the ENTIRE
-        prompt — at least one token is recomputed so prefill emits logits."""
+        Returns (hit pages, matched token count, chain hash at the match
+        boundary). Never matches the ENTIRE prompt — at least one token is
+        recomputed so prefill emits logits.
+
+        With a ``prefix_gate`` the match is TRIMMED back to the deepest
+        boundary the gate accepts (not broken at the first rejection):
+        recurrent-state snapshots only exist at chunk-end boundaries, so
+        intermediate page hashes are registered but not restorable."""
         if not self.enable_prefix_cache or token_ids is None:
-            return [], 0
+            return [], 0, 0
         max_match = (num_tokens - 1) // self.page_size   # full pages, < all
         table = self._hash_by_shard[shard]
         hits: List[int] = []
+        hashes: List[int] = []
+        gated = 0                      # deepest gate-accepted page count
         h = 0
         for i in range(max_match):
             lo = i * self.page_size
@@ -270,8 +309,13 @@ class BlockManager:
             if page is None:
                 break
             hits.append(page)
-            self.prefix_hits += 1
-        return hits, len(hits) * self.page_size
+            hashes.append(h)
+            if self.prefix_gate is None or self.prefix_gate(h):
+                gated = len(hits)
+        hits = hits[:gated]
+        self.prefix_hits += len(hits)
+        return hits, len(hits) * self.page_size, \
+            (hashes[gated - 1] if gated else 0)
 
     def allocate(self, seq_id: int, num_tokens: int,
                  token_ids: Optional[Sequence[int]] = None,
@@ -290,7 +334,8 @@ class BlockManager:
             shard = self.least_loaded_shard()
         need = (num_tokens + self.page_size - 1) // self.page_size
         stats_snap = (self.prefix_queries, self.prefix_hits)
-        hits, cached = self._match_prefix(token_ids, num_tokens, shard)
+        hits, cached, h_match = self._match_prefix(token_ids, num_tokens,
+                                                   shard)
         for p in hits:                                  # commit the reuse
             self._ref[p] = self._ref.get(p, 0) + 1      # may come off the LRU
             self._lru_by_shard[shard].pop(p, None)
@@ -318,6 +363,7 @@ class BlockManager:
             pages.append(p)
         self._seqs[seq_id] = SeqBlocks(pages, num_tokens, cached,
                                        committed_pages=len(hits),
+                                       committed_hash=h_match,
                                        shard=shard)
         return pages, cached
 
@@ -333,17 +379,16 @@ class BlockManager:
         full = computed_tokens // self.page_size
         if full <= sb.committed_pages:
             return
-        h = 0
-        for i in range(full):
+        h = sb.committed_hash          # resume the chain: O(new pages) only
+        for i in range(sb.committed_pages, full):
             lo = i * self.page_size
             h = _chain_hash(h, token_ids[lo:lo + self.page_size])
-            if i < sb.committed_pages:
-                continue                                # already registered
             page = sb.pages[i]
             if h not in table and page not in self._page_to_hash:
                 table[h] = page
                 self._page_to_hash[page] = h
         sb.committed_pages = full
+        sb.committed_hash = h
 
     def append_token(self, seq_id: int) -> int:
         """Account one generated token; grows the page list on boundary

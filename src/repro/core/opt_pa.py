@@ -136,6 +136,59 @@ def paged_decode_attention(q, kv_pages, scale_pages, cache_len, *,
     return _flat(q, kv_lane, None, cache_len, coopt, valid)
 
 
+# ------------------------------------------------ continuation prefill ----
+def paged_chunk_attention(q, kv_pages, scale_pages, positions, page_table,
+                          coopt: CoOptConfig, *, window: int = 0,
+                          sink_pages: int = 1) -> jax.Array:
+    """Chunked-continuation prefill attention (the ONE ragged step path):
+    a chunk of queries per lane — q (B,S,Hq,D) with absolute ``positions``
+    (B,S) — attends over the lane's WHOLE cached history (prefix-cache hits,
+    earlier chunks, and this chunk, already written) through its page table.
+    Key j of the gathered view is the lane's logical position j, so causality
+    is a plain position compare; a decode lane is a chunk of length 1.
+
+    ``window`` > 0 applies the block-sparse {sliding window + sink} policy
+    (griffin local attention, long-context decode) with the same mask as the
+    decode path, so a token's logits are schedule-independent.
+    Returns (B, S, Hq, D) in q.dtype."""
+    B, S, Hq, D = q.shape
+    _, P_total, ps, Hkv, _ = kv_pages.shape
+    if page_table is None:
+        page_table = identity_page_table(B, P_total)
+
+    if coopt.use_kernel:
+        from repro.kernels import ops
+        return ops.paged_chunk_prefill(
+            q, positions, kv_pages, scale_pages, page_table,
+            opt_kv=coopt.opt_kv, opt_gqa=coopt.opt_gqa, window=window,
+            sink_pages=sink_pages)
+
+    # jnp reference: gather the lane's pages in logical order, then a
+    # position-masked softmax over the gathered view.
+    flat = gather_cached_kv(kv_pages, scale_pages, page_table, coopt)
+    k, v = flat                                        # (B,T,Hkv,D) each
+    T = k.shape[1]
+    if not coopt.opt_gqa and Hkv != Hq:
+        # Original: KV physically expanded per query head (Fig. 2)
+        k, v = repeat_kv(k, Hq // Hkv), repeat_kv(v, Hq // Hkv)
+        Hg, G = Hq, 1
+    else:
+        Hg, G = Hkv, Hq // Hkv
+    qg = q.reshape(B, S, Hg, G, D).astype(jnp.float32)
+    s = jnp.einsum("bshgd,bthd->bhgst", qg, k.astype(jnp.float32))
+    s = s * (1.0 / math.sqrt(D))
+    kpos = jnp.arange(T, dtype=jnp.int32)[None, None, :]
+    qpos = positions[:, :, None]
+    mask = (kpos <= qpos) & \
+        jnp.repeat(page_table >= 0, ps, axis=1)[:, None, :]
+    if window:
+        mask &= (kpos > qpos - window) | (kpos < sink_pages * ps)
+    s = jnp.where(mask[:, None, None], s, _NEG)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgst,bthd->bshgd", pr, v.astype(jnp.float32))
+    return o.reshape(B, S, Hq, D).astype(q.dtype)
+
+
 # --------------------------------------------------------------- Original --
 def _flat(q, kv_pages, scale_pages, cache_len, coopt, valid):
     B, Hq, D = q.shape

@@ -1,0 +1,177 @@
+"""Paged continuation-prefill Pallas kernel — chunked prefill (Sarathi-style
+mixed step) attending over the GLOBAL paged-KV pool.
+
+This is the missing piece between ``flash_prefill`` (contiguous in-flight K/V,
+whole-prompt causal tiles) and ``paged_gqa_decode`` (one query token against
+the pool): a CHUNK of queries per lane, each with an absolute position, whose
+keys are the lane's *already-cached* pages — earlier chunks, prefix-cache
+hits, and the chunk itself (written before attention). The lane's physical
+page table is scalar-prefetched and dereferenced inside the BlockSpec
+index_map, so a chunk's queries attend over prior cached pages without the
+host gathering the whole history into a contiguous buffer (Opt-Pa "lazy
+memory mapping", paper §3.3, applied to the prefill continuation).
+
+Grid: (batch, kv_head, q_block, logical_page). Queries arrive grouped
+(Opt-GQA): rows are (seq, group) pairs, so each KV page is streamed into VMEM
+once per G query heads. Per-row absolute positions ride along as a VMEM
+input blocked with the query tiles; the causal / sliding-window / sink masks
+compare them against ``logical_page * ps + iota`` — Eq. 9's valid-block
+filter in the logical page domain, Eq. 10's online softmax across pages.
+
+Page skipping: table entries of -1 (unallocated, or masked beyond the lane's
+``cache_len`` by the caller) are predicated off with ``pl.when`` — neither
+DMA'd (index_map redirects to page 0) nor computed. Pages entirely in the
+future of the query tile are skipped by the same predicate using the tile's
+maximum position.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
+_NEG = -1e30
+
+
+def _chunk_kernel(phys_ref,                          # scalar prefetch
+                  q_ref, pos_ref, k_ref, v_ref, ks_ref, vs_ref,
+                  o_ref, m_ref, l_ref, acc_ref,
+                  *, ps: int, opt_kv: bool, window: int, sink: int,
+                  num_pages: int):
+    b = pl.program_id(0)
+    j = pl.program_id(3)                             # logical page id
+    bq, D = q_ref.shape[2], q_ref.shape[3]
+    page = phys_ref[b, j]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos = pos_ref[0, 0].astype(jnp.int32)           # (bq,) per-row position
+    # causal page skip: the page is dead if its first key position is beyond
+    # every query in the tile (positions are non-decreasing per lane only
+    # within a chunk, so use the tile max)
+    live = jnp.logical_and(page >= 0, j * ps <= jnp.max(qpos))
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, D)
+        k = k_ref[0, :, 0, :]                        # (ps, D)
+        v = v_ref[0, :, 0, :]
+        if opt_kv:                                   # Eq. 6 fused dequant
+            k = k.astype(jnp.float32) * ks_ref[0].reshape(ps, 1)
+            v = v.astype(jnp.float32) * vs_ref[0].reshape(ps, 1)
+        else:
+            k = k.astype(jnp.float32)
+            v = v.astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * (1.0 / math.sqrt(D))                 # (bq, ps)
+        kpos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (bq, ps), 1)
+        qp = jnp.broadcast_to(qpos[:, None], (bq, ps))
+        mask = kpos <= qp
+        if window:
+            mask &= (kpos > qp - window) | (kpos < sink * ps)
+        s = jnp.where(mask, s, _NEG)
+        m_prev = m_ref[:, 0:1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_ref[:, 0:1] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == num_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, 0:1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_chunk_prefill(q, positions, k_pages, v_pages, k_scale, v_scale,
+                        phys_table, *, opt_kv: bool, opt_gqa: bool = True,
+                        window: int = 0, sink_pages: int = 0,
+                        block_q: int = 256, interpret: bool = True):
+    """q: (B, S, Hq, D) chunk queries; positions: (B, S) absolute per-row
+    positions; k/v_pages: (P_total, ps, Hkv, D) GLOBAL pool [fp8 if opt_kv];
+    k/v_scale: (P_total, ps, Hkv) f32 or None; phys_table: (B, NP) int32
+    physical pages in logical order (-1 = skip, never DMA'd). The chunk's
+    own K/V must already be written to the pool. Returns (B, S, Hq, D)."""
+    B, S, Hq, D = q.shape
+    P, ps, Hkv, _ = k_pages.shape
+    NP = phys_table.shape[1]
+    if opt_gqa:
+        G = Hq // Hkv
+        heads, kv_of_head = Hkv, lambda h: h
+    else:
+        # Original MHA semantics: every query head re-streams its KV head.
+        G = 1
+        heads, kv_of_head = Hq, lambda h: h // max(Hq // Hkv, 1)
+    R = S * G
+
+    bq = min(block_q, R)
+    while R % bq or bq % G:                          # seq rows stay grouped
+        bq -= 1
+    NQ = R // bq
+
+    # (B,S,Hq,D) -> (B,heads,R,D): row r = s*G + g; positions repeat per
+    # group (grouped mode) or per head block (MHA mode: R == S).
+    qf = q.reshape(B, S, heads, G, D).transpose(0, 2, 1, 3, 4) \
+          .reshape(B, heads, R, D)
+    pos_rep = jnp.repeat(positions.astype(jnp.int32), G, axis=1)  # (B, R)
+    pos_rep = pos_rep.reshape(B, 1, R)
+
+    if k_scale is None:
+        k_scale = jnp.zeros((P, ps, Hkv), jnp.float32)
+        v_scale = k_scale
+
+    def kv_idx(b, h, i, j, phys):
+        return (jnp.maximum(phys[b, j], 0), 0, kv_of_head(h), 0)
+
+    def sc_idx(b, h, i, j, phys):
+        return (jnp.maximum(phys[b, j], 0), 0, kv_of_head(h))
+
+    kern = functools.partial(_chunk_kernel, ps=ps, opt_kv=opt_kv,
+                             window=window, sink=sink_pages, num_pages=NP)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, heads, NQ, NP),
+            in_specs=[
+                pl.BlockSpec((1, 1, bq, D),
+                             lambda b, h, i, j, phys: (b, h, i, 0)),
+                pl.BlockSpec((1, 1, bq),
+                             lambda b, h, i, j, phys: (b, 0, i)),
+                pl.BlockSpec((1, ps, 1, D), kv_idx),
+                pl.BlockSpec((1, ps, 1, D), kv_idx),
+                pl.BlockSpec((1, ps, 1), sc_idx),
+                pl.BlockSpec((1, ps, 1), sc_idx),
+            ],
+            out_specs=pl.BlockSpec((1, 1, bq, D),
+                                   lambda b, h, i, j, phys: (b, h, i, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((bq, 128), jnp.float32),
+                pltpu.VMEM((bq, 128), jnp.float32),
+                pltpu.VMEM((bq, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, heads, R, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(phys_table.astype(jnp.int32), qf, pos_rep, k_pages, v_pages,
+      k_scale, v_scale)
+    return out.reshape(B, heads, S, G, D).transpose(0, 2, 1, 3, 4) \
+              .reshape(B, S, Hq, D)

@@ -20,6 +20,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import flash_chunk_prefill as _fc
 from repro.kernels import flash_prefill as _fp
 from repro.kernels import kv_cache_write as _kw
 from repro.kernels import paged_gqa_decode as _pd
@@ -84,3 +85,20 @@ def flash_prefill(q, k, v, *, window: int = 0, block_q: int = 256,
     return _fp.flash_prefill(q, k, v, window=window, block_q=block_q,
                              block_k=block_k, q_offset=q_offset,
                              interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("opt_kv", "opt_gqa", "window",
+                                   "sink_pages"))
+def paged_chunk_prefill(q, positions, kv_pages, scale_pages, phys_table, *,
+                        opt_kv: bool, opt_gqa: bool, window: int = 0,
+                        sink_pages: int = 0):
+    """Continuation-prefill attention over the global pool: a chunk of
+    queries (B,S,Hq,D) with absolute ``positions`` (B,S) attends the lane's
+    cached pages named by the scalar-prefetched ``phys_table`` (B,NP; -1 =
+    never DMA'd). The chunk's own K/V must already be written."""
+    ks = scale_pages[0] if scale_pages is not None else None
+    vs = scale_pages[1] if scale_pages is not None else None
+    return _fc.flash_chunk_prefill(
+        q, positions.astype(jnp.int32), kv_pages[0], kv_pages[1], ks, vs,
+        phys_table.astype(jnp.int32), opt_kv=opt_kv, opt_gqa=opt_gqa,
+        window=window, sink_pages=sink_pages, interpret=INTERPRET)

@@ -46,6 +46,8 @@ def serve_workload(arch: str, mode: str, *, requests: int = 16,
         "decode_time_s": round(s.decode_time, 4),
         "latency_s": round(s.total_time, 4),          # Eq. 11
         "throughput_tok_s": round(s.throughput(), 2),  # Eq. 12
+        # per-request latency percentiles (TTFT / mean TPOT per request)
+        **s.latency_summary(),
         # shared-pool health (global refcounted allocator)
         "pool_pages": s.pool_pages,
         "peak_pool_utilization": round(

@@ -30,7 +30,7 @@ from repro.configs.base import ModelConfig
 from repro.core.coopt import CoOptConfig, COOPT
 from repro.core.opt_kv import (identity_page_table, identity_slots,
                                padded_pool_pages, write_kv)
-from repro.core.opt_pa import paged_decode_attention
+from repro.core.opt_pa import paged_chunk_attention, paged_decode_attention
 from repro.models.layers import (Spec, apply_rope, causal_attention, init_tree,
                                  linear, repeat_kv, rmsnorm, shard_act)
 
@@ -42,6 +42,11 @@ def _pages(seq_len: int, page_size: int) -> int:
 
 
 class GriffinModel:
+    # batch-major cache leaves carrying cross-chunk recurrent state: the
+    # engine zeroes them on a request's first chunk and snapshots them at
+    # committed page boundaries (prefix-cache resume points)
+    recurrent_leaves = ("conv", "lru")
+
     def __init__(self, cfg: ModelConfig):
         assert cfg.family == "griffin"
         self.cfg = cfg
@@ -271,22 +276,49 @@ class GriffinModel:
         h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
         return linear(h, params["lm_head"]), {}
 
-    def prefill(self, params, batch, cache, coopt: CoOptConfig = COOPT):
+    def prefill(self, params, batch, cache, coopt: CoOptConfig = COOPT,
+                long_window: int = 0):
+        """Prompt prefill (``long_window`` accepted for engine-call
+        uniformity; local attention always uses ``cfg.local_window``,
+        matching ``decode_step``). With ``batch["positions"]`` (B,S) this
+        is a CONTINUATION chunk (the unified ragged step path): the recurrent
+        state in the cache is the state after the previous chunk and is
+        threaded straight through (state after chunk k feeds chunk k+1),
+        while the local-attention layers write this chunk's K/V to the paged
+        pool and attend the lane's whole cached history with true positions
+        — a decode lane is a chunk of length 1."""
         cfg = self.cfg
         tokens = batch["tokens"]
         B, S = tokens.shape
         h = params["embed"][tokens].astype(jnp.bfloat16)
         h = shard_act(h, ("batch", "seq", None))
-        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        chunked = "positions" in batch
+        if chunked:
+            positions = batch["positions"].astype(jnp.int32)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
         P_total = cache["kv"].shape[2]
+        page_table = batch.get("page_table")
         if "slot_idx" in batch:
             slots = batch["slot_idx"].astype(jnp.int32)
         else:
             slots = identity_slots(B, positions, P_total, coopt.page_size)
         valid = batch.get("pad_mask")
         last_pos = batch.get("last_pos")
+        H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
 
         def attn_fn(ap, x, kv_c, sc_c):
+            if chunked:
+                q = linear(x, ap["wq"]).reshape(B, S, H, D)
+                k = linear(x, ap["wk"]).reshape(B, S, Hkv, D)
+                v = linear(x, ap["wv"]).reshape(B, S, Hkv, D)
+                q = apply_rope(q, positions, cfg.rope_theta)
+                k = apply_rope(k, positions, cfg.rope_theta)
+                kv_c, sc_c = write_kv(kv_c, sc_c, k, v, slots, coopt)
+                o = paged_chunk_attention(
+                    q, kv_c, sc_c, positions, page_table, coopt,
+                    window=cfg.local_window, sink_pages=cfg.sink_blocks)
+                return linear(o.reshape(B, S, H * D), ap["wo"]), kv_c, sc_c
             a, k, v = self._attn_full(ap, x, positions, coopt)
             kv_c, sc_c = write_kv(kv_c, sc_c, k, v, slots, coopt)
             return a, kv_c, sc_c

@@ -55,6 +55,68 @@ def mla_full_attention(q_nope, q_rope, latent, p, cfg, *, window: int = 0):
     return o                                          # (B,S,H,dv)
 
 
+def mla_chunk_attention(q_nope, q_rope, lat_pages, scale_pages, positions,
+                        page_table, p, cfg, coopt: CoOptConfig, *,
+                        window: int = 0, sink_pages: int = 1):
+    """Matrix-absorption CHUNK attention against the global latent pool —
+    the MLA leg of the unified chunked-continuation prefill path.
+
+    q_nope (B,S,H,dn), q_rope (B,S,H,dr) are this chunk's queries with
+    absolute ``positions`` (B,S); the chunk's latents are already written to
+    the paged cache, so queries attend the lane's WHOLE gathered latent
+    history (prefix-cache hits + earlier chunks + this one) in absorbed form
+    — K/V are never materialised per head, exactly like decode (a decode
+    lane is a chunk of length 1). Returns (B,S,H,dv)."""
+    H, dn, dr, R, dv = (cfg.num_heads, cfg.qk_nope_head_dim,
+                        cfg.qk_rope_head_dim, cfg.kv_lora_rank,
+                        cfg.v_head_dim)
+    B, S = q_nope.shape[:2]
+    P_total, ps, _ = lat_pages.shape
+    if page_table is None:
+        from repro.core.opt_kv import identity_page_table
+        page_table = identity_page_table(B, P_total)
+    scale = 1.0 / math.sqrt(dn + dr)
+    # absorb W_uk into q (see mla_paged_decode): score_h(s,t) =
+    # <q_lat_{s,h}, c_t> + <q_rope_{s,h}, k_rope_t>
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32),
+                       p["w_uk"].reshape(R, H, dn).astype(jnp.float32))
+    q_lat = shard_act(q_lat, ("batch", None, None, "latent"))
+    q_rope = shard_act(q_rope.astype(jnp.float32),
+                       ("batch", None, None, "latent"))
+
+    pt = jnp.maximum(page_table, 0)
+    lat = jnp.take(lat_pages, pt, axis=0)              # (B,NP,ps,R+dr)
+    if coopt.opt_kv:
+        sc = jnp.take(scale_pages, pt, axis=0)
+        c = dequantize_fp8(lat[..., :R], sc[..., 0], axis=-1,
+                           dtype=jnp.float32)
+        r = dequantize_fp8(lat[..., R:], sc[..., 1], axis=-1,
+                           dtype=jnp.float32)
+        lat = jnp.concatenate([c, r], axis=-1)
+    else:
+        lat = lat.astype(jnp.float32)
+    T = page_table.shape[1] * ps
+    lat = lat.reshape(B, T, R + dr)
+    lat_c = shard_act(lat[..., :R], ("batch", None, "latent"))
+    lat_r = shard_act(lat[..., R:], ("batch", None, "latent"))
+
+    s = (jnp.einsum("bshr,btr->bhst", q_lat, lat_c)
+         + jnp.einsum("bshe,bte->bhst", q_rope, lat_r)) * scale
+    s = shard_act(s, ("batch", None, None, None))
+    kpos = jnp.arange(T, dtype=jnp.int32)[None, None, :]
+    qpos = positions[:, :, None]
+    mask = (kpos <= qpos) & \
+        jnp.repeat(page_table >= 0, ps, axis=1)[:, None, :]
+    if window:
+        mask &= (kpos > qpos - window) | (kpos < sink_pages * ps)
+    s = jnp.where(mask[:, None], s, _NEG)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bshr", pr, lat_c)
+    return jnp.einsum("bshr,rhd->bshd", o_lat,
+                      p["w_uv"].reshape(R, H, dv).astype(jnp.float32)
+                      ).astype(q_nope.dtype)
+
+
 def mla_paged_decode(q_nope, q_rope, lat_pages, scale_pages, cache_len, p, cfg,
                      coopt: CoOptConfig, *, window: int = 0, sink_pages: int = 1,
                      page_table=None):

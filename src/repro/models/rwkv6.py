@@ -37,6 +37,11 @@ _CHUNK = 32       # chunked-scan length — bounds the (C,C,H,D) pairwise-decay
 
 
 class RWKV6Model:
+    # batch-major cache leaves carrying cross-chunk recurrent state: the
+    # engine zeroes them on a request's first chunk and snapshots them at
+    # committed page boundaries (prefix-cache resume points)
+    recurrent_leaves = ("wkv", "shift_t", "shift_c")
+
     def __init__(self, cfg: ModelConfig):
         assert cfg.family == "rwkv6"
         self.cfg = cfg
@@ -250,10 +255,17 @@ class RWKV6Model:
         h, _ = self._run(params, batch["tokens"], None)
         return linear(h, params["lm_head"]), {}
 
-    def prefill(self, params, batch, cache, coopt: CoOptConfig = COOPT):
+    def prefill(self, params, batch, cache, coopt: CoOptConfig = COOPT,
+                long_window: int = 0):
+        """Prompt prefill / chunked continuation (the unified ragged step
+        path): the state pytree in ``cache`` is the state after the previous
+        chunk and threads straight through — paged-cache plumbing
+        (positions/slots/page_table/long_window) is accepted and ignored."""
         valid = batch.get("pad_mask")
         last_pos = batch.get("last_pos")
         h, cache = self._run(params, batch["tokens"], cache, valid, last_pos)
+        if "cache_len" in batch:
+            cache["length"] = batch["cache_len"].astype(jnp.int32)
         if last_pos is not None:
             h_last = jnp.take_along_axis(
                 h, last_pos[:, None, None].astype(jnp.int32), axis=1)[:, 0]

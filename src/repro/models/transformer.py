@@ -10,7 +10,6 @@ Step kinds (configs/shapes.py):
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, Optional
 
 import jax
@@ -18,9 +17,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.coopt import CoOptConfig, COOPT
-from repro.core.opt_kv import (gather_cached_kv, identity_page_table,
-                               identity_slots, padded_pool_pages, write_kv)
-from repro.core.opt_pa import paged_decode_attention
+from repro.core.opt_kv import (identity_page_table, identity_slots,
+                               padded_pool_pages, write_kv)
+from repro.core.opt_pa import paged_chunk_attention, paged_decode_attention
 from repro.models import mla as mla_mod
 from repro.models.layers import (Spec, apply_rope, causal_attention, init_tree,
                                  linear, repeat_kv, rmsnorm, shard_act, swiglu)
@@ -389,45 +388,39 @@ class TransformerModel:
         return h, cache
 
     def _attention_chunk(self, p, x, positions, kv_c, sc_c, page_table,
-                         coopt):
+                         coopt, long_window: int = 0):
         """Prefill-continuation attention (chunked prefill / mixed step):
         the chunk's K/V are already written to the GLOBAL paged cache;
-        queries attend over the lane's WHOLE cache (previous chunks + this
-        one) gathered via its page table — key j of the gathered view is the
-        lane's logical position j, so causality is a plain position compare.
-        Supports PER-LANE query positions (the token-budget scheduler mixes
-        decode lanes, chunk length 1, with prefill-chunk lanes in one call).
-        Non-MLA families only."""
+        queries attend over the lane's WHOLE cache (prefix-cache hits +
+        previous chunks + this one) through its page table with true
+        positions — see ``core.opt_pa.paged_chunk_attention``. Supports
+        PER-LANE query positions (the token-budget scheduler mixes decode
+        lanes, chunk length 1, with prefill-chunk lanes in one call). MLA
+        runs the matrix-absorption form against the latent pool. The
+        ``long_window`` block-sparse policy matches ``_attention_decode``,
+        so a token's logits are step-composition independent."""
         cfg = self.cfg
         B, S, _ = x.shape
+        window = cfg.attn_window or long_window
+        if cfg.family == "mla":
+            H = cfg.num_heads
+            dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+            q = linear(x, p["wq"]).reshape(B, S, H, dn + dr)
+            qn, qr = q[..., :dn], q[..., dn:]
+            qr = apply_rope(qr, positions, cfg.rope_theta)
+            o = mla_mod.mla_chunk_attention(
+                qn, qr, kv_c, sc_c, positions, page_table, p, cfg, coopt,
+                window=window, sink_pages=cfg.sink_blocks)
+            return linear(o.reshape(B, S, -1), p["wo"])
         H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
         q = linear(x, p["wq"], p.get("bq")).reshape(B, S, H, D)
         if cfg.qk_norm:
             q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
         q = apply_rope(q, positions, cfg.rope_theta)
-        flat = gather_cached_kv(kv_c, sc_c, page_table, coopt)
-        k, v = flat                                    # (B,T,Hkv,D) each
-        T, ps = k.shape[1], kv_c.shape[2]
-        if not coopt.opt_gqa and Hkv != H:
-            # Original: KV physically expanded per query head (Fig. 2)
-            k, v = repeat_kv(k, H // Hkv), repeat_kv(v, H // Hkv)
-            Hg, G = H, 1
-        else:
-            Hg, G = Hkv, H // Hkv
-        qg = q.reshape(B, S, Hg, G, D).astype(jnp.float32)
-        s = jnp.einsum("bshgd,bthd->bhgst", qg, k.astype(jnp.float32))
-        s = s * (1.0 / math.sqrt(D))
-        kpos = jnp.arange(T, dtype=jnp.int32)[None, None, :]
-        qpos = positions[:, :, None]
-        mask = (kpos <= qpos) & \
-            jnp.repeat(page_table >= 0, ps, axis=1)[:, None, :]
-        if cfg.attn_window:
-            mask &= kpos > qpos - cfg.attn_window
-        s = jnp.where(mask[:, None, None], s, -1e30)
-        pr = jax.nn.softmax(s, axis=-1)
-        o = jnp.einsum("bhgst,bthd->bshgd", pr, v.astype(jnp.float32))
-        o = o.reshape(B, S, H * D).astype(x.dtype)
-        return linear(o, p["wo"])
+        o = paged_chunk_attention(q, kv_c, sc_c, positions, page_table,
+                                  coopt, window=window,
+                                  sink_pages=cfg.sink_blocks)
+        return linear(o.reshape(B, S, H * D).astype(x.dtype), p["wo"])
 
     def _pool_defaults(self, cache, batch, B):
         """(page_table, total_pages) — batch-provided or lane-identity."""
@@ -438,27 +431,38 @@ class TransformerModel:
             pt = identity_page_table(B, P_total)
         return pt.astype(jnp.int32), P_total
 
-    def prefill(self, params, batch, cache, coopt: CoOptConfig = COOPT):
+    def prefill(self, params, batch, cache, coopt: CoOptConfig = COOPT,
+                long_window: int = 0):
         """Full-prompt forward + cache population. Returns
         (last-token logits (B,V), cache).
 
         Chunked-prefill continuation (Sarathi-style / mixed decode+prefill
-        step): pass ``batch["positions"]`` (B, S) with each lane's absolute
-        positions plus matching GLOBAL ``slot_idx``, the lane ``page_table``
-        and the post-step ``cache_len``; attention then runs over the whole
-        gathered cache so chunk k+1 sees chunks 0..k — and a decode lane is
-        just a chunk of length 1 (transformer families except MLA)."""
+        step — the engine's ONE ragged step path): pass
+        ``batch["positions"]`` (B, S) with each lane's absolute positions
+        plus matching GLOBAL ``slot_idx``, the lane ``page_table`` and the
+        post-step ``cache_len``; attention then runs over the whole cached
+        history so chunk k+1 sees chunks 0..k — and a decode lane is just a
+        chunk of length 1. All transformer families: dense/moe/vlm via
+        ``paged_chunk_attention``, MLA via the absorbed latent form. For vlm,
+        token column j IS position ``positions[:, j]``: columns whose
+        position falls inside the patch-stub prefix take their embedding
+        from ``batch["patches"]`` instead of the token table."""
         cfg = self.cfg
-        h, off = self._embed(params, batch)
-        B, S, _ = h.shape
         chunked = "positions" in batch
-        if chunked and cfg.family == "mla":
-            raise NotImplementedError(
-                "chunked prefill not implemented for MLA (absorbed-latent "
-                "continuation attention); use monolithic prefill")
         if chunked:
             positions = batch["positions"].astype(jnp.int32)
+            h = params["embed"][batch["tokens"]].astype(jnp.bfloat16)
+            off = cfg.num_patches if cfg.family == "vlm" else 0
+            if off and "patches" in batch:
+                pidx = jnp.clip(positions, 0, off - 1)
+                pe = jnp.take_along_axis(
+                    batch["patches"].astype(jnp.bfloat16),
+                    pidx[..., None], axis=1)
+                h = jnp.where((positions < off)[..., None], pe, h)
+            B, S, _ = h.shape
         else:
+            h, off = self._embed(params, batch)
+            B, S, _ = h.shape
             positions = jnp.broadcast_to(jnp.arange(S), (B, S))
         h = shard_act(h, ("batch", "seq", None))
         page_table, P_total = self._pool_defaults(cache, batch, B)
@@ -474,12 +478,12 @@ class TransformerModel:
 
         def step(hh, pl, kv_c, sc_c, kind):
             x = rmsnorm(hh, pl["ln1"], cfg.norm_eps)
-            if chunked and cfg.family != "mla":
+            if chunked:
                 new_a, new_b = self._new_kv(pl, x, positions)
                 kv_c, sc_c = self._write_layer(kv_c, sc_c, new_a, new_b,
                                                slots, coopt)
                 a = self._attention_chunk(pl, x, positions, kv_c, sc_c,
-                                          page_table, coopt)
+                                          page_table, coopt, long_window)
             else:
                 a, new_a, new_b = self._attention_full(pl, x, positions,
                                                        coopt)

@@ -30,7 +30,7 @@ from repro.configs.base import ModelConfig
 from repro.core.coopt import CoOptConfig, COOPT
 from repro.core.opt_kv import (identity_page_table, identity_slots,
                                padded_pool_pages, write_kv)
-from repro.core.opt_pa import paged_decode_attention
+from repro.core.opt_pa import paged_chunk_attention, paged_decode_attention
 from repro.cache.quant import quantize_fp8, dequantize_fp8
 from repro.models.layers import (Spec, causal_attention, gelu_mlp, init_tree,
                                  layernorm, linear, repeat_kv, shard_act)
@@ -161,7 +161,7 @@ class WhisperModel:
     # -------------------------------------------------------------- decoder --
     def _decoder(self, params, tokens, cache, coopt, positions, slots,
                  write_cache: bool, long_window: int = 0,
-                 page_table=None, cache_len=None):
+                 page_table=None, cache_len=None, chunk_attn: bool = False):
         cfg = self.cfg
         B, S = tokens.shape
         H, D = cfg.num_heads, cfg.head_dim
@@ -189,7 +189,17 @@ class WhisperModel:
             k = linear(x, pl["wk"]).reshape(B, S, H, D)
             v = linear(x, pl["wv"], pl["bv"]).reshape(B, S, H, D)
             kv_c, sc_c = write_kv(kv_c, sc_c, k, v, slots, coopt)
-            if S == 1:
+            if chunk_attn:
+                # continuation chunk: attend the lane's whole cached history
+                # (prefix hits + earlier chunks + this one) with true
+                # positions — the unified ragged step path; the long_window
+                # policy mirrors the decode branch so a token's logits are
+                # step-composition independent
+                o = paged_chunk_attention(q, kv_c, sc_c, positions,
+                                          page_table, coopt,
+                                          window=long_window,
+                                          sink_pages=cfg.sink_blocks)
+            elif S == 1:
                 o = paged_decode_attention(
                     q[:, 0], kv_c, sc_c, new_len, coopt=coopt,
                     window=long_window, sink_pages=cfg.sink_blocks,
@@ -248,25 +258,56 @@ class WhisperModel:
                              slots, True)
         return linear(h, params["lm_head"]), {}
 
-    def prefill(self, params, batch, cache, coopt: CoOptConfig = COOPT):
+    def prefill(self, params, batch, cache, coopt: CoOptConfig = COOPT,
+                long_window: int = 0):
+        """Prompt prefill — monolithic (whole right-padded prompt) or
+        chunked continuation (``positions`` present: absolute per-lane
+        positions, the unified ragged step path).
+
+        Cross-attention K/V are computed ONCE per request, on its FIRST
+        chunk: pass ``frames`` plus a per-lane bool ``cross_mask`` naming
+        the lanes whose cross K/V should be (re)filled; steps with no new
+        first chunk omit ``frames`` and skip the encoder entirely."""
         cfg = self.cfg
         tokens = batch["tokens"]
         B, S = tokens.shape
-        enc = self.encode(params, batch["frames"])
-        cache = self._fill_cross(params, cache, enc, coopt)
-        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        chunked = "positions" in batch
+        if "frames" in batch:
+            enc = self.encode(params, batch["frames"])
+            filled = self._fill_cross(params, cache, enc, coopt)
+            cm = batch.get("cross_mask")
+            if cm is None:
+                cache = filled
+            else:
+                merged = dict(cache)
+                keys = [("xk", 1), ("xv", 1)]
+                if coopt.opt_kv:
+                    keys.append(("xscale", 2))       # (L, 2, B, F, H)
+                for key, ax in keys:
+                    new = filled[key]
+                    m = cm.reshape((1,) * ax + (-1,) +
+                                   (1,) * (new.ndim - ax - 1))
+                    merged[key] = jnp.where(m, new, cache[key])
+                cache = merged
+        if chunked:
+            positions = batch["positions"].astype(jnp.int32)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
         if "slot_idx" in batch:
             slots = batch["slot_idx"].astype(jnp.int32)
         else:
             slots = identity_slots(B, positions, cache["kv"].shape[2],
                                    coopt.page_size)
         h, cache = self._decoder(params, tokens, cache, coopt, positions,
-                                 slots, True,
-                                 cache_len=batch.get("cache_len"))
+                                 slots, True, long_window=long_window,
+                                 page_table=batch.get("page_table"),
+                                 cache_len=batch.get("cache_len"),
+                                 chunk_attn=chunked)
         last_pos = batch.get("last_pos")
         if last_pos is not None:
-            # pads carry slot -1 (never cached); length = real token count
-            cache["length"] = (last_pos + 1).astype(jnp.int32)
+            if not chunked:
+                # pads carry slot -1 (never cached); length = real tokens
+                cache["length"] = (last_pos + 1).astype(jnp.int32)
             h_last = jnp.take_along_axis(
                 h, last_pos[:, None, None].astype(jnp.int32), axis=1)[:, 0]
         else:

@@ -25,25 +25,34 @@ batch-major leaves (per-lane lengths, recurrent state, whisper cross-KV) are
 masked with the admitted-lane mask.
 
 Scheduling (Sarathi-style): each step is composed under a token budget,
-mixing decode tokens and chunked-prefill chunks. For chunk-capable families
-(dense/moe) the whole step is ONE device call through the continuation
-prefill path (a decode lane is a chunk of length 1); other families run one
-bucketed prefill + one decode call per step. Admission is shard-affine
-(prefix-affinity first, least-loaded fallback). Shard exhaustion preempts
-the youngest running request ON THE PRESSURED SHARD (freed pages,
-front-of-queue requeue, greedy-exact resume) instead of crashing;
-impossible requests are REJECTED and surfaced.
+mixing decode tokens and chunked-prefill chunks, and EVERY family executes
+the whole step as ONE device call through the chunked-continuation prefill
+path (a decode lane is a chunk of length 1; a step with only decode lanes
+takes the one-token decode kernel). The Opt-Pa two-step strategy — "segment
+long sequences into manageable chunks, then apply lazy memory mapping and
+computation" (paper §3.3) — therefore applies uniformly: dense/moe/vlm
+attend the gathered paged history with true positions, MLA in absorbed
+latent form, whisper over its decoder self-KV (cross-KV computed once, on
+the first chunk), and griffin/rwkv6 thread their recurrent state across
+chunks (the state after chunk k is the input state of chunk k+1), with
+state snapshots at committed page boundaries backing their prefix cache.
+Admission is shard-affine (prefix-affinity first, least-loaded fallback).
+Shard exhaustion preempts the youngest running request ON THE PRESSURED
+SHARD (freed pages, front-of-queue requeue, greedy-exact resume) instead of
+crashing; impossible requests are REJECTED and surfaced.
 """
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache.block_manager import chain_hash_tokens, extend_chain_hash
 from repro.configs.base import ModelConfig
 from repro.core.coopt import CoOptConfig, COOPT
 from repro.models import get_model
@@ -67,6 +76,8 @@ class EngineConfig:
                                     # mesh (pod, data) extent the cache
                                     # pages axis is sharded over
                                     # (launch.mesh.kv_shard_count)
+    state_cache_entries: int = 128  # recurrent-state snapshots retained
+                                    # (griffin/rwkv6 prefix-cache resume)
 
 
 @dataclass
@@ -75,8 +86,11 @@ class EngineStats:
     decode_steps: int = 0
     mixed_steps: int = 0            # decode + prefill fused in one call
     generated_tokens: int = 0
-    prefill_time: float = 0.0
-    decode_time: float = 0.0
+    prefill_time: float = 0.0       # mixed-step wall time is split by
+    decode_time: float = 0.0        # planned token share (Eq. 12 fairness)
+    # ------------------------------------------------ per-request latency --
+    ttft_s: List[float] = field(default_factory=list)   # enqueue->1st token
+    tpot_s: List[float] = field(default_factory=list)   # mean s/token after
     # ----------------------------------------------------- pool health ----
     pool_pages: int = 0
     pages_in_use: int = 0           # referenced by live sequences (now)
@@ -101,9 +115,28 @@ class EngineStats:
         return self.prefill_time + self.decode_time
 
     def throughput(self) -> float:
-        """Paper Eq. 12: generated tokens / generation time."""
+        """Paper Eq. 12: generated tokens / generation time (decode's
+        token-share of mixed steps, not whole mixed-step wall clock)."""
         return self.generated_tokens / self.decode_time \
             if self.decode_time else 0.0
+
+    @staticmethod
+    def _pct(xs: List[float], q: float) -> float:
+        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+    def ttft(self, q: float = 50.0) -> float:
+        """Time-to-first-token percentile (s) over finished requests."""
+        return self._pct(self.ttft_s, q)
+
+    def tpot(self, q: float = 50.0) -> float:
+        """Per-request mean time-per-output-token percentile (s)."""
+        return self._pct(self.tpot_s, q)
+
+    def latency_summary(self) -> Dict[str, float]:
+        return {"ttft_p50_s": round(self.ttft(50), 4),
+                "ttft_p95_s": round(self.ttft(95), 4),
+                "tpot_p50_s": round(self.tpot(50), 4),
+                "tpot_p95_s": round(self.tpot(95), 4)}
 
     def pool_utilization(self) -> float:
         return self.pages_in_use / self.pool_pages if self.pool_pages else 0.0
@@ -138,17 +171,24 @@ class Engine:
                                            num_shards=engine_cfg.num_shards)
         self._patch_offset = (model_cfg.num_patches
                               if model_cfg.family == "vlm" else 0)
-        # chunked continuation prefill (and therefore mixed steps + prefix
-        # caching): attention families able to attend over the gathered
-        # cache with true positions (see TransformerModel.prefill)
-        self._chunked = model_cfg.family in ("dense", "moe")
+        # recurrent-state families: chunk boundaries land on page boundaries
+        # so the cross-chunk state can be snapshotted as the prefix cache's
+        # resume artifact (KV pages alone cannot resume a recurrence)
+        self._rec_leaves = tuple(getattr(self.model, "recurrent_leaves", ()))
         self.scheduler = Scheduler(
             B, M, coopt.page_size, list(engine_cfg.prefill_buckets),
             extra_tokens=self._patch_offset,
-            allow_chunked=self._chunked,
             token_budget=engine_cfg.token_budget or None,
             enable_prefix_cache=engine_cfg.enable_prefix_cache,
-            num_shards=engine_cfg.num_shards)
+            num_shards=engine_cfg.num_shards,
+            page_aligned=bool(self._rec_leaves))
+        # chain-hash(prefix pages) -> per-lane state slices; the manager's
+        # prefix_gate makes page matching stop at the last boundary we can
+        # actually restore
+        self._state_cache: "OrderedDict[int, Dict[str, np.ndarray]]" = \
+            OrderedDict()
+        if self._rec_leaves:
+            self.scheduler.manager.prefix_gate = self._state_cache.__contains__
         self.stats = EngineStats()
         self.stats.pool_pages = self.scheduler.manager.num_pages
 
@@ -177,8 +217,9 @@ class Engine:
         return out
 
     def _prefill_impl(self, params, batch, cache, lane_mask):
-        logits, new_cache = self.model.prefill(params, batch, cache,
-                                               self.coopt)
+        logits, new_cache = self.model.prefill(
+            params, batch, cache, self.coopt,
+            long_window=self.ecfg.long_window)
         return logits, self._mask_lanes(new_cache, cache, lane_mask)
 
     def _decode_impl(self, params, batch, cache, lane_mask):
@@ -198,14 +239,20 @@ class Engine:
               first: bool) -> None:
         req.output.append(tok)
         self.stats.generated_tokens += 1
-        if first:
-            req.prefill_time = now
+        if first and req.prefill_time < 0:
+            req.prefill_time = now          # TTFT anchor survives preemption
 
     def _finish_done(self, reqs: List[Request]) -> None:
         done = [r for r in reqs if r.done()]
         now = time.perf_counter()
         for r in done:
             r.finish_time = now
+            if r.prefill_time >= 0 and r.enqueue_time >= 0:
+                self.stats.ttft_s.append(r.prefill_time - r.enqueue_time)
+                if r.num_generated > 1:
+                    self.stats.tpot_s.append(
+                        (r.finish_time - r.prefill_time)
+                        / (r.num_generated - 1))
             self.scheduler.finish(r)
 
     def _update_pool_stats(self) -> None:
@@ -232,72 +279,165 @@ class Engine:
         s.placement_prefix_hits = self.scheduler.placement_prefix_hits
         s.placement_misses = self.scheduler.placement_misses
 
-    # -------------------------------------------------- mixed (dense/moe) --
+    # ------------------------------------------------- recurrent snapshots --
+    def _lane_index(self, leaf: str, lane: int):
+        ax = self._batch_axis[leaf]
+        return (slice(None),) * ax + (lane,)
+
+    def _reset_or_restore_state(self, chunks: List[PrefillChunk]) -> None:
+        """First chunk of a (re)admitted request on a recurrent-state
+        family: the lane's state leaves hold the PREVIOUS occupant's state —
+        zero them, or restore the snapshot matching the prefix-cache hit
+        (``start > 0`` implies the manager's prefix_gate verified one)."""
+        ps = self.coopt.page_size
+        for c in chunks:
+            if not c.first:
+                continue
+            lane = c.req.lane
+            snap = None
+            # (re)seed the request's running chain hash at its resume point
+            c.req.prefix_hash_pages = c.start // ps
+            c.req.prefix_hash = chain_hash_tokens(
+                c.req.effective_prompt(), c.req.prefix_hash_pages, ps)
+            if c.start > 0:
+                snap = self._state_cache[c.req.prefix_hash]
+                self._state_cache.move_to_end(c.req.prefix_hash)
+            for leaf in self._rec_leaves:
+                idx = self._lane_index(leaf, lane)
+                cur = self.cache[leaf]
+                val = 0 if snap is None else jnp.asarray(snap[leaf],
+                                                         cur.dtype)
+                self.cache[leaf] = cur.at[idx].set(val)
+
+    def _snapshot_state(self, c: PrefillChunk) -> None:
+        """A chunk that ended exactly on a page boundary leaves the lane's
+        recurrent state at a committed-prefix resume point: snapshot it
+        under the same chain hash the pages were registered with."""
+        ps = self.coopt.page_size
+        end = c.start + c.n
+        if end % ps or not self.ecfg.enable_prefix_cache:
+            return
+        # extend the request's running hash — never rehash from page 0
+        key = extend_chain_hash(c.req.prefix_hash, c.req.effective_prompt(),
+                                c.req.prefix_hash_pages, end // ps, ps)
+        c.req.prefix_hash, c.req.prefix_hash_pages = key, end // ps
+        if key in self._state_cache:
+            self._state_cache.move_to_end(key)
+            return
+        self._state_cache[key] = {
+            leaf: np.asarray(self.cache[leaf][self._lane_index(leaf,
+                                                               c.req.lane)])
+            for leaf in self._rec_leaves}
+        while len(self._state_cache) > self.ecfg.state_cache_entries:
+            self._state_cache.popitem(last=False)
+
+    # --------------------------------------------------- the ONE step path --
     def _run_mixed(self, plan: StepPlan) -> None:
-        """One device call for the whole step: prefill chunks + decode
-        tokens through the chunked-continuation path (a decode lane is a
-        chunk of length 1)."""
+        """One device call for the whole step, for EVERY model family:
+        prefill chunks + decode tokens through the chunked-continuation
+        path (a decode lane is a chunk of length 1). A step with only
+        decode lanes takes the one-token decode kernel — same composition,
+        S == 1, with the block-sparse ``long_window`` policy available."""
         B = self.ecfg.num_lanes
         NP = self.scheduler.pages_per_lane
         mgr = self.scheduler.manager
-        S = bucket_len(max([c.n for c in plan.prefill] or [1]),
-                       self.scheduler.prefill_buckets) or \
-            max(c.n for c in plan.prefill)
+        off = self._patch_offset
 
-        tokens = np.zeros((B, S), np.int32)
-        positions = np.zeros((B, S), np.int32)
-        slot_idx = np.full((B, S), -1, np.int32)     # Eq. 5 SkipSet: pads
+        if self._rec_leaves and plan.prefill:
+            self._reset_or_restore_state(plan.prefill)
+
         page_table = np.full((B, NP), -1, np.int32)
         cache_len = np.zeros(B, np.int32)
-        last_pos = np.zeros(B, np.int32)
         lane_mask = np.zeros(B, bool)
+        S = (bucket_len(max(c.n for c in plan.prefill),
+                        self.scheduler.prefill_buckets) or
+             max(c.n for c in plan.prefill)) if plan.prefill else 1
+        tokens = np.zeros((B, S), np.int32)
+        positions = np.zeros((B, S), np.int32)
+        slot_idx = np.full((B, S), -1, np.int32)      # Eq. 5 SkipSet: pads
+        pad_mask = np.zeros((B, S), bool)
+        last_pos = np.zeros(B, np.int32)
 
         for c in plan.prefill:
             lane, n = c.req.lane, c.n
-            tokens[lane, :n] = c.tokens
+            # token column j holds position start+j; columns inside the
+            # vlm patch-stub prefix carry a placeholder id (the model
+            # swaps in the patch embedding by position)
+            pcols = min(max(off - c.start, 0), n)
+            tokens[lane, pcols:pcols + len(c.tokens)] = c.tokens
             positions[lane] = np.minimum(c.start + np.arange(S),
                                          c.start + n - 1)
             slot_idx[lane, :n] = mgr.slot_indices(
                 c.req.pool_id, np.arange(c.start, c.start + n))
             page_table[lane] = self.scheduler.page_table(c.req)
             cache_len[lane] = c.start + n
+            pad_mask[lane, :n] = True
             last_pos[lane] = n - 1
             lane_mask[lane] = True
-        for d in plan.decode:
+        for d in plan.decode:                          # a chunk of length 1
             lane = d.req.lane
             tokens[lane, 0] = d.req.output[-1]
             positions[lane] = d.pos
             slot_idx[lane, 0] = d.slot
             page_table[lane] = self.scheduler.page_table(d.req)
             cache_len[lane] = d.pos + 1
+            pad_mask[lane, 0] = True
             last_pos[lane] = 0
             lane_mask[lane] = True
 
-        batch = {"tokens": jnp.asarray(tokens),
-                 "positions": jnp.asarray(positions),
+        batch = {"positions": jnp.asarray(positions),
                  "slot_idx": jnp.asarray(slot_idx),
                  "page_table": jnp.asarray(page_table),
-                 "cache_len": jnp.asarray(cache_len),
-                 "last_pos": jnp.asarray(last_pos)}
+                 "cache_len": jnp.asarray(cache_len)}
+        if plan.prefill:
+            batch.update(tokens=jnp.asarray(tokens),
+                         pad_mask=jnp.asarray(pad_mask),
+                         last_pos=jnp.asarray(last_pos))
+            if self.cfg.family == "vlm":
+                batch["patches"] = jnp.zeros((B, off, self.cfg.d_model),
+                                             jnp.bfloat16)
+            if self.cfg.family == "whisper":
+                firsts = np.zeros(B, bool)
+                for c in plan.prefill:
+                    firsts[c.req.lane] |= c.first
+                if firsts.any():
+                    # cross-KV is computed ONCE per request, on its first
+                    # chunk; steps without one skip the encoder entirely
+                    batch["frames"] = jnp.zeros(
+                        (B, self.cfg.num_frames, self.cfg.d_model),
+                        jnp.bfloat16)
+                    batch["cross_mask"] = jnp.asarray(firsts)
+            fn = self._prefill_fn
+        else:
+            batch["token"] = jnp.asarray(tokens)
+            fn = self._decode_fn
+
         t0 = time.perf_counter()
-        logits, self.cache = self._prefill_fn(self.params, batch, self.cache,
-                                              jnp.asarray(lane_mask))
+        logits, self.cache = fn(self.params, batch, self.cache,
+                                jnp.asarray(lane_mask))
         logits.block_until_ready()
         dt = time.perf_counter() - t0
-        if plan.decode:
-            self.stats.decode_time += dt
-            self.stats.decode_steps += 1
-            if plan.prefill:
-                self.stats.mixed_steps += 1
-        else:
-            self.stats.prefill_time += dt
-        if plan.prefill:
+
+        # timing attribution by planned token share: a prefill-heavy mixed
+        # step must not book its whole wall time under decode (Eq. 12)
+        tp = sum(c.n for c in plan.prefill)
+        td = len(plan.decode)
+        share = dt / max(tp + td, 1)
+        if tp:
+            self.stats.prefill_time += share * tp
             self.stats.prefill_calls += 1
+        if td:
+            self.stats.decode_time += share * td
+            self.stats.decode_steps += 1
+        if tp and td:
+            self.stats.mixed_steps += 1
 
         toks = self._sample(logits)
         now = time.perf_counter()
         for c in plan.prefill:
             self.scheduler.note_prefilled(c.req, c.n)
+            if self._rec_leaves:
+                self._snapshot_state(c)
             if c.final:
                 self._emit(c.req, int(toks[c.req.lane]), now, first=True)
         for d in plan.decode:
@@ -305,105 +445,9 @@ class Engine:
         self._finish_done([c.req for c in plan.prefill if c.final] +
                           [d.req for d in plan.decode])
 
-    # --------------------------------------- monolithic prefill (others) --
-    def _run_prefill(self, chunks: List[PrefillChunk]) -> None:
-        """Bucketed whole-prompt prefill for families without the chunked
-        continuation path (mla/vlm/whisper/rwkv6/griffin)."""
-        B = self.ecfg.num_lanes
-        off = self._patch_offset
-        mgr = self.scheduler.manager
-        bucket = max(bucket_len(c.req.prompt_len + c.req.num_generated,
-                                self.scheduler.prefill_buckets)
-                     for c in chunks)
-        S = off + bucket
-        tokens = np.zeros((B, bucket), np.int32)
-        slot_idx = np.full((B, S), -1, np.int32)       # Eq. 5 SkipSet: pads
-        pad_mask = np.zeros((B, S), bool)
-        cache_len = np.zeros(B, np.int32)
-        last_pos = np.zeros(B, np.int32)
-        lane_mask = np.zeros(B, bool)
-        for c in chunks:
-            r = c.req
-            eff = r.effective_prompt()
-            plen = len(eff)
-            tokens[r.lane, :plen] = eff
-            # lane pages -> global slots for positions [0, off + plen)
-            # (vlm: patch embeddings occupy the leading ``off`` positions)
-            pos = np.arange(off + plen)
-            slot_idx[r.lane, :off + plen] = mgr.slot_indices(r.pool_id, pos)
-            pad_mask[r.lane, :off + plen] = True
-            cache_len[r.lane] = off + plen
-            last_pos[r.lane] = off + plen - 1
-            lane_mask[r.lane] = True
-
-        batch = {"tokens": jnp.asarray(tokens),
-                 "slot_idx": jnp.asarray(slot_idx),
-                 "pad_mask": jnp.asarray(pad_mask),
-                 "cache_len": jnp.asarray(cache_len),
-                 "last_pos": jnp.asarray(last_pos)}
-        if self.cfg.family == "vlm":
-            batch["patches"] = jnp.zeros((B, off, self.cfg.d_model),
-                                         jnp.bfloat16)
-        if self.cfg.family == "whisper":
-            batch["frames"] = jnp.zeros(
-                (B, self.cfg.num_frames, self.cfg.d_model), jnp.bfloat16)
-
-        t0 = time.perf_counter()
-        logits, self.cache = self._prefill_fn(self.params, batch, self.cache,
-                                              jnp.asarray(lane_mask))
-        logits.block_until_ready()
-        self.stats.prefill_time += time.perf_counter() - t0
-        self.stats.prefill_calls += 1
-
-        toks = self._sample(logits)
-        now = time.perf_counter()
-        for c in chunks:
-            # monolithic prefill covers the modality-stub prefix too — the
-            # chunk carries only text tokens, but ``off`` patch positions
-            # were written as well
-            self.scheduler.note_prefilled(c.req, off + c.n)
-            self._emit(c.req, int(toks[c.req.lane]), now, first=True)
-        self._finish_done([c.req for c in chunks])
-
-    # -------------------------------------------------------------- decode --
-    def _run_decode(self, items: List[DecodeItem]) -> None:
-        B = self.ecfg.num_lanes
-        NP = self.scheduler.pages_per_lane
-        tokens = np.zeros((B, 1), np.int32)
-        positions = np.zeros((B, 1), np.int32)
-        slots = np.full((B, 1), -1, np.int32)
-        page_table = np.full((B, NP), -1, np.int32)
-        cache_len = np.zeros(B, np.int32)
-        lane_mask = np.zeros(B, bool)
-        for d in items:
-            lane = d.req.lane
-            tokens[lane, 0] = d.req.output[-1]
-            positions[lane, 0] = d.pos
-            slots[lane, 0] = d.slot
-            page_table[lane] = self.scheduler.page_table(d.req)
-            cache_len[lane] = d.pos + 1
-            lane_mask[lane] = True
-
-        batch = {"token": jnp.asarray(tokens),
-                 "positions": jnp.asarray(positions),
-                 "slot_idx": jnp.asarray(slots),
-                 "page_table": jnp.asarray(page_table),
-                 "cache_len": jnp.asarray(cache_len)}
-        t0 = time.perf_counter()
-        logits, self.cache = self._decode_fn(self.params, batch, self.cache,
-                                             jnp.asarray(lane_mask))
-        logits.block_until_ready()
-        self.stats.decode_time += time.perf_counter() - t0
-        self.stats.decode_steps += 1
-
-        toks = self._sample(logits)
-        now = time.perf_counter()
-        for d in items:
-            self._emit(d.req, int(toks[d.req.lane]), now, first=False)
-        self._finish_done([d.req for d in items])
-
     # ---------------------------------------------------------------- API --
     def add_request(self, req: Request) -> None:
+        req.enqueue_time = time.perf_counter()
         self.scheduler.add_request(req)
 
     def step(self) -> None:
@@ -411,13 +455,7 @@ class Engine:
         if plan.empty:
             self._update_pool_stats()       # rejections still count
             return
-        if self._chunked and plan.prefill:
-            self._run_mixed(plan)           # decode + prefill, one call
-        else:
-            if plan.prefill:
-                self._run_prefill(plan.prefill)
-            if plan.decode:
-                self._run_decode(plan.decode)
+        self._run_mixed(plan)
         self._update_pool_stats()
 
     def run(self, max_steps: int = 100_000) -> None:

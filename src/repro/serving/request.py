@@ -2,9 +2,10 @@
 
 States: WAITING -> RUNNING -> FINISHED, plus
   REJECTED  — can never be served (prompt + generation budget exceeds the
-              per-request cap, or no prefill bucket fits a non-chunkable
-              family). Surfaced by ``Engine.generate`` instead of silently
-              returning an empty output.
+              per-request cap). Surfaced by ``Engine.generate`` instead of
+              silently returning an empty output. (The old "no prefill
+              bucket for a non-chunkable family" rejection is gone: every
+              family is served via chunked continuation prefill.)
   PREEMPTED — evicted mid-flight by the token-budget scheduler to relieve
               pool pressure (OutOfBlocks); its non-shared pages were freed
               and it waits at the FRONT of the queue. On re-admission the
@@ -52,7 +53,14 @@ class Request:
                                              # pinned to (placement hint at
                                              # admission; all its pages stay
                                              # in that shard's page range)
-    prefill_time: float = -1.0               # first-token timestamp
+    prefix_hash: int = 0                     # running chain hash after
+    prefix_hash_pages: int = 0               # ..this many pages (engine's
+                                             # incremental snapshot keying,
+                                             # recurrent families)
+    enqueue_time: float = -1.0               # perf_counter at add_request
+                                             # (TTFT anchor)
+    prefill_time: float = -1.0               # first-token timestamp (kept
+                                             # across preemptions)
     finish_time: float = -1.0
 
     @property

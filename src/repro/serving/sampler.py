@@ -19,6 +19,19 @@ class SamplingParams:
         return self.temperature == 0.0
 
 
+def top_k_mask(lf, top_k: int):
+    """Top-k keep-mask (B, V): EXACTLY the ``top_k`` highest-ranked tokens.
+
+    Ties are broken by sorted RANK, mirroring ``top_p_mask`` — masking on
+    ``lf < kth`` would keep every token tied with the k-th logit and
+    inflate the candidate set beyond k (common after low-precision logits
+    quantize the tail to a few distinct values).
+    """
+    order = jnp.argsort(-lf, axis=-1)                # descending, stable
+    rank = jnp.argsort(order, axis=-1)               # token -> sorted rank
+    return rank < top_k
+
+
 def top_p_mask(lf, top_p: float):
     """Nucleus keep-mask (B, V): the SMALLEST set of tokens whose
     probability mass reaches ``top_p``.
@@ -46,8 +59,7 @@ def sample(logits, key, *, temperature: float = 0.0, top_k: int = 0,
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     lf = logits.astype(jnp.float32) / temperature
     if top_k:
-        kth = jax.lax.top_k(lf, top_k)[0][:, -1:]
-        lf = jnp.where(lf < kth, -jnp.inf, lf)
+        lf = jnp.where(top_k_mask(lf, top_k), lf, -jnp.inf)
     if top_p < 1.0:
         lf = jnp.where(top_p_mask(lf, top_p), lf, -jnp.inf)
     return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)

@@ -1,5 +1,6 @@
 """Token-budget continuous-batching scheduler over ONE shared paged-KV pool,
-sharded into per-mesh-shard page ranges.
+sharded into per-mesh-shard page ranges — ONE step-composition path for every
+model family.
 
 The engine exposes ``num_lanes`` batch lanes, but — unlike the old
 JetStream-style static partition — lanes do NOT own private page pools: all
@@ -16,9 +17,14 @@ Each engine step is composed under a TOKEN BUDGET (Sarathi-style):
   * every running, prefill-complete request contributes one decode token;
   * the remaining budget is filled with prefill work — continuation chunks
     of partially-prefilled prompts first, then new admissions (possibly
-    only the first chunk of a long prompt). For chunk-capable families
-    (dense/moe) the engine executes decode tokens and prefill chunks in ONE
-    device call; other families get one prefill + one decode call per step.
+    only the first chunk of a long prompt). EVERY family takes this path:
+    the engine executes decode tokens and prefill chunks in ONE device call
+    through the chunked-continuation prefill (a decode lane is a chunk of
+    length 1). The legacy monolithic bucketed-prefill tier — and its
+    "no bucket -> REJECT" admission rule — is gone.
+  * recurrent-state families (griffin/rwkv6) get PAGE-ALIGNED chunk
+    boundaries so the engine can snapshot the recurrent state at committed
+    page boundaries (the prefix cache's resume points for those families);
   * admission is SHARD-AFFINE: a prompt whose chain-hash head is registered
     on shard s is placed on s (prefix-affinity — CoW reuse is only possible
     shard-locally); otherwise the least-loaded shard wins. If the preferred
@@ -32,9 +38,8 @@ Each engine step is composed under a TOKEN BUDGET (Sarathi-style):
     at the front with ``effective_prompt = prompt + output`` so greedy
     decoding resumes token-for-token instead of the engine crashing;
   * requests that can NEVER be served (prompt + generation budget over the
-    per-request cap — ``max_len`` or the largest shard's page range — or no
-    bucket for a non-chunkable family) are marked ``REJECTED`` and
-    surfaced, not silently dropped.
+    per-request cap — ``max_len`` or the largest shard's page range) are
+    marked ``REJECTED`` and surfaced, not silently dropped.
 """
 from __future__ import annotations
 
@@ -50,6 +55,8 @@ from repro.serving.request import Request, RequestState
 
 
 def bucket_len(n: int, buckets: List[int]) -> Optional[int]:
+    """Smallest bucket holding ``n`` tokens — used to PAD the step's chunk
+    axis (bounding recompilation), never to admit or reject."""
     for b in buckets:
         if n <= b:
             return b
@@ -60,12 +67,17 @@ def bucket_len(n: int, buckets: List[int]) -> Optional[int]:
 class PrefillChunk:
     req: Request
     start: int                 # logical position of the chunk's first token
-    tokens: np.ndarray         # (n,) token ids fed this step
+    tokens: np.ndarray         # (<= n,) TEXT token ids fed this step (vlm:
+                               # positions inside the patch stub carry none)
     final: bool                # completes the prompt -> sample first token
+    first: bool = False        # the request's first chunk since (re)admission
+                               # (engine: reset/restore recurrent state, fill
+                               # whisper cross-KV)
+    count: int = -1            # logical POSITIONS covered by the chunk
 
     @property
     def n(self) -> int:
-        return int(len(self.tokens))
+        return self.count if self.count >= 0 else int(len(self.tokens))
 
 
 @dataclass
@@ -88,17 +100,19 @@ class StepPlan:
 class Scheduler:
     def __init__(self, num_lanes: int, max_len: int, page_size: int,
                  prefill_buckets: List[int], extra_tokens: int = 0,
-                 allow_chunked: bool = False,
                  token_budget: Optional[int] = None,
                  enable_prefix_cache: bool = True,
-                 num_shards: int = 1):
+                 num_shards: int = 1,
+                 page_aligned: bool = False):
         self.num_lanes = num_lanes
         self.max_len = max_len                 # per-REQUEST cap, not per-lane
         self.page_size = page_size
         self.prefill_buckets = sorted(prefill_buckets)
         self.extra_tokens = extra_tokens       # modality-stub prefix (vlm)
-        self.allow_chunked = allow_chunked
         self.token_budget = token_budget or max(self.prefill_buckets)
+        self.page_aligned = page_aligned       # recurrent-state families:
+                                               # chunk ends land on page
+                                               # boundaries (state snapshots)
         self.num_shards = max(int(num_shards), 1)
         self.waiting: Deque[Request] = deque()
         self.running: Dict[int, Request] = {}            # lane -> request
@@ -111,11 +125,9 @@ class Scheduler:
         p_dev = padded_pool_pages(num_lanes * self.pages_per_lane,
                                   self.num_shards)
         total = max(p_dev - 1, 1)
-        # prefix reuse needs the chunked continuation path (skipped tokens
-        # must still be attendable); monolithic-prefill families recompute.
         self.manager = BlockManager(
             total, page_size,
-            enable_prefix_cache=enable_prefix_cache and allow_chunked,
+            enable_prefix_cache=enable_prefix_cache,
             num_shards=self.num_shards)
         self.preemptions = 0
         self.preemptions_by_shard = [0] * self.num_shards
@@ -140,6 +152,19 @@ class Scheduler:
     def _reject(self, req: Request) -> None:
         req.state = RequestState.REJECTED
         self.rejected.append(req)
+
+    def _chunk_len(self, lo: int, remaining: int, budget: int) -> int:
+        """Length of the next chunk of a prompt starting at logical position
+        ``lo`` with ``remaining`` tokens to go. Page-aligned mode trims the
+        chunk to end on the last page boundary it can reach, so the engine
+        can snapshot recurrent state under the committed prefix chain hash
+        (the final sub-page tail becomes its own chunk)."""
+        n = min(remaining, budget, max(self.prefill_buckets))
+        if self.page_aligned:
+            aligned = ((lo + n) // self.page_size) * self.page_size - lo
+            if 0 < aligned < n:
+                return aligned
+        return n
 
     def _youngest_running(self, exclude: Optional[Request] = None,
                           shard: Optional[int] = None):
@@ -233,23 +258,22 @@ class Scheduler:
             budget -= 1
 
         # 2) continuation chunks of partially-prefilled prompts
-        chunk_cap = max(self.prefill_buckets)
         for r in sorted(self.running.values(),
                         key=lambda r: (r.arrival_time, r.req_id)):
             tgt = self._target(r)
             if r.num_computed >= tgt or budget <= 0:
                 continue
-            n = min(tgt - r.num_computed, budget, chunk_cap)
-            eff = r.effective_prompt()
             lo = r.num_computed
+            n = self._chunk_len(lo, tgt - lo, budget)
+            eff = r.effective_prompt()
             plan.prefill.append(PrefillChunk(
                 r, start=lo,
                 tokens=eff[max(lo - self.extra_tokens, 0):
-                           lo - self.extra_tokens + n],
-                final=(r.num_computed + n >= tgt)))
+                           max(lo - self.extra_tokens + n, 0)],
+                final=(lo + n >= tgt), count=n))
             budget -= n
 
-        # 3) admissions (shard-affine placement)
+        # 3) admissions (shard-affine placement, chunked for every family)
         while self.waiting and self.free_lanes and budget > 0:
             r = self.waiting[0]
             eff = r.effective_prompt()
@@ -262,18 +286,15 @@ class Scheduler:
                 self.waiting.popleft()
                 self._reject(r)
                 continue
-            # buckets size the TEXT tokens; the modality-stub prefix is
-            # appended by the engine on top of the bucket (S = off + bucket)
-            if bucket_len(len(eff), self.prefill_buckets) is None \
-                    and not self.allow_chunked:
-                self.waiting.popleft()
-                self._reject(r)
-                continue
-            if not self.allow_chunked and len(eff) > budget:
-                break              # monolithic prefill must fit this step
             pool_id = self._next_pool_id
-            token_ids = eff if self.allow_chunked else None
-            shard = self._place(pool_id, total, token_ids)
+            # NOTE(vlm/whisper): the prefix key covers TEXT tokens only —
+            # sound while the modality frontends are zero stubs (every
+            # request's patch embeddings / audio frames are identical, so
+            # the cached patch K/V and frame-conditioned decoder self-KV
+            # are too). Real image/audio inputs must fold a modality-content
+            # digest into the chain-hash seed, as the recurrent families'
+            # prefix_gate does for state (see ROADMAP).
+            shard = self._place(pool_id, total, eff)
             if shard is None:
                 break              # admission never preempts running work
             cached = mgr.cached_tokens(pool_id)
@@ -287,14 +308,14 @@ class Scheduler:
             r.num_computed = cached
             r.prefill_target = total
             self.running[lane] = r
-            n = min(total - cached, budget, chunk_cap) \
-                if self.allow_chunked else total
+            n = self._chunk_len(cached, total - cached, budget)
             lo = cached
             plan.prefill.append(PrefillChunk(
                 r, start=lo,
                 tokens=eff[max(lo - self.extra_tokens, 0):
-                           lo - self.extra_tokens + n],
-                final=(cached + n >= total)))
+                           max(lo - self.extra_tokens + n, 0)],
+                final=(cached + n >= total),
+                first=True, count=n))
             budget -= n
         return plan
 
@@ -303,9 +324,8 @@ class Scheduler:
         """Engine callback after a chunk's KV landed on device: advance the
         request and register now-complete full pages for prefix reuse."""
         req.num_computed += n
-        if self.allow_chunked:
-            self.manager.commit_prefill(req.pool_id, req.num_computed,
-                                        token_ids=req.effective_prompt())
+        self.manager.commit_prefill(req.pool_id, req.num_computed,
+                                    token_ids=req.effective_prompt())
 
     def finish(self, req: Request) -> None:
         req.state = RequestState.FINISHED

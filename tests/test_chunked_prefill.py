@@ -13,7 +13,8 @@ from repro.core.opt_kv import identity_slots
 from repro.models import get_model
 
 
-@pytest.mark.parametrize("arch", ["qwen3-4b-reduced", "yi-34b-reduced"])
+@pytest.mark.parametrize("arch", ["qwen3-4b-reduced", "yi-34b-reduced",
+                                  "deepseek-v2-lite-16b-reduced"])
 @pytest.mark.parametrize("coopt", [ORIGINAL, COOPT], ids=["bf16", "coopt"])
 def test_chunked_equals_monolithic_prefill(arch, coopt):
     cfg = get_config(arch)
@@ -28,7 +29,8 @@ def test_chunked_equals_monolithic_prefill(arch, coopt):
                                         coopt)
 
     ch_cache = m.init_cache(B, S + 8, coopt)
-    P_total = ch_cache["kv"].shape[2]
+    # mla latent pool: (L, P, ps, R+dr); others: (L, 2, P, ps, Hkv, D)
+    P_total = ch_cache["kv"].shape[1 if cfg.family == "mla" else 2]
     for i in range(0, S, C):
         pos = jnp.broadcast_to(jnp.arange(i, i + C), (B, C)).astype(jnp.int32)
         slots = identity_slots(B, pos, P_total, coopt.page_size)
@@ -84,12 +86,31 @@ def test_mixed_step_decode_lane_matches_pure_decode():
     np.testing.assert_allclose(a, b, atol=atol)
 
 
-def test_chunked_prefill_mla_raises():
+def test_mixed_step_decode_lane_matches_pure_decode_mla():
+    """MLA's absorbed chunk attention (chunk of length 1) must agree with
+    its absorbed paged decode — same matrix-absorption, same latent bytes."""
     cfg = get_config("deepseek-v2-lite-16b-reduced")
     m = get_model(cfg)
     p = m.init(jax.random.PRNGKey(0))
-    cache = m.init_cache(1, 32, COOPT)
-    pos = jnp.arange(16)[None].astype(jnp.int32)
-    with pytest.raises(NotImplementedError):
-        m.prefill(p, {"tokens": jnp.zeros((1, 16), jnp.int32),
-                      "positions": pos, "slot_idx": pos}, cache, COOPT)
+    B, S = 1, 24
+    coopt = ORIGINAL
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    cache = m.init_cache(B, S + 8, coopt)
+    logits, cache = m.prefill(p, {"tokens": toks}, cache, coopt)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+
+    P_total = cache["kv"].shape[1]
+    pos = jnp.full((B, 1), S, jnp.int32)
+    slots = identity_slots(B, pos, P_total, coopt.page_size)
+    via_decode, _ = m.decode_step(
+        p, {"token": tok, "positions": pos, "slot_idx": slots,
+            "cache_len": jnp.full((B,), S + 1, jnp.int32)}, cache, coopt)
+    via_chunk, _ = m.prefill(
+        p, {"tokens": tok, "positions": pos, "slot_idx": slots,
+            "cache_len": jnp.full((B,), S + 1, jnp.int32),
+            "last_pos": jnp.zeros((B,), jnp.int32)}, cache, coopt)
+    a = np.asarray(via_decode, np.float32)
+    b = np.asarray(via_chunk, np.float32)
+    atol = 0.05 * max(np.abs(a).max(), 1.0)
+    np.testing.assert_allclose(a, b, atol=atol)

@@ -172,6 +172,42 @@ def test_flash_prefill_sweep(S, Hq, Hkv, D, window):
                                np.asarray(exp, np.float32), atol=3e-2)
 
 
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("opt_kv,opt_gqa,window,sink", [
+    (False, True, 0, 0),
+    (True, True, 0, 0),
+    (True, False, 0, 0),       # Original MHA semantics: KV re-streamed
+    (True, True, 32, 1),       # griffin-style local window + sink
+])
+def test_chunk_prefill_kernel_vs_reference(opt_kv, opt_gqa, window, sink):
+    """The continuation-prefill kernel (scalar-prefetched page table +
+    per-row positions) matches the jnp gather reference, including -1
+    page skips and decode lanes (chunk of length 1 semantics)."""
+    from repro.core.coopt import CoOptConfig
+    from repro.core.opt_pa import paged_chunk_attention
+
+    B, P, ps, Hkv, G, D, S = 2, 4, 16, 2, 4, 64, 8
+    qk = jax.random.normal(jax.random.PRNGKey(7), (B, S, Hkv * G, D)) \
+        .astype(jnp.bfloat16)
+    _, kv, sc, phys, _ = _pool_inputs(B, P, ps, Hkv, G, D, opt_kv, seed=7)
+    # lane 0: continuation chunk at positions [24, 32); lane 1: a decode
+    # lane — one real token at position 40, padding clamped to it — with
+    # its final page unallocated (-1: never DMA'd, masked in the reference)
+    positions = jnp.stack([jnp.arange(24, 32),
+                           jnp.full((S,), 40)]).astype(jnp.int32)
+    phys = phys.at[1, P - 1].set(-1)
+
+    ref_cfg = CoOptConfig(opt_kv=opt_kv, opt_gqa=opt_gqa, opt_pa=True,
+                          use_kernel=False)
+    exp = paged_chunk_attention(qk, kv, sc, positions, phys, ref_cfg,
+                                window=window, sink_pages=sink)
+    out = ops.paged_chunk_prefill(qk, positions, kv, sc, phys,
+                                  opt_kv=opt_kv, opt_gqa=opt_gqa,
+                                  window=window, sink_pages=sink)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=3e-2)
+
+
 def test_flash_prefill_f32():
     B, S, Hq, Hkv, D = 1, 64, 4, 2, 64
     q = jax.random.normal(KEY, (B, S, Hq, D), jnp.float32)

@@ -166,14 +166,17 @@ def test_rejected_state_surfaced_from_generate():
     assert eng.stats.rejected == 1
 
 
-def test_rejected_unbucketable_non_chunked_family():
-    """Families without chunked prefill reject prompts over the largest
-    bucket instead of silently finishing them."""
+def test_prompt_over_largest_bucket_served_chunked_every_family():
+    """The old "no bucket -> REJECT" rule is gone: every family serves a
+    prompt larger than the largest bucket via chunked continuation prefill
+    (here rwkv6, the family that used to reject)."""
     cfg = get_config("rwkv6-7b-reduced")
     eng = Engine(cfg, MODES["coopt"],
                  EngineConfig(num_lanes=2, max_len=256,
                               prefill_buckets=(16, 32)))
     big = _prompt(np.random.default_rng(6), 100)        # > bucket 32
     reqs = eng.generate([big], max_new_tokens=4, return_requests=True)
-    assert reqs[0].state is RequestState.REJECTED
-    assert eng.stats.rejected == 1
+    assert reqs[0].state is RequestState.FINISHED
+    assert len(reqs[0].output) == 4
+    assert eng.stats.rejected == 0
+    assert eng.stats.prefill_calls > 1                  # really chunked

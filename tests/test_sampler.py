@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.serving.sampler import sample, top_p_mask
+from repro.serving.sampler import sample, top_k_mask, top_p_mask
 
 
 def test_greedy_is_argmax():
@@ -26,6 +26,35 @@ def test_top_k_only_samples_top_k(seed, k):
     for b in range(2):
         topk = set(np.argsort(np.asarray(logits[b]))[-k:].tolist())
         assert int(toks[b]) in topk
+
+
+def test_top_k_ties_broken_by_rank():
+    """Regression: four exactly-tied logits with top_k=2 must keep TWO
+    tokens — the old ``lf < kth`` mask kept every token tied with the k-th
+    logit, inflating the candidate set beyond k (common after low-precision
+    logits quantize the tail)."""
+    logits = jnp.zeros((1, 4))
+    mask = np.asarray(top_k_mask(logits, 2))
+    assert mask.tolist() == [[True, True, False, False]]
+    for s in range(30):
+        t = int(sample(logits, jax.random.PRNGKey(s), temperature=1.0,
+                       top_k=2)[0])
+        assert t in (0, 1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), k=st.integers(1, 16))
+def test_top_k_mask_keeps_exactly_k(seed, k):
+    """Property: even with heavy ties the mask keeps EXACTLY k tokens, and
+    they form a prefix of the stable descending sort."""
+    rng = np.random.default_rng(seed)
+    lf = jnp.asarray(np.round(rng.normal(size=(3, 32)) * 2) / 2, jnp.float32)
+    mask = np.asarray(top_k_mask(lf, k))
+    assert (mask.sum(-1) == k).all()
+    order = np.argsort(-np.asarray(lf), axis=-1, kind="stable")
+    for b in range(3):
+        assert set(np.flatnonzero(mask[b]).tolist()) == \
+            set(order[b, :k].tolist())
 
 
 def test_top_p_excludes_tail():
