@@ -13,7 +13,7 @@ import os
 import time
 import traceback
 
-ALL = ("fig6", "fig7", "table12", "kernel", "roofline")
+ALL = ("fig6", "fig7", "table12", "kernel", "mla", "roofline")
 
 
 def main(argv=None):
@@ -23,6 +23,10 @@ def main(argv=None):
                     help="comma-separated subset of " + ",".join(ALL))
     args = ap.parse_args(argv)
     which = args.only.split(",") if args.only else list(ALL)
+
+    # Pallas kernels run compiled on TPU, interpret-mode elsewhere
+    from repro.kernels import ops
+    ops.configure_for_backend()
 
     t0 = time.time()
     failures = []
@@ -40,6 +44,9 @@ def main(argv=None):
                 run(quick=args.quick)
             elif name == "kernel":
                 from benchmarks.kernel_micro import run
+                run(quick=args.quick)
+            elif name == "mla":
+                from benchmarks.bench_mla import run
                 run(quick=args.quick)
             elif name == "roofline":
                 from benchmarks.roofline import run, DRYRUN_FILE

@@ -31,6 +31,30 @@ def dequantize_fp8(q: jax.Array, scale: jax.Array, axis: int = -1,
     return (q.astype(jnp.float32) * jnp.expand_dims(scale, axis)).astype(dtype)
 
 
+# ------------------------------------------------- MLA latent (dual-scale) --
+def quantize_latent(latent: jax.Array, lora_rank: int):
+    """MLA latent cache entry ``[c_kv | k_rope]`` (..., R+dr) -> FP8 with
+    DUAL per-token scales (..., 2): column 0 scales the c_kv segment,
+    column 1 the k_rope segment. The two segments come from different
+    projections with different dynamic ranges — a shared scale would crush
+    the smaller segment's mantissa."""
+    qc, sc = quantize_fp8(latent[..., :lora_rank], axis=-1)
+    qr, sr = quantize_fp8(latent[..., lora_rank:], axis=-1)
+    return jnp.concatenate([qc, qr], axis=-1), jnp.stack([sc, sr], axis=-1)
+
+
+def dequantize_latent(q: jax.Array, scales: jax.Array, lora_rank: int,
+                      dtype=jnp.float32) -> jax.Array:
+    """Eq. 6 read path for the latent layout: (..., R+dr) fp8 + (..., 2)
+    dual scales -> dequantized latent (c_kv and k_rope segments scaled
+    separately)."""
+    c = dequantize_fp8(q[..., :lora_rank], scales[..., 0], axis=-1,
+                       dtype=dtype)
+    r = dequantize_fp8(q[..., lora_rank:], scales[..., 1], axis=-1,
+                       dtype=dtype)
+    return jnp.concatenate([c, r], axis=-1)
+
+
 def quant_roundtrip_error(x: jax.Array, axis: int = -1) -> jax.Array:
     """Max relative error of the fp8 roundtrip (accuracy-proxy benchmarks)."""
     q, s = quantize_fp8(x, axis)

@@ -171,3 +171,31 @@ def logical_to_physical(logical_table, page_table):
     phys = jnp.take_along_axis(page_table,
                                jnp.maximum(logical_table, 0), axis=1)
     return jnp.where(logical_table < 0, -1, phys).astype(jnp.int32)
+
+
+def decode_page_select(cache_len, page_table, page_size: int, *,
+                       window: int = 0, sink_pages: int = 1,
+                       opt_pa: bool = True):
+    """(physical, logical) page selection for ONE decode step against the
+    pool — the table pair every fused decode kernel (dense/moe KV pages and
+    the MLA latent layout alike) scalar-prefetches.
+
+    Dense (``window == 0``): logical pages are simply ``arange``; under
+    Opt-Pa, physical entries wholly beyond the live context are masked to
+    -1 (Eq. 9 valid-block filtering, host-free — the kernel never DMAs
+    them), while the Original baseline streams every allocated page.
+    Windowed: the {sink + sliding-window} block-sparse policy is decided in
+    the logical page domain (``window_page_table``) then mapped through the
+    lane's table, -1 sentinels preserved (skips, never aliases)."""
+    B, P = page_table.shape
+    if window:
+        logical = window_page_table(cache_len, P, page_size, window,
+                                    sink_pages)
+        return logical_to_physical(logical, page_table), logical
+    logical = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32)[None], (B, P))
+    if opt_pa:
+        beyond = logical * page_size >= cache_len[:, None]
+        phys = jnp.where(beyond, -1, page_table)
+    else:
+        phys = page_table
+    return phys.astype(jnp.int32), logical

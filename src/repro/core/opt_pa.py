@@ -35,9 +35,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.coopt import CoOptConfig
-from repro.core.opt_kv import (dequant_pages, gather_cached_kv,
-                               identity_page_table, logical_to_physical,
-                               window_page_table)
+from repro.core.opt_kv import (decode_page_select, dequant_pages,
+                               gather_cached_kv, identity_page_table)
 from repro.models.layers import repeat_kv, shard_act
 
 _NEG = -1e30
@@ -93,37 +92,30 @@ def paged_decode_attention(q, kv_pages, scale_pages, cache_len, *,
     if page_table is None:
         page_table = identity_page_table(B, P_total)
 
-    if window:
-        # Block-sparse policy: Opt-KV SkipSet = outside {sinks + window},
-        # decided in the logical page domain then mapped to physical pages.
-        logical = window_page_table(cache_len, page_table.shape[1], ps,
-                                    window, sink_pages)
-        phys = logical_to_physical(logical, page_table)
-        if coopt.use_kernel:
-            from repro.kernels import ops
-            return ops.paged_pool_decode(
-                q, kv_pages, scale_pages, cache_len, phys, logical,
-                opt_kv=coopt.opt_kv, opt_gqa=True,
-                window=window, sink_pages=sink_pages)
-        return _windowed(q, kv_pages, scale_pages, cache_len, phys, logical,
-                         window, sink_pages, coopt)
-
     if coopt.use_kernel:
+        # (physical, logical) tables for the scalar-prefetched kernel —
+        # Eq. 9 filtering / the {sink + window} policy decided host-free
+        # (decode_page_select, shared with the MLA latent layout).
         from repro.kernels import ops
-        logical = jnp.broadcast_to(
-            jnp.arange(page_table.shape[1], dtype=jnp.int32)[None],
-            page_table.shape)
-        if coopt.opt_pa:
-            # Eq. 9 valid-block filtering, host-free: mask table entries
-            # wholly beyond the live context so the kernel never DMAs them.
-            beyond = logical * ps >= cache_len[:, None]
-            phys = jnp.where(beyond, -1, page_table)
-        else:
-            phys = page_table
+        phys, logical = decode_page_select(cache_len, page_table, ps,
+                                           window=window,
+                                           sink_pages=sink_pages,
+                                           opt_pa=coopt.opt_pa)
         return ops.paged_pool_decode(
             q, kv_pages, scale_pages, cache_len, phys, logical,
-            opt_kv=coopt.opt_kv, opt_gqa=coopt.opt_gqa, window=0,
-            sink_pages=0)
+            opt_kv=coopt.opt_kv,
+            opt_gqa=True if window else coopt.opt_gqa,
+            window=window, sink_pages=sink_pages if window else 0)
+
+    if window:
+        # Block-sparse policy: Opt-KV SkipSet = outside {sinks + window},
+        # decided in the logical page domain then mapped to physical pages
+        # (same selection the kernel branch prefetches).
+        phys, logical = decode_page_select(cache_len, page_table, ps,
+                                           window=window,
+                                           sink_pages=sink_pages)
+        return _windowed(q, kv_pages, scale_pages, cache_len, phys, logical,
+                         window, sink_pages, coopt)
 
     # jnp reference: gather the lane's pages (logical order) then reduce.
     flat = gather_cached_kv(kv_pages, scale_pages, page_table, coopt)

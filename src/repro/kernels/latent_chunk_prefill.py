@@ -1,0 +1,172 @@
+"""MLA absorbed chunk-continuation-prefill Pallas kernel over the GLOBAL
+paged LATENT pool — the chunk analogue of ``paged_latent_decode``, closing
+the unified ragged step path for the MLA family.
+
+A CHUNK of queries per lane (a decode lane is a chunk of length 1), each row
+carrying its own absolute position, attends the lane's *already-cached*
+latent history — prefix-cache hits, earlier chunks, and the chunk itself
+(written before attention) — in matrix-absorption form. Queries arrive
+already absorbed through ``w_uk`` (rows are (seq, head) pairs in LATENT
+space), so every latent page is streamed into VMEM once per query tile and
+shared by all H heads; K/V are never materialised per head, and the pool is
+never gathered host-side (the ``jnp.take`` full-pool materialisation this
+kernel replaces).
+
+Latent pool addressing — identical to ``paged_latent_decode`` (see its
+module docstring for the full scheme): ``lat_pages (P_total, ps, R+dr)``
+packs ``[c_kv | k_rope]`` per token; ``scale_pages (P_total, ps, 2)`` holds
+the DUAL FP8 scales (col 0 = c_kv, col 1 = k_rope — separate dynamic
+ranges, Eq. 6); the lane's physical page table is scalar-prefetched and
+dereferenced in the BlockSpec index_map (-1 = unallocated/SkipSet, never
+DMA'd — the pool's sentinel last page never appears in a table).
+
+Grid: (batch, q_block, logical_page). Per-row positions ride along as a
+VMEM input blocked with the query tiles; the causal / sliding-window / sink
+masks compare them against ``logical_page * ps + iota`` (Eq. 9's valid-block
+filter in the logical page domain, Eq. 10's online softmax across pages).
+Pages entirely in the future of a query tile are skipped by the same
+``pl.when`` predicate using the tile's maximum position. The (m, l, acc)
+accumulator is VMEM-resident with acc in LATENT space (bq, R); the ``w_uv``
+expansion stays outside so weights never enter VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
+_NEG = -1e30
+
+
+def _latent_chunk_kernel(phys_ref,                   # scalar prefetch
+                         ql_ref, qr_ref, pos_ref, lat_ref, sc_ref,
+                         o_ref, m_ref, l_ref, acc_ref,
+                         *, ps: int, R: int, sm_scale: float, opt_kv: bool,
+                         window: int, sink: int, num_pages: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)                             # logical page id
+    bq = ql_ref.shape[1]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    page = phys_ref[b, j]
+    qpos = pos_ref[0, 0].astype(jnp.int32)           # (bq,) per-row position
+    # causal page skip: the page is dead if its first key position is beyond
+    # every query row in the tile
+    live = jnp.logical_and(page >= 0, j * ps <= jnp.max(qpos))
+
+    @pl.when(live)
+    def _compute():
+        ql = ql_ref[0].astype(jnp.float32)           # (bq, R)  absorbed q
+        qr = qr_ref[0].astype(jnp.float32)           # (bq, dr)
+        lat = lat_ref[0]                             # (ps, R+dr)
+        c = lat[:, :R]
+        r = lat[:, R:]
+        if opt_kv:  # Eq. 6: fused dual-scale dequant at the VMEM boundary
+            c = c.astype(jnp.float32) * sc_ref[0][:, 0].reshape(ps, 1)
+            r = r.astype(jnp.float32) * sc_ref[0][:, 1].reshape(ps, 1)
+        else:
+            c = c.astype(jnp.float32)
+            r = r.astype(jnp.float32)
+        s = jax.lax.dot_general(ql, c, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s += jax.lax.dot_general(qr, r, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        s = s * sm_scale                             # (bq, ps)
+        kpos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (bq, ps), 1)
+        qp = jnp.broadcast_to(qpos[:, None], (bq, ps))
+        mask = kpos <= qp
+        if window:
+            mask &= (kpos > qp - window) | (kpos < sink * ps)
+        s = jnp.where(mask, s, _NEG)
+        m_prev = m_ref[:, 0:1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_ref[:, 0:1] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, c, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == num_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, 0:1], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def latent_chunk_prefill(q_lat, q_rope, positions, lat_pages, scale_pages,
+                         phys_table, *, sm_scale: float, opt_kv: bool,
+                         window: int = 0, sink_pages: int = 0,
+                         block_q: int = 256, interpret: bool = True):
+    """q_lat: (B, S, H, R) W_uk-absorbed chunk queries; q_rope: (B, S, H, dr);
+    positions: (B, S) absolute per-row positions; lat_pages: (P_total, ps,
+    R+dr) GLOBAL latent pool [fp8 if opt_kv]; scale_pages: (P_total, ps, 2)
+    f32 dual scales or None; phys_table: (B, NP) int32 physical pages in
+    logical order (-1 = skip, never DMA'd). The chunk's own latents must
+    already be written to the pool. Returns o_lat (B, S, H, R) f32; the
+    caller applies the ``w_uv`` expansion."""
+    B, S, H, R = q_lat.shape
+    P, ps, W = lat_pages.shape
+    dr = q_rope.shape[-1]
+    NP = phys_table.shape[1]
+    RW = S * H                                       # row r = s*H + h
+
+    # largest multiple of H <= block_q that divides RW (head rows stay
+    # grouped; bq = H always qualifies, so the search terminates there)
+    bq = H * max(min(block_q, RW) // H, 1)
+    while RW % bq:
+        bq -= H
+    NQ = RW // bq
+
+    qlf = q_lat.reshape(B, RW, R)
+    qrf = q_rope.reshape(B, RW, dr)
+    pos_rep = jnp.repeat(positions.astype(jnp.int32), H, axis=1)  # (B, RW)
+    pos_rep = pos_rep.reshape(B, 1, RW)
+
+    if scale_pages is None:
+        scale_pages = jnp.zeros((P, ps, 2), jnp.float32)
+
+    def lat_idx(b, i, j, phys):
+        return (jnp.maximum(phys[b, j], 0), 0, 0)
+
+    kern = functools.partial(_latent_chunk_kernel, ps=ps, R=R,
+                             sm_scale=sm_scale, opt_kv=opt_kv, window=window,
+                             sink=sink_pages, num_pages=NP)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, NQ, NP),
+            in_specs=[
+                pl.BlockSpec((1, bq, R), lambda b, i, j, phys: (b, i, 0)),
+                pl.BlockSpec((1, bq, dr), lambda b, i, j, phys: (b, i, 0)),
+                pl.BlockSpec((1, 1, bq), lambda b, i, j, phys: (b, 0, i)),
+                pl.BlockSpec((1, ps, W), lat_idx),
+                pl.BlockSpec((1, ps, 2), lat_idx),
+            ],
+            out_specs=pl.BlockSpec((1, bq, R),
+                                   lambda b, i, j, phys: (b, i, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((bq, 128), jnp.float32),
+                pltpu.VMEM((bq, 128), jnp.float32),
+                pltpu.VMEM((bq, R), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, RW, R), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(phys_table.astype(jnp.int32), qlf, qrf, pos_rep, lat_pages,
+      scale_pages)
+    return out.reshape(B, S, H, R)

@@ -10,8 +10,9 @@ index_maps, and the write path scatters to global flat slots (the pool's
 last cache line is the reserved SkipSet sentinel).
 
 On this container the kernels run in interpret mode (CPU); on TPU hardware
-set ``repro.kernels.ops.INTERPRET = False`` (the launcher does this when
-jax.default_backend() == 'tpu').
+``configure_for_backend()`` flips ``INTERPRET`` off — the launchers
+(``launch.serve.serve_workload``, ``launch.steps.make_step`` engine setup,
+``benchmarks.run``) call it at startup.
 """
 from __future__ import annotations
 
@@ -23,7 +24,9 @@ import jax.numpy as jnp
 from repro.kernels import flash_chunk_prefill as _fc
 from repro.kernels import flash_prefill as _fp
 from repro.kernels import kv_cache_write as _kw
+from repro.kernels import latent_chunk_prefill as _lc
 from repro.kernels import paged_gqa_decode as _pd
+from repro.kernels import paged_latent_decode as _ld
 
 INTERPRET = True
 
@@ -85,6 +88,40 @@ def flash_prefill(q, k, v, *, window: int = 0, block_q: int = 256,
     return _fp.flash_prefill(q, k, v, window=window, block_q=block_q,
                              block_k=block_k, q_offset=q_offset,
                              interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("sm_scale", "opt_kv", "window",
+                                   "sink_pages"))
+def paged_latent_decode(q_lat, q_rope, lat_pages, scale_pages, cache_len,
+                        phys_table, log_table, *, sm_scale: float,
+                        opt_kv: bool, window: int = 0, sink_pages: int = 0):
+    """Fused MLA absorbed decode over the global latent pool. q_lat
+    (B,H,R) W_uk-absorbed queries; q_rope (B,H,dr); lat_pages
+    (P_total,ps,R+dr) [c_kv|k_rope] packed; scale_pages (P_total,ps,2) dual
+    c/k_rope scales | None; phys/log_table (B,NSel) int32 (-1 = never
+    DMA'd). Returns o_lat (B,H,R) f32 — w_uv expansion stays outside."""
+    return _ld.paged_latent_decode(
+        q_lat, q_rope, lat_pages, scale_pages, cache_len.astype(jnp.int32),
+        phys_table.astype(jnp.int32), log_table.astype(jnp.int32),
+        sm_scale=sm_scale, opt_kv=opt_kv, window=window,
+        sink_pages=sink_pages, interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("sm_scale", "opt_kv", "window",
+                                   "sink_pages"))
+def latent_chunk_prefill(q_lat, q_rope, positions, lat_pages, scale_pages,
+                         phys_table, *, sm_scale: float, opt_kv: bool,
+                         window: int = 0, sink_pages: int = 0):
+    """MLA absorbed continuation-prefill over the global latent pool: a
+    chunk of absorbed queries q_lat (B,S,H,R) / q_rope (B,S,H,dr) with
+    absolute ``positions`` (B,S) attends the lane's cached latent pages
+    named by the scalar-prefetched ``phys_table`` (B,NP; -1 = never DMA'd).
+    The chunk's own latents must already be written. Returns o_lat
+    (B,S,H,R) f32."""
+    return _lc.latent_chunk_prefill(
+        q_lat, q_rope, positions.astype(jnp.int32), lat_pages, scale_pages,
+        phys_table.astype(jnp.int32), sm_scale=sm_scale, opt_kv=opt_kv,
+        window=window, sink_pages=sink_pages, interpret=INTERPRET)
 
 
 @partial(jax.jit, static_argnames=("opt_kv", "opt_gqa", "window",

@@ -25,6 +25,9 @@ def serve_workload(arch: str, mode: str, *, requests: int = 16,
                    max_new_tokens: int = 24, scale: float = 0.15,
                    seed: int = 0, use_kernel: bool = False,
                    temperature: float = 0.0, num_shards: int = 1):
+    # Pallas kernels run compiled on TPU, interpret-mode elsewhere
+    from repro.kernels import ops
+    ops.configure_for_backend()
     cfg = get_config(arch)
     coopt = MODES[mode].replace(use_kernel=use_kernel)
     ecfg = EngineConfig(

@@ -168,6 +168,10 @@ def default_microbatches(cfg: ModelConfig) -> int:
 def make_step(arch_id: str, shape_name: str, mesh: Mesh,
               coopt: CoOptConfig = COOPT, *, lr: float = 3e-4,
               num_microbatches: Optional[int] = None) -> StepBundle:
+    if coopt.use_kernel:
+        # Pallas kernels run compiled on TPU, interpret-mode elsewhere
+        from repro.kernels import ops
+        ops.configure_for_backend()
     cfg = get_config(arch_id)
     shape = get_shape(shape_name)
     cfg = effective_config(cfg, shape)

@@ -3,9 +3,20 @@ cache* — Opt-KV/Opt-Pa applied to MLA (DESIGN.md §5).
 
 The per-token cache entry is the compressed latent c_kv (R) concatenated with
 the shared rotary key k_rope (dr): one vector of R+dr floats. Opt-KV
-quantizes it to FP8; Opt-Pa pages it and runs block-wise online softmax.
-Decode uses the matrix-absorption form (queries projected into latent space),
-so K/V are never materialised per head at decode time.
+quantizes it to FP8 with DUAL per-token scales (c_kv and k_rope have
+different dynamic ranges — ``cache.quant.quantize_latent``); Opt-Pa pages it
+and runs block-wise online softmax. Decode and chunk continuation both use
+the matrix-absorption form (queries projected into latent space), so K/V are
+never materialised per head.
+
+Hot path: under ``coopt.use_kernel`` both ``mla_paged_decode`` and
+``mla_chunk_attention`` dispatch to the fused Pallas kernels
+(``kernels.paged_latent_decode`` / ``kernels.latent_chunk_prefill``) that
+stream latent pages HBM->VMEM once for all H heads straight off the FP8
+pool — no ``jnp.take`` full-pool gather. The jnp code below is the
+numerically-equivalent PARITY REFERENCE used by tests and by the
+distributed (GSPMD) path; the ``w_uk`` absorption and ``w_uv`` expansion
+live outside the kernels in both cases, so weights never enter VMEM.
 """
 from __future__ import annotations
 
@@ -15,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.coopt import CoOptConfig
-from repro.cache.quant import dequantize_fp8
+from repro.cache.quant import dequantize_latent
 from repro.models.layers import (apply_rope, causal_attention, linear,
                                  rmsnorm, shard_act)
 
@@ -55,6 +66,25 @@ def mla_full_attention(q_nope, q_rope, latent, p, cfg, *, window: int = 0):
     return o                                          # (B,S,H,dv)
 
 
+def _absorb_q(q_nope, p, cfg):
+    """W_uk absorption OUTSIDE the kernel: q_lat_h = q_nope_h @ W_uk_h, so
+    score_h(t) = <q_lat_h, c_t> + <q_rope_h, k_rope_t> against raw latents."""
+    H, dn, R = cfg.num_heads, cfg.qk_nope_head_dim, cfg.kv_lora_rank
+    spec = "bshd,rhd->bshr" if q_nope.ndim == 4 else "bhd,rhd->bhr"
+    return jnp.einsum(spec, q_nope.astype(jnp.float32),
+                      p["w_uk"].reshape(R, H, dn).astype(jnp.float32))
+
+
+def _expand_o(o_lat, p, cfg, dtype):
+    """W_uv expansion OUTSIDE the kernel: latent-space attention output ->
+    per-head values. o_lat (..., H, R) -> (..., H, dv)."""
+    H, R, dv = cfg.num_heads, cfg.kv_lora_rank, cfg.v_head_dim
+    spec = "bshr,rhd->bshd" if o_lat.ndim == 4 else "bhr,rhd->bhd"
+    return jnp.einsum(spec, o_lat,
+                      p["w_uv"].reshape(R, H, dv).astype(jnp.float32)
+                      ).astype(dtype)
+
+
 def mla_chunk_attention(q_nope, q_rope, lat_pages, scale_pages, positions,
                         page_table, p, cfg, coopt: CoOptConfig, *,
                         window: int = 0, sink_pages: int = 1):
@@ -63,10 +93,13 @@ def mla_chunk_attention(q_nope, q_rope, lat_pages, scale_pages, positions,
 
     q_nope (B,S,H,dn), q_rope (B,S,H,dr) are this chunk's queries with
     absolute ``positions`` (B,S); the chunk's latents are already written to
-    the paged cache, so queries attend the lane's WHOLE gathered latent
-    history (prefix-cache hits + earlier chunks + this one) in absorbed form
+    the paged cache, so queries attend the lane's WHOLE latent history
+    (prefix-cache hits + earlier chunks + this one) in absorbed form
     — K/V are never materialised per head, exactly like decode (a decode
-    lane is a chunk of length 1). Returns (B,S,H,dv)."""
+    lane is a chunk of length 1). Under ``coopt.use_kernel`` this dispatches
+    to the fused ``latent_chunk_prefill`` Pallas kernel (latent pages
+    streamed off the FP8 pool, no host-side gather); the jnp body below is
+    the parity reference. Returns (B,S,H,dv)."""
     H, dn, dr, R, dv = (cfg.num_heads, cfg.qk_nope_head_dim,
                         cfg.qk_rope_head_dim, cfg.kv_lora_rank,
                         cfg.v_head_dim)
@@ -76,10 +109,17 @@ def mla_chunk_attention(q_nope, q_rope, lat_pages, scale_pages, positions,
         from repro.core.opt_kv import identity_page_table
         page_table = identity_page_table(B, P_total)
     scale = 1.0 / math.sqrt(dn + dr)
-    # absorb W_uk into q (see mla_paged_decode): score_h(s,t) =
-    # <q_lat_{s,h}, c_t> + <q_rope_{s,h}, k_rope_t>
-    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32),
-                       p["w_uk"].reshape(R, H, dn).astype(jnp.float32))
+    q_lat = _absorb_q(q_nope, p, cfg)                  # (B,S,H,R)
+
+    if coopt.use_kernel:
+        from repro.kernels import ops
+        o_lat = ops.latent_chunk_prefill(
+            q_lat, q_rope.astype(jnp.float32), positions, lat_pages,
+            scale_pages if coopt.opt_kv else None, page_table,
+            sm_scale=scale, opt_kv=coopt.opt_kv, window=window,
+            sink_pages=sink_pages)
+        return _expand_o(o_lat, p, cfg, q_nope.dtype)
+
     q_lat = shard_act(q_lat, ("batch", None, None, "latent"))
     q_rope = shard_act(q_rope.astype(jnp.float32),
                        ("batch", None, None, "latent"))
@@ -88,11 +128,7 @@ def mla_chunk_attention(q_nope, q_rope, lat_pages, scale_pages, positions,
     lat = jnp.take(lat_pages, pt, axis=0)              # (B,NP,ps,R+dr)
     if coopt.opt_kv:
         sc = jnp.take(scale_pages, pt, axis=0)
-        c = dequantize_fp8(lat[..., :R], sc[..., 0], axis=-1,
-                           dtype=jnp.float32)
-        r = dequantize_fp8(lat[..., R:], sc[..., 1], axis=-1,
-                           dtype=jnp.float32)
-        lat = jnp.concatenate([c, r], axis=-1)
+        lat = dequantize_latent(lat, sc, R, dtype=jnp.float32)
     else:
         lat = lat.astype(jnp.float32)
     T = page_table.shape[1] * ps
@@ -112,9 +148,7 @@ def mla_chunk_attention(q_nope, q_rope, lat_pages, scale_pages, positions,
     s = jnp.where(mask[:, None], s, _NEG)
     pr = jax.nn.softmax(s, axis=-1)
     o_lat = jnp.einsum("bhst,btr->bshr", pr, lat_c)
-    return jnp.einsum("bshr,rhd->bshd", o_lat,
-                      p["w_uv"].reshape(R, H, dv).astype(jnp.float32)
-                      ).astype(q_nope.dtype)
+    return _expand_o(o_lat, p, cfg, q_nope.dtype)
 
 
 def mla_paged_decode(q_nope, q_rope, lat_pages, scale_pages, cache_len, p, cfg,
@@ -123,7 +157,11 @@ def mla_paged_decode(q_nope, q_rope, lat_pages, scale_pages, cache_len, p, cfg,
     """Absorbed decode against the GLOBAL latent pool. q_nope/q_rope
     (B,H,dn|dr); lat_pages (P_total,ps,R+dr) shared by all lanes;
     page_table (B,P_lane) physical pages in logical order (default:
-    lane-identity partition). Returns (B,H,dv)."""
+    lane-identity partition). Under ``coopt.use_kernel`` this dispatches to
+    the fused ``paged_latent_decode`` Pallas kernel — each latent page
+    streamed into VMEM once and shared by all H absorbed heads, dual-scale
+    FP8 dequant fused at the HBM->VMEM boundary; the jnp body below is the
+    parity reference. Returns (B,H,dv)."""
     H, dn, dr, R, dv = (cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
                         cfg.kv_lora_rank, cfg.v_head_dim)
     B = q_nope.shape[0]
@@ -134,21 +172,34 @@ def mla_paged_decode(q_nope, q_rope, lat_pages, scale_pages, cache_len, p, cfg,
     P = page_table.shape[1]
     scale = 1.0 / math.sqrt(dn + dr)
     # absorb W_uk into q: score_h(t) = <q_lat_h, c_t> + <q_rope_h, k_rope_t>
+    q_lat = _absorb_q(q_nope, p, cfg)                  # (B,H,R)
+
+    if coopt.use_kernel:
+        # (physical, logical) tables for the scalar-prefetched latent
+        # kernel: Eq. 9 filtering / the {sink + window} policy decided
+        # host-free, shared with the dense-KV path (decode_page_select).
+        from repro.core.opt_kv import decode_page_select
+        from repro.kernels import ops
+        phys, logical = decode_page_select(cache_len, page_table, ps,
+                                           window=window,
+                                           sink_pages=sink_pages,
+                                           opt_pa=coopt.opt_pa)
+        o_lat = ops.paged_latent_decode(
+            q_lat, q_rope.astype(jnp.float32), lat_pages,
+            scale_pages if coopt.opt_kv else None, cache_len, phys, logical,
+            sm_scale=scale, opt_kv=coopt.opt_kv, window=window,
+            sink_pages=sink_pages)
+        return _expand_o(o_lat, p, cfg, q_nope.dtype)
+
     # (q_lat resharded once per layer to match the model-sharded latent
     # cache — its r dim inherits w_uk's d_in->data otherwise, §Perf P2)
-    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope.astype(jnp.float32),
-                       p["w_uk"].reshape(R, H, dn).astype(jnp.float32))
     q_lat = shard_act(q_lat, ("batch", None, "latent"))
     q_rope = shard_act(q_rope, ("batch", None, "latent"))
 
     def dequant(pages, scales):
         """pages (..., R+dr); scales (..., 2) — separate c / rope scales."""
         if coopt.opt_kv:
-            c = dequantize_fp8(pages[..., :R], scales[..., 0], axis=-1,
-                               dtype=jnp.float32)
-            r = dequantize_fp8(pages[..., R:], scales[..., 1], axis=-1,
-                               dtype=jnp.float32)
-            return jnp.concatenate([c, r], axis=-1)
+            return dequantize_latent(pages, scales, R, dtype=jnp.float32)
         return pages.astype(jnp.float32)
 
     if window:
@@ -174,9 +225,7 @@ def mla_paged_decode(q_nope, q_rope, lat_pages, scale_pages, cache_len, p, cfg,
         pr = jnp.exp(s - m)
         pr = pr / jnp.maximum(jnp.sum(pr, axis=-1, keepdims=True), 1e-30)
         o_lat = jnp.einsum("bht,btr->bhr", pr, lat[..., :R])
-        return jnp.einsum("bhr,rhd->bhd", o_lat,
-                          p["w_uv"].reshape(R, H, dv).astype(jnp.float32)
-                          ).astype(q_nope.dtype)
+        return _expand_o(o_lat, p, cfg, q_nope.dtype)
 
     # dense path: gather the lane's pages in logical order, then reduce —
     # token j of the gathered view is logical position j.
@@ -227,6 +276,4 @@ def mla_paged_decode(q_nope, q_rope, lat_pages, scale_pages, cache_len, p, cfg,
     else:
         (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(NG))
     o_lat = acc / jnp.maximum(l, 1e-30)[..., None]
-    return jnp.einsum("bhr,rhd->bhd", o_lat,
-                      p["w_uv"].reshape(R, H, dv).astype(jnp.float32)
-                      ).astype(q_nope.dtype)
+    return _expand_o(o_lat, p, cfg, q_nope.dtype)

@@ -327,20 +327,16 @@ class TransformerModel:
         SkipSet drop). MLA: new_a=(B,S,R+dr), kv_c=(P,ps,R+dr)."""
         if self.cfg.family == "mla":
             B, S, W = new_a.shape
-            R = self.cfg.kv_lora_rank
             P, ps, _ = kv_c.shape
             flat = kv_c.reshape(P * ps, W)
             clipped = jnp.where(slots < 0, -1, slots)
             if coopt.opt_kv:
-                from repro.cache.quant import quantize_fp8
-                qc, s_c = quantize_fp8(new_a[..., :R], axis=-1)
-                qr, s_r = quantize_fp8(new_a[..., R:], axis=-1)
-                qv = jnp.concatenate([qc, qr], axis=-1)
-                s = jnp.stack([s_c, s_r], axis=-1)            # (B,S,2)
+                from repro.cache.quant import quantize_latent
+                qv, s = quantize_latent(new_a, self.cfg.kv_lora_rank)
                 flat = flat.at[clipped].set(qv.astype(flat.dtype),
                                             mode="drop")
                 sf = sc_c.reshape(P * ps, 2)
-                sf = sf.at[clipped].set(s, mode="drop")
+                sf = sf.at[clipped].set(s, mode="drop")       # (B,S,2)
                 sc_c = sf.reshape(P, ps, 2)
             else:
                 flat = flat.at[clipped].set(new_a.astype(flat.dtype),
