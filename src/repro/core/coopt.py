@@ -20,7 +20,9 @@ class CoOptConfig:
     opt_pa: bool = False      # valid-block filtering + block-wise softmax (Alg. 3)
     page_size: int = 64       # tokens per KV page (vLLM block)
     page_group: int = 8       # pages processed per online-softmax step (VMEM tile)
-    use_kernel: bool = False  # Pallas hot path (engine) vs pure-jnp (distributed/dry-run)
+    use_kernel: bool = False  # Pallas hot path (single-host AND shard_map
+                              # distributed — kernels.sharded) vs the
+                              # pure-jnp parity reference
     # MoE serving knob: expert capacity = ceil(S * top_k / E * cf). Decode
     # (S=1) is inherently dropless; cf >= E/top_k makes prefill dropless too
     # (exact teacher-forcing consistency) at proportional dispatch cost.

@@ -9,8 +9,9 @@ paper's "skip caching of K_i, V_i".
 
 Read phase (Eq. 6): cached K/V are FP8 and dequantized on the fly
 (``gather_cached_kv``). The Pallas kernel in ``repro.kernels`` fuses this into
-the attention loop; this module is the numerically-identical jnp reference
-used by tests and by the distributed (GSPMD) path.
+the attention loop — on a single host and, through the ``kernels.sharded``
+shard_map layer, per shard of a GSPMD mesh; this module is the
+numerically-identical jnp parity reference used by tests.
 
 Cache layout (one layer) — GLOBAL POOL, no batch dimension:
     kv (2, P_total, ps, Hkv, D) + scale (2, P_total, ps, Hkv).
@@ -43,6 +44,39 @@ from repro.core.coopt import CoOptConfig
 # construction — keys off the same partition.
 from repro.cache.block_manager import (padded_pool_pages,   # noqa: F401
                                        shard_page_ranges)
+
+# Mesh axes the cache ``pages`` axis is sharded over — THE partition of the
+# whole system: CACHE_RULES maps pages onto it, ``shard_page_ranges`` is its
+# host mirror, ``launch.mesh.kv_shard_count`` takes its extent from it, and
+# the ``kernels.sharded`` shard_map layer runs one kernel per shard of it.
+# Lives here (not in the kernel package) so host-side tooling can read it
+# without importing the Pallas stack.
+PAGES_AXES = ("pod", "data")
+
+
+def global_to_local_pages(phys_table, first_page, num_local: int):
+    """Translate a GLOBAL physical page table to one mesh shard's LOCAL page
+    domain: entries inside the shard's contiguous range
+    ``[first_page, first_page + num_local)`` become local indices, every
+    other entry (other shards' pages, and -1 holes) becomes -1 — exactly the
+    kernels' existing hole semantics, so non-owned pages are never DMA'd.
+    Used inside the ``kernels.sharded`` shard_map bodies."""
+    local = phys_table - first_page
+    owned = (phys_table >= 0) & (local >= 0) & (local < num_local)
+    return jnp.where(owned, local, -1).astype(jnp.int32)
+
+
+def global_to_local_slots(slot_idx, first_slot, num_local: int):
+    """Flat-slot analogue of ``global_to_local_pages``: GLOBAL flat slots
+    (page * ps + offset) outside the shard's ``[first_slot, first_slot +
+    num_local)`` slot range (or already -1 / SkipSet) become ``num_local`` —
+    one PAST the shard's last line, so a ``mode='drop'`` scatter discards
+    them as out of bounds (Eq. 5 semantics per shard). -1 would WRAP to the
+    shard's last line (only the global pool reserves a sentinel there; a
+    mid-pool shard's last line is live data)."""
+    local = slot_idx - first_slot
+    owned = (slot_idx >= 0) & (local >= 0) & (local < num_local)
+    return jnp.where(owned, local, num_local).astype(jnp.int32)
 
 
 def make_layer_cache(num_pages: int, page_size: int, num_kv_heads: int,

@@ -41,9 +41,13 @@ _NEG = -1e30
 
 def _chunk_kernel(phys_ref,                          # scalar prefetch
                   q_ref, pos_ref, k_ref, v_ref, ks_ref, vs_ref,
-                  o_ref, m_ref, l_ref, acc_ref,
-                  *, ps: int, opt_kv: bool, window: int, sink: int,
-                  num_pages: int):
+                  o_ref, *refs,
+                  ps: int, opt_kv: bool, window: int, sink: int,
+                  num_pages: int, return_state: bool):
+    if return_state:
+        mo_ref, lo_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        m_ref, l_ref, acc_ref = refs
     b = pl.program_id(0)
     j = pl.program_id(3)                             # logical page id
     bq, D = q_ref.shape[2], q_ref.shape[3]
@@ -96,17 +100,24 @@ def _chunk_kernel(phys_ref,                          # scalar prefetch
     def _finalize():
         l = jnp.maximum(l_ref[:, 0:1], 1e-30)
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        if return_state:
+            # per-shard partial softmax state for the shard_map lse merge
+            mo_ref[0, 0] = m_ref[...]
+            lo_ref[0, 0] = l_ref[...]
 
 
 def flash_chunk_prefill(q, positions, k_pages, v_pages, k_scale, v_scale,
                         phys_table, *, opt_kv: bool, opt_gqa: bool = True,
                         window: int = 0, sink_pages: int = 0,
-                        block_q: int = 256, interpret: bool = True):
+                        block_q: int = 256, return_state: bool = False,
+                        interpret: bool = True):
     """q: (B, S, Hq, D) chunk queries; positions: (B, S) absolute per-row
     positions; k/v_pages: (P_total, ps, Hkv, D) GLOBAL pool [fp8 if opt_kv];
     k/v_scale: (P_total, ps, Hkv) f32 or None; phys_table: (B, NP) int32
     physical pages in logical order (-1 = skip, never DMA'd). The chunk's
-    own K/V must already be written to the pool. Returns (B, S, Hq, D)."""
+    own K/V must already be written to the pool. Returns (B, S, Hq, D); with
+    ``return_state`` also the final online-softmax (m, l) as (B, S, Hq) f32
+    for the cross-shard log-sum-exp merge (``kernels.sharded``)."""
     B, S, Hq, D = q.shape
     P, ps, Hkv, _ = k_pages.shape
     NP = phys_table.shape[1]
@@ -141,9 +152,21 @@ def flash_chunk_prefill(q, positions, k_pages, v_pages, k_scale, v_scale,
     def sc_idx(b, h, i, j, phys):
         return (jnp.maximum(phys[b, j], 0), 0, kv_of_head(h))
 
+    out_blk = pl.BlockSpec((1, 1, bq, D),
+                           lambda b, h, i, j, phys: (b, h, i, 0))
+    st_blk = pl.BlockSpec((1, 1, bq, 128),
+                          lambda b, h, i, j, phys: (b, h, i, 0))
+    out_specs = [out_blk]
+    out_shape = [jax.ShapeDtypeStruct((B, heads, R, D), q.dtype)]
+    if return_state:
+        out_specs += [st_blk, st_blk]
+        out_shape += [jax.ShapeDtypeStruct((B, heads, R, 128),
+                                           jnp.float32)] * 2
+
     kern = functools.partial(_chunk_kernel, ps=ps, opt_kv=opt_kv,
-                             window=window, sink=sink_pages, num_pages=NP)
-    out = pl.pallas_call(
+                             window=window, sink=sink_pages, num_pages=NP,
+                             return_state=return_state)
+    res = pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
@@ -158,20 +181,27 @@ def flash_chunk_prefill(q, positions, k_pages, v_pages, k_scale, v_scale,
                 pl.BlockSpec((1, ps, 1), sc_idx),
                 pl.BlockSpec((1, ps, 1), sc_idx),
             ],
-            out_specs=pl.BlockSpec((1, 1, bq, D),
-                                   lambda b, h, i, j, phys: (b, h, i, 0)),
+            out_specs=out_specs,
             scratch_shapes=[
                 pltpu.VMEM((bq, 128), jnp.float32),
                 pltpu.VMEM((bq, 128), jnp.float32),
                 pltpu.VMEM((bq, D), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((B, heads, R, D), q.dtype),
+        out_shape=out_shape,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
     )(phys_table.astype(jnp.int32), qf, pos_rep, k_pages, v_pages,
       k_scale, v_scale)
-    return out.reshape(B, heads, S, G, D).transpose(0, 2, 1, 3, 4) \
-              .reshape(B, S, Hq, D)
+    out = res[0].reshape(B, heads, S, G, D).transpose(0, 2, 1, 3, 4) \
+                .reshape(B, S, Hq, D)
+    if not return_state:
+        return out
+
+    def _rows(x):           # (B, heads, R, 128) -> (B, S, Hq)
+        return x[..., 0].reshape(B, heads, S, G).transpose(0, 2, 1, 3) \
+                        .reshape(B, S, Hq)
+
+    return out, _rows(res[1]), _rows(res[2])

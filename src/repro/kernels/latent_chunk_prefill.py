@@ -45,9 +45,14 @@ _NEG = -1e30
 
 def _latent_chunk_kernel(phys_ref,                   # scalar prefetch
                          ql_ref, qr_ref, pos_ref, lat_ref, sc_ref,
-                         o_ref, m_ref, l_ref, acc_ref,
-                         *, ps: int, R: int, sm_scale: float, opt_kv: bool,
-                         window: int, sink: int, num_pages: int):
+                         o_ref, *refs,
+                         ps: int, R: int, sm_scale: float, opt_kv: bool,
+                         window: int, sink: int, num_pages: int,
+                         return_state: bool):
+    if return_state:
+        mo_ref, lo_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        m_ref, l_ref, acc_ref = refs
     b = pl.program_id(0)
     j = pl.program_id(2)                             # logical page id
     bq = ql_ref.shape[1]
@@ -103,19 +108,26 @@ def _latent_chunk_kernel(phys_ref,                   # scalar prefetch
     def _finalize():
         l = jnp.maximum(l_ref[:, 0:1], 1e-30)
         o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        if return_state:
+            # per-shard partial softmax state for the shard_map lse merge
+            mo_ref[0] = m_ref[...]
+            lo_ref[0] = l_ref[...]
 
 
 def latent_chunk_prefill(q_lat, q_rope, positions, lat_pages, scale_pages,
                          phys_table, *, sm_scale: float, opt_kv: bool,
                          window: int = 0, sink_pages: int = 0,
-                         block_q: int = 256, interpret: bool = True):
+                         block_q: int = 256, return_state: bool = False,
+                         interpret: bool = True):
     """q_lat: (B, S, H, R) W_uk-absorbed chunk queries; q_rope: (B, S, H, dr);
     positions: (B, S) absolute per-row positions; lat_pages: (P_total, ps,
     R+dr) GLOBAL latent pool [fp8 if opt_kv]; scale_pages: (P_total, ps, 2)
     f32 dual scales or None; phys_table: (B, NP) int32 physical pages in
     logical order (-1 = skip, never DMA'd). The chunk's own latents must
     already be written to the pool. Returns o_lat (B, S, H, R) f32; the
-    caller applies the ``w_uv`` expansion."""
+    caller applies the ``w_uv`` expansion. With ``return_state`` also the
+    final online-softmax (m, l) as (B, S, H) f32 for the cross-shard
+    log-sum-exp merge (``kernels.sharded``)."""
     B, S, H, R = q_lat.shape
     P, ps, W = lat_pages.shape
     dr = q_rope.shape[-1]
@@ -140,10 +152,19 @@ def latent_chunk_prefill(q_lat, q_rope, positions, lat_pages, scale_pages,
     def lat_idx(b, i, j, phys):
         return (jnp.maximum(phys[b, j], 0), 0, 0)
 
+    out_blk = pl.BlockSpec((1, bq, R), lambda b, i, j, phys: (b, i, 0))
+    st_blk = pl.BlockSpec((1, bq, 128), lambda b, i, j, phys: (b, i, 0))
+    out_specs = [out_blk]
+    out_shape = [jax.ShapeDtypeStruct((B, RW, R), jnp.float32)]
+    if return_state:
+        out_specs += [st_blk, st_blk]
+        out_shape += [jax.ShapeDtypeStruct((B, RW, 128), jnp.float32)] * 2
+
     kern = functools.partial(_latent_chunk_kernel, ps=ps, R=R,
                              sm_scale=sm_scale, opt_kv=opt_kv, window=window,
-                             sink=sink_pages, num_pages=NP)
-    out = pl.pallas_call(
+                             sink=sink_pages, num_pages=NP,
+                             return_state=return_state)
+    res = pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
@@ -155,18 +176,21 @@ def latent_chunk_prefill(q_lat, q_rope, positions, lat_pages, scale_pages,
                 pl.BlockSpec((1, ps, W), lat_idx),
                 pl.BlockSpec((1, ps, 2), lat_idx),
             ],
-            out_specs=pl.BlockSpec((1, bq, R),
-                                   lambda b, i, j, phys: (b, i, 0)),
+            out_specs=out_specs,
             scratch_shapes=[
                 pltpu.VMEM((bq, 128), jnp.float32),
                 pltpu.VMEM((bq, 128), jnp.float32),
                 pltpu.VMEM((bq, R), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((B, RW, R), jnp.float32),
+        out_shape=out_shape,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(phys_table.astype(jnp.int32), qlf, qrf, pos_rep, lat_pages,
       scale_pages)
-    return out.reshape(B, S, H, R)
+    out = res[0].reshape(B, S, H, R)
+    if not return_state:
+        return out
+    return (out, res[1][..., 0].reshape(B, S, H),
+            res[2][..., 0].reshape(B, S, H))

@@ -9,6 +9,14 @@ to DMA + logical page for positions) dereferenced inside BlockSpec
 index_maps, and the write path scatters to global flat slots (the pool's
 last cache line is the reserved SkipSet sentinel).
 
+ONE hot path, single-host AND distributed: when a ``sharded.ShardCtx`` is
+installed (``set_mesh_ctx`` — the engine and ``launch.steps`` bind it at
+trace time from their mesh), every wrapper dispatches to the ``shard_map``
+layer in ``kernels.sharded`` — the same kernels run per mesh shard against
+their owned page range, partial softmax states are lse-merged across the
+pages axes, and writes stay shard-local. With no ctx (no mesh, or a mesh
+whose pages axes have extent 1) the single-device kernels run unchanged.
+
 On this container the kernels run in interpret mode (CPU); on TPU hardware
 ``configure_for_backend()`` flips ``INTERPRET`` off — the launchers
 (``launch.serve.serve_workload``, ``launch.steps.make_step`` engine setup,
@@ -16,7 +24,9 @@ On this container the kernels run in interpret mode (CPU); on TPU hardware
 """
 from __future__ import annotations
 
+from contextlib import contextmanager
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,8 +37,14 @@ from repro.kernels import kv_cache_write as _kw
 from repro.kernels import latent_chunk_prefill as _lc
 from repro.kernels import paged_gqa_decode as _pd
 from repro.kernels import paged_latent_decode as _ld
+from repro.kernels import sharded as _sh
 
 INTERPRET = True
+
+# pages-axis shard_map context — None = single-device hot path. Installed at
+# TRACE time by whoever owns the mesh (serving.Engine step impls,
+# launch.steps step fns), so jit-cached traces can never leak a stale mesh.
+_MESH_CTX: Optional[_sh.ShardCtx] = None
 
 
 def configure_for_backend() -> None:
@@ -36,15 +52,43 @@ def configure_for_backend() -> None:
     INTERPRET = jax.default_backend() != "tpu"
 
 
+def make_mesh_ctx(mesh) -> Optional[_sh.ShardCtx]:
+    """ShardCtx for ``mesh`` (None when its pages axes have extent 1 — an
+    unsharded mesh takes the identical code path as no mesh)."""
+    return _sh.make_ctx(mesh)
+
+
+def set_mesh_ctx(ctx: Optional[_sh.ShardCtx]) -> None:
+    """Install (or clear) the pages-axis shard_map dispatch context."""
+    global _MESH_CTX
+    _MESH_CTX = ctx
+
+
+def mesh_ctx() -> Optional[_sh.ShardCtx]:
+    return _MESH_CTX
+
+
+@contextmanager
+def mesh_ctx_scope(ctx: Optional[_sh.ShardCtx]):
+    """Bind the dispatch ctx for the duration of a trace and RESTORE the
+    previous one after — mesh owners (engine step impls, launch.steps step
+    fns) wrap their model calls in this so a trace can neither leak its
+    mesh to later direct ops calls nor clobber a ctx a direct caller
+    installed."""
+    prev = _MESH_CTX
+    set_mesh_ctx(ctx)
+    try:
+        yield
+    finally:
+        set_mesh_ctx(prev)
+
+
 # ---------------------------------------------------------------------------
 @partial(jax.jit, static_argnames=("opt_kv", "opt_gqa", "window",
                                    "sink_pages"))
-def paged_pool_decode(q, kv_pages, scale_pages, cache_len, phys_table,
-                      log_table, *, opt_kv: bool, opt_gqa: bool,
-                      window: int = 0, sink_pages: int = 0):
-    """Fused decode over the global pool. q (B,Hq,D); kv_pages
-    (2,P_total,ps,Hkv,D); scale_pages (2,P_total,ps,Hkv)|None; phys/log_table
-    (B,NSel) int32 (-1 = never DMA'd)."""
+def _paged_pool_decode_single(q, kv_pages, scale_pages, cache_len,
+                              phys_table, log_table, *, opt_kv: bool,
+                              opt_gqa: bool, window: int, sink_pages: int):
     ks = scale_pages[0] if scale_pages is not None else None
     vs = scale_pages[1] if scale_pages is not None else None
     return _pd.paged_pool_decode(
@@ -54,31 +98,84 @@ def paged_pool_decode(q, kv_pages, scale_pages, cache_len, phys_table,
         sink_pages=sink_pages, interpret=INTERPRET)
 
 
+def paged_pool_decode(q, kv_pages, scale_pages, cache_len, phys_table,
+                      log_table, *, opt_kv: bool, opt_gqa: bool,
+                      window: int = 0, sink_pages: int = 0):
+    """Fused decode over the global pool. q (B,Hq,D); kv_pages
+    (2,P_total,ps,Hkv,D); scale_pages (2,P_total,ps,Hkv)|None; phys/log_table
+    (B,NSel) int32 (-1 = never DMA'd)."""
+    if _MESH_CTX is not None:
+        return _sh.paged_pool_decode(
+            _MESH_CTX, q, kv_pages, scale_pages, cache_len, phys_table,
+            log_table, opt_kv=opt_kv, opt_gqa=opt_gqa, window=window,
+            sink_pages=sink_pages, interpret=INTERPRET)
+    return _paged_pool_decode_single(
+        q, kv_pages, scale_pages, cache_len, phys_table, log_table,
+        opt_kv=opt_kv, opt_gqa=opt_gqa, window=window,
+        sink_pages=sink_pages)
+
+
 @partial(jax.jit, static_argnames=("opt_kv",))
+def _kv_cache_write_single(kv_cache, scale_cache, k_new, v_new, slot_idx, *,
+                           opt_kv: bool):
+    _, Pt, ps, Hkv, D = kv_cache.shape
+    flat_k = kv_cache[0].reshape(Pt * ps, Hkv, D)
+    flat_v = kv_cache[1].reshape(Pt * ps, Hkv, D)
+    if scale_cache is not None:
+        s_k = scale_cache[0].reshape(Pt * ps, Hkv)
+        s_v = scale_cache[1].reshape(Pt * ps, Hkv)
+    else:
+        s_k = jnp.zeros((Pt * ps, Hkv), jnp.float32)
+        s_v = s_k
+    k_c, v_c, ks_c, vs_c = _kw.kv_cache_write(
+        k_new, v_new, slot_idx.astype(jnp.int32), flat_k, flat_v, s_k, s_v,
+        opt_kv=opt_kv, interpret=INTERPRET)
+    kv = jnp.stack([k_c.reshape(Pt, ps, Hkv, D),
+                    v_c.reshape(Pt, ps, Hkv, D)])
+    if scale_cache is not None:
+        scale_cache = jnp.stack([ks_c.reshape(Pt, ps, Hkv),
+                                 vs_c.reshape(Pt, ps, Hkv)])
+    return kv, scale_cache
+
+
 def kv_cache_write(kv_cache, scale_cache, k_new, v_new, slot_idx, *,
                    opt_kv: bool):
     """Engine-layout adapter for the write kernel. kv_cache
     (2,P_total,ps,Hkv,D) global pool (its LAST flat line is the SkipSet
     sentinel — the BlockManager never allocates the final page); returns
-    updated (kv_cache, scale_cache)."""
-    _, P, ps, Hkv, D = kv_cache.shape
-    flat_k = kv_cache[0].reshape(P * ps, Hkv, D)
-    flat_v = kv_cache[1].reshape(P * ps, Hkv, D)
-    if scale_cache is not None:
-        s_k = scale_cache[0].reshape(P * ps, Hkv)
-        s_v = scale_cache[1].reshape(P * ps, Hkv)
+    updated (kv_cache, scale_cache). Under a mesh ctx the scatter runs
+    shard-local (no sentinel needed: out-of-range slots simply drop)."""
+    if _MESH_CTX is not None:
+        return _sh.kv_pool_write(_MESH_CTX, kv_cache, scale_cache, k_new,
+                                 v_new, slot_idx, opt_kv=opt_kv)
+    return _kv_cache_write_single(kv_cache, scale_cache, k_new, v_new,
+                                  slot_idx, opt_kv=opt_kv)
+
+
+def latent_pool_write(lat_cache, scale_cache, latent, slot_idx, *,
+                      opt_kv: bool, lora_rank: int):
+    """MLA latent write path: dual-scale quantization + flat-slot scatter
+    into the global latent pool (lat_cache (P,ps,R+dr); latent (B,S,R+dr);
+    -1 slots drop). Under a mesh ctx the scatter runs shard-local; otherwise
+    this is the plain jnp scatter (there is no Pallas latent write kernel —
+    the write is already one fused scatter)."""
+    if _MESH_CTX is not None:
+        return _sh.latent_pool_write(_MESH_CTX, lat_cache, scale_cache,
+                                     latent, slot_idx, opt_kv=opt_kv,
+                                     lora_rank=lora_rank)
+    Pt, ps, W = lat_cache.shape
+    flat = lat_cache.reshape(Pt * ps, W)
+    clipped = jnp.where(slot_idx < 0, -1, slot_idx)
+    if opt_kv:
+        from repro.cache.quant import quantize_latent
+        qv, s = quantize_latent(latent, lora_rank)
+        flat = flat.at[clipped].set(qv.astype(flat.dtype), mode="drop")
+        sf = scale_cache.reshape(Pt * ps, 2)
+        sf = sf.at[clipped].set(s, mode="drop")
+        scale_cache = sf.reshape(Pt, ps, 2)
     else:
-        s_k = jnp.zeros((P * ps, Hkv), jnp.float32)
-        s_v = s_k
-    k_c, v_c, ks_c, vs_c = _kw.kv_cache_write(
-        k_new, v_new, slot_idx.astype(jnp.int32), flat_k, flat_v, s_k, s_v,
-        opt_kv=opt_kv, interpret=INTERPRET)
-    kv = jnp.stack([k_c.reshape(P, ps, Hkv, D),
-                    v_c.reshape(P, ps, Hkv, D)])
-    if scale_cache is not None:
-        scale_cache = jnp.stack([ks_c.reshape(P, ps, Hkv),
-                                 vs_c.reshape(P, ps, Hkv)])
-    return kv, scale_cache
+        flat = flat.at[clipped].set(latent.astype(flat.dtype), mode="drop")
+    return flat.reshape(Pt, ps, W), scale_cache
 
 
 @partial(jax.jit, static_argnames=("window", "block_q", "block_k",
@@ -92,6 +189,17 @@ def flash_prefill(q, k, v, *, window: int = 0, block_q: int = 256,
 
 @partial(jax.jit, static_argnames=("sm_scale", "opt_kv", "window",
                                    "sink_pages"))
+def _paged_latent_decode_single(q_lat, q_rope, lat_pages, scale_pages,
+                                cache_len, phys_table, log_table, *,
+                                sm_scale: float, opt_kv: bool, window: int,
+                                sink_pages: int):
+    return _ld.paged_latent_decode(
+        q_lat, q_rope, lat_pages, scale_pages, cache_len.astype(jnp.int32),
+        phys_table.astype(jnp.int32), log_table.astype(jnp.int32),
+        sm_scale=sm_scale, opt_kv=opt_kv, window=window,
+        sink_pages=sink_pages, interpret=INTERPRET)
+
+
 def paged_latent_decode(q_lat, q_rope, lat_pages, scale_pages, cache_len,
                         phys_table, log_table, *, sm_scale: float,
                         opt_kv: bool, window: int = 0, sink_pages: int = 0):
@@ -100,15 +208,28 @@ def paged_latent_decode(q_lat, q_rope, lat_pages, scale_pages, cache_len,
     (P_total,ps,R+dr) [c_kv|k_rope] packed; scale_pages (P_total,ps,2) dual
     c/k_rope scales | None; phys/log_table (B,NSel) int32 (-1 = never
     DMA'd). Returns o_lat (B,H,R) f32 — w_uv expansion stays outside."""
-    return _ld.paged_latent_decode(
-        q_lat, q_rope, lat_pages, scale_pages, cache_len.astype(jnp.int32),
-        phys_table.astype(jnp.int32), log_table.astype(jnp.int32),
-        sm_scale=sm_scale, opt_kv=opt_kv, window=window,
-        sink_pages=sink_pages, interpret=INTERPRET)
+    if _MESH_CTX is not None:
+        return _sh.paged_latent_decode(
+            _MESH_CTX, q_lat, q_rope, lat_pages, scale_pages, cache_len,
+            phys_table, log_table, sm_scale=sm_scale, opt_kv=opt_kv,
+            window=window, sink_pages=sink_pages, interpret=INTERPRET)
+    return _paged_latent_decode_single(
+        q_lat, q_rope, lat_pages, scale_pages, cache_len, phys_table,
+        log_table, sm_scale=sm_scale, opt_kv=opt_kv, window=window,
+        sink_pages=sink_pages)
 
 
 @partial(jax.jit, static_argnames=("sm_scale", "opt_kv", "window",
                                    "sink_pages"))
+def _latent_chunk_prefill_single(q_lat, q_rope, positions, lat_pages,
+                                 scale_pages, phys_table, *, sm_scale: float,
+                                 opt_kv: bool, window: int, sink_pages: int):
+    return _lc.latent_chunk_prefill(
+        q_lat, q_rope, positions.astype(jnp.int32), lat_pages, scale_pages,
+        phys_table.astype(jnp.int32), sm_scale=sm_scale, opt_kv=opt_kv,
+        window=window, sink_pages=sink_pages, interpret=INTERPRET)
+
+
 def latent_chunk_prefill(q_lat, q_rope, positions, lat_pages, scale_pages,
                          phys_table, *, sm_scale: float, opt_kv: bool,
                          window: int = 0, sink_pages: int = 0):
@@ -118,14 +239,30 @@ def latent_chunk_prefill(q_lat, q_rope, positions, lat_pages, scale_pages,
     named by the scalar-prefetched ``phys_table`` (B,NP; -1 = never DMA'd).
     The chunk's own latents must already be written. Returns o_lat
     (B,S,H,R) f32."""
-    return _lc.latent_chunk_prefill(
-        q_lat, q_rope, positions.astype(jnp.int32), lat_pages, scale_pages,
-        phys_table.astype(jnp.int32), sm_scale=sm_scale, opt_kv=opt_kv,
-        window=window, sink_pages=sink_pages, interpret=INTERPRET)
+    if _MESH_CTX is not None:
+        return _sh.latent_chunk_prefill(
+            _MESH_CTX, q_lat, q_rope, positions, lat_pages, scale_pages,
+            phys_table, sm_scale=sm_scale, opt_kv=opt_kv, window=window,
+            sink_pages=sink_pages, interpret=INTERPRET)
+    return _latent_chunk_prefill_single(
+        q_lat, q_rope, positions, lat_pages, scale_pages, phys_table,
+        sm_scale=sm_scale, opt_kv=opt_kv, window=window,
+        sink_pages=sink_pages)
 
 
 @partial(jax.jit, static_argnames=("opt_kv", "opt_gqa", "window",
                                    "sink_pages"))
+def _paged_chunk_prefill_single(q, positions, kv_pages, scale_pages,
+                                phys_table, *, opt_kv: bool, opt_gqa: bool,
+                                window: int, sink_pages: int):
+    ks = scale_pages[0] if scale_pages is not None else None
+    vs = scale_pages[1] if scale_pages is not None else None
+    return _fc.flash_chunk_prefill(
+        q, positions.astype(jnp.int32), kv_pages[0], kv_pages[1], ks, vs,
+        phys_table.astype(jnp.int32), opt_kv=opt_kv, opt_gqa=opt_gqa,
+        window=window, sink_pages=sink_pages, interpret=INTERPRET)
+
+
 def paged_chunk_prefill(q, positions, kv_pages, scale_pages, phys_table, *,
                         opt_kv: bool, opt_gqa: bool, window: int = 0,
                         sink_pages: int = 0):
@@ -133,9 +270,11 @@ def paged_chunk_prefill(q, positions, kv_pages, scale_pages, phys_table, *,
     queries (B,S,Hq,D) with absolute ``positions`` (B,S) attends the lane's
     cached pages named by the scalar-prefetched ``phys_table`` (B,NP; -1 =
     never DMA'd). The chunk's own K/V must already be written."""
-    ks = scale_pages[0] if scale_pages is not None else None
-    vs = scale_pages[1] if scale_pages is not None else None
-    return _fc.flash_chunk_prefill(
-        q, positions.astype(jnp.int32), kv_pages[0], kv_pages[1], ks, vs,
-        phys_table.astype(jnp.int32), opt_kv=opt_kv, opt_gqa=opt_gqa,
-        window=window, sink_pages=sink_pages, interpret=INTERPRET)
+    if _MESH_CTX is not None:
+        return _sh.paged_chunk_prefill(
+            _MESH_CTX, q, positions, kv_pages, scale_pages, phys_table,
+            opt_kv=opt_kv, opt_gqa=opt_gqa, window=window,
+            sink_pages=sink_pages, interpret=INTERPRET)
+    return _paged_chunk_prefill_single(
+        q, positions, kv_pages, scale_pages, phys_table, opt_kv=opt_kv,
+        opt_gqa=opt_gqa, window=window, sink_pages=sink_pages)

@@ -50,9 +50,13 @@ from repro.kernels._compat import CompilerParams as _CompilerParams
 
 def _pool_kernel(len_ref, phys_ref, log_ref,     # scalar prefetch
                  q_ref, k_ref, v_ref, ks_ref, vs_ref,
-                 o_ref, m_ref, l_ref, acc_ref,
-                 *, ps: int, opt_kv: bool, window: int, sink: int,
-                 num_sel: int):
+                 o_ref, *refs,
+                 ps: int, opt_kv: bool, window: int, sink: int,
+                 num_sel: int, return_state: bool):
+    if return_state:
+        mo_ref, lo_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        m_ref, l_ref, acc_ref = refs
     b = pl.program_id(0)
     s_i = pl.program_id(2)
     G, D = q_ref.shape[2], q_ref.shape[3]
@@ -108,16 +112,25 @@ def _pool_kernel(len_ref, phys_ref, log_ref,     # scalar prefetch
         l = l_ref[:, 0:1]
         o_ref[0, 0] = (acc_ref[...] /
                        jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+        if return_state:
+            # per-shard partial softmax state for the shard_map lse merge:
+            # lane-replicated (G, 128) tiles, column 0 is the value
+            mo_ref[0, 0] = m_ref[...]
+            lo_ref[0, 0] = l_ref[...]
 
 
 def paged_pool_decode(q, k_pages, v_pages, k_scale, v_scale, cache_len,
                       phys_table, log_table, *, opt_kv: bool, opt_gqa: bool,
                       window: int = 0, sink_pages: int = 0,
-                      interpret: bool = True):
+                      return_state: bool = False, interpret: bool = True):
     """q: (B, Hq, D); k/v_pages: (P_total, ps, Hkv, D) GLOBAL pool [fp8 if
     opt_kv]; k/v_scale: (P_total, ps, Hkv) f32 or None; cache_len: (B,) int32;
     phys_table/log_table: (B, NSel) int32 — physical page to DMA / logical
-    page id for positions; -1 = skip (never DMA'd). Returns (B, Hq, D)."""
+    page id for positions; -1 = skip (never DMA'd). Returns (B, Hq, D);
+    with ``return_state`` also the final online-softmax (m, l) as (B, Hq)
+    f32 — a shard holding NONE of a lane's pages reports (m=-1e30, l=0), so
+    its contribution vanishes in the cross-shard log-sum-exp merge
+    (``kernels.sharded``)."""
     B, Hq, D = q.shape
     P, ps, Hkv, _ = k_pages.shape
     NSel = phys_table.shape[1]
@@ -141,9 +154,20 @@ def paged_pool_decode(q, k_pages, v_pages, k_scale, v_scale, cache_len,
     def sc_idx(b, h, s, L, phys, log):
         return (jnp.maximum(phys[b, s], 0), 0, kv_of_head(h))
 
+    out_blk = pl.BlockSpec((1, 1, G, D),
+                           lambda b, h, s, L, phys, log: (b, h, 0, 0))
+    st_blk = pl.BlockSpec((1, 1, G, 128),
+                          lambda b, h, s, L, phys, log: (b, h, 0, 0))
+    out_specs = [out_blk]
+    out_shape = [jax.ShapeDtypeStruct((B, heads, G, D), q.dtype)]
+    if return_state:
+        out_specs += [st_blk, st_blk]
+        out_shape += [jax.ShapeDtypeStruct((B, heads, G, 128), jnp.float32)] * 2
+
     kern = functools.partial(_pool_kernel, ps=ps, opt_kv=opt_kv,
-                             window=window, sink=sink_pages, num_sel=NSel)
-    out = pl.pallas_call(
+                             window=window, sink=sink_pages, num_sel=NSel,
+                             return_state=return_state)
+    res = pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
@@ -156,18 +180,22 @@ def paged_pool_decode(q, k_pages, v_pages, k_scale, v_scale, cache_len,
                 pl.BlockSpec((1, ps, 1), sc_idx),
                 pl.BlockSpec((1, ps, 1), sc_idx),
             ],
-            out_specs=pl.BlockSpec((1, 1, G, D),
-                                   lambda b, h, s, L, phys, log: (b, h, 0, 0)),
+            out_specs=out_specs,
             scratch_shapes=[
                 pltpu.VMEM((G, 128), jnp.float32),
                 pltpu.VMEM((G, 128), jnp.float32),
                 pltpu.VMEM((G, D), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((B, heads, G, D), q.dtype),
+        out_shape=out_shape,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(cache_len, phys_table, log_table, qf, k_pages, v_pages,
       k_scale, v_scale)
-    return out.reshape(B, Hq, D)
+    out = res[0].reshape(B, Hq, D)
+    if not return_state:
+        return out
+    m = res[1][..., 0].reshape(B, Hq)
+    l = res[2][..., 0].reshape(B, Hq)
+    return out, m, l

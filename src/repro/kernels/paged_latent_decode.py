@@ -56,9 +56,14 @@ _NEG = -1e30
 
 def _latent_kernel(len_ref, phys_ref, log_ref,       # scalar prefetch
                    ql_ref, qr_ref, lat_ref, sc_ref,
-                   o_ref, m_ref, l_ref, acc_ref,
-                   *, ps: int, R: int, sm_scale: float, opt_kv: bool,
-                   window: int, sink: int, num_sel: int):
+                   o_ref, *refs,
+                   ps: int, R: int, sm_scale: float, opt_kv: bool,
+                   window: int, sink: int, num_sel: int,
+                   return_state: bool):
+    if return_state:
+        mo_ref, lo_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        m_ref, l_ref, acc_ref = refs
     b = pl.program_id(0)
     s_i = pl.program_id(1)
     H = ql_ref.shape[1]
@@ -118,12 +123,16 @@ def _latent_kernel(len_ref, phys_ref, log_ref,       # scalar prefetch
         l = l_ref[:, 0:1]
         o_ref[0] = (acc_ref[...] /
                     jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+        if return_state:
+            # per-shard partial softmax state for the shard_map lse merge
+            mo_ref[0] = m_ref[...]
+            lo_ref[0] = l_ref[...]
 
 
 def paged_latent_decode(q_lat, q_rope, lat_pages, scale_pages, cache_len,
                         phys_table, log_table, *, sm_scale: float,
                         opt_kv: bool, window: int = 0, sink_pages: int = 0,
-                        interpret: bool = True):
+                        return_state: bool = False, interpret: bool = True):
     """q_lat: (B, H, R) W_uk-absorbed queries; q_rope: (B, H, dr); lat_pages:
     (P_total, ps, R+dr) GLOBAL latent pool [fp8 if opt_kv]; scale_pages:
     (P_total, ps, 2) f32 dual c/k_rope scales or None; cache_len: (B,) int32;
@@ -131,7 +140,9 @@ def paged_latent_decode(q_lat, q_rope, lat_pages, scale_pages, cache_len,
     page id for positions; -1 = skip (never DMA'd). ``sm_scale`` is the
     softmax scale 1/sqrt(dn+dr) — NOT derivable from R (absorption changes
     the contraction width, not the score scale). Returns o_lat (B, H, R) f32;
-    the caller applies the ``w_uv`` expansion."""
+    the caller applies the ``w_uv`` expansion. With ``return_state`` also
+    the final online-softmax (m, l) as (B, H) f32 for the cross-shard
+    log-sum-exp merge (``kernels.sharded``)."""
     B, H, R = q_lat.shape
     P, ps, W = lat_pages.shape
     NSel = phys_table.shape[1]
@@ -142,10 +153,18 @@ def paged_latent_decode(q_lat, q_rope, lat_pages, scale_pages, cache_len,
     def lat_idx(b, s, L, phys, log):
         return (jnp.maximum(phys[b, s], 0), 0, 0)
 
+    out_blk = pl.BlockSpec((1, H, R), lambda b, s, L, phys, log: (b, 0, 0))
+    st_blk = pl.BlockSpec((1, H, 128), lambda b, s, L, phys, log: (b, 0, 0))
+    out_specs = [out_blk]
+    out_shape = [jax.ShapeDtypeStruct((B, H, R), jnp.float32)]
+    if return_state:
+        out_specs += [st_blk, st_blk]
+        out_shape += [jax.ShapeDtypeStruct((B, H, 128), jnp.float32)] * 2
+
     kern = functools.partial(_latent_kernel, ps=ps, R=R, sm_scale=sm_scale,
                              opt_kv=opt_kv, window=window, sink=sink_pages,
-                             num_sel=NSel)
-    return pl.pallas_call(
+                             num_sel=NSel, return_state=return_state)
+    res = pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
@@ -157,17 +176,19 @@ def paged_latent_decode(q_lat, q_rope, lat_pages, scale_pages, cache_len,
                 pl.BlockSpec((1, ps, W), lat_idx),
                 pl.BlockSpec((1, ps, 2), lat_idx),
             ],
-            out_specs=pl.BlockSpec((1, H, R),
-                                   lambda b, s, L, phys, log: (b, 0, 0)),
+            out_specs=out_specs,
             scratch_shapes=[
                 pltpu.VMEM((H, 128), jnp.float32),
                 pltpu.VMEM((H, 128), jnp.float32),
                 pltpu.VMEM((H, R), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((B, H, R), jnp.float32),
+        out_shape=out_shape,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(cache_len, phys_table, log_table, q_lat, q_rope, lat_pages,
       scale_pages)
+    if not return_state:
+        return res[0]
+    return res[0], res[1][..., 0], res[2][..., 0]

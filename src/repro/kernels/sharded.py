@@ -1,0 +1,305 @@
+"""shard_map layer over the pooled Pallas kernels — ONE kernel hot path for
+single-host AND distributed (GSPMD mesh) serving.
+
+The device cache's ``pages`` axis is sharded over the mesh ``PAGES_AXES``
+(``(pod, data)`` — the same partition PR 2 mirrored host-side as
+``opt_kv.shard_page_ranges``). This module wraps each pooled kernel in a
+``shard_map`` over those axes so every mesh shard runs the UNCHANGED
+single-host kernel against only its owned contiguous page range:
+
+  * the per-lane GLOBAL physical page table is translated to the shard's
+    LOCAL page domain (``opt_kv.global_to_local_pages``) — entries outside
+    the shard's range become -1 and are never DMA'd, exactly the kernels'
+    existing hole semantics, so no page crosses the interconnect;
+  * each shard's kernel emits its final online-softmax state
+    (``return_state=True`` -> normalized partial output + (m, l)), and the
+    partials are combined with the standard log-sum-exp merge across the
+    pages axes:  m* = pmax(m);  w_s = exp(m_s - m*) * l_s;
+    out = psum(w_s * o_s) / psum(w_s).  A shard holding none of a lane's
+    pages reports (m = -1e30, l = 0) and so contributes nothing;
+  * the write path stays shard-local too: global flat slots are translated
+    to the shard's slot range (others dropped via ``mode='drop'``), so the
+    pool is scattered into in place with NO cross-shard traffic and no
+    sentinel-line aliasing (a -1 simply never lands).
+
+The engine-facing contract is unchanged: callers pass GLOBAL pools, GLOBAL
+tables/slots, and get replicated outputs — ``kernels.ops`` dispatches here
+whenever a ``ShardCtx`` is installed (``ops.set_mesh_ctx``), and an
+unsharded mesh (pages-axes extent 1) yields ``make_ctx(...) is None`` so a
+1-device mesh takes the *identical* code path as no mesh at all.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.cache.quant import quantize_fp8, quantize_latent
+# PAGES_AXES — the mesh axes the pages axis is sharded over — lives with
+# the shard-ownership math in core.opt_kv (re-exported here for kernel-side
+# callers); host tooling reads it without importing the Pallas stack.
+from repro.core.opt_kv import (PAGES_AXES,                  # noqa: F401
+                               global_to_local_pages, global_to_local_slots)
+from repro.kernels import flash_chunk_prefill as _fc
+from repro.kernels import latent_chunk_prefill as _lc
+from repro.kernels import paged_gqa_decode as _pd
+from repro.kernels import paged_latent_decode as _ld
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    """Static description of the pages-axis partition of one mesh — the
+    ``jax.jit``-static handle the ops wrappers key their dispatch on."""
+    mesh: jax.sharding.Mesh
+    axes: Tuple[str, ...]          # PAGES_AXES members present in the mesh
+    num_shards: int                # product of their extents
+
+
+def make_ctx(mesh) -> Optional[ShardCtx]:
+    """ShardCtx for ``mesh``, or None when the pages axes have extent 1 —
+    an unsharded (or absent) mesh takes the identical single-host path."""
+    if mesh is None:
+        return None
+    axes = tuple(a for a in PAGES_AXES if a in mesh.shape)
+    n = int(math.prod(mesh.shape[a] for a in axes)) if axes else 1
+    if n <= 1:
+        return None
+    return ShardCtx(mesh=mesh, axes=axes, num_shards=n)
+
+
+def _shard_index(ctx: ShardCtx):
+    """Linear shard id along the pages axes, major-to-minor in mesh-axis
+    order — matches both the device layout of ``PartitionSpec(ctx.axes)``
+    and the host ``shard_page_ranges`` ordering."""
+    idx = jnp.int32(0)
+    for a in ctx.axes:
+        idx = idx * ctx.mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def _lse_merge(ctx: ShardCtx, o, m, l, out_dtype):
+    """Combine per-shard normalized partials across the pages axes.
+    o (..., D) f32-able; m/l (...,) f32. Standard log-sum-exp merge."""
+    m_all = jax.lax.pmax(m, ctx.axes)
+    w = jnp.exp(m - m_all) * l                     # 0 for page-less shards
+    den = jax.lax.psum(w, ctx.axes)
+    num = jax.lax.psum(o.astype(jnp.float32) * w[..., None], ctx.axes)
+    return (num / jnp.maximum(den, 1e-30)[..., None]).astype(out_dtype)
+
+
+def _pages_spec(ndim: int, pages_dim: int, ctx: ShardCtx) -> P:
+    entries = [None] * ndim
+    entries[pages_dim] = ctx.axes if len(ctx.axes) > 1 else ctx.axes[0]
+    return P(*entries)
+
+
+# ------------------------------------------------------------- read path --
+@partial(jax.jit, static_argnames=("ctx", "opt_kv", "opt_gqa", "window",
+                                   "sink_pages", "interpret"))
+def paged_pool_decode(ctx: ShardCtx, q, kv_pages, scale_pages, cache_len,
+                      phys_table, log_table, *, opt_kv: bool, opt_gqa: bool,
+                      window: int = 0, sink_pages: int = 0,
+                      interpret: bool = True):
+    """Distributed ``paged_gqa_decode``: kv_pages (2, P_total, ps, Hkv, D)
+    pages-sharded over ``ctx.axes``; q/tables/cache_len replicated; returns
+    the replicated (B, Hq, D) attention output."""
+    P_total = kv_pages.shape[1]
+    P_local = P_total // ctx.num_shards
+    _, _, ps, Hkv, _ = kv_pages.shape
+    if scale_pages is None:
+        scale_pages = jnp.zeros((2, P_total, ps, Hkv), jnp.float32)
+
+    def body(q, kv, sc, cl, phys, log):
+        first = _shard_index(ctx) * P_local
+        lphys = global_to_local_pages(phys, first, P_local)
+        o, m, l = _pd.paged_pool_decode(
+            q, kv[0], kv[1], sc[0], sc[1], cl, lphys, log,
+            opt_kv=opt_kv, opt_gqa=opt_gqa, window=window,
+            sink_pages=sink_pages, return_state=True, interpret=interpret)
+        return _lse_merge(ctx, o, m, l, q.dtype)
+
+    return shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(P(), _pages_spec(5, 1, ctx), _pages_spec(4, 1, ctx),
+                  P(), P(), P()),
+        out_specs=P(), check_rep=False,
+    )(q, kv_pages, scale_pages, cache_len.astype(jnp.int32),
+      phys_table.astype(jnp.int32), log_table.astype(jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("ctx", "opt_kv", "opt_gqa", "window",
+                                   "sink_pages", "interpret"))
+def paged_chunk_prefill(ctx: ShardCtx, q, positions, kv_pages, scale_pages,
+                        phys_table, *, opt_kv: bool, opt_gqa: bool,
+                        window: int = 0, sink_pages: int = 0,
+                        interpret: bool = True):
+    """Distributed ``flash_chunk_prefill``: chunk queries (B, S, Hq, D)
+    replicated, pool pages-sharded; per-shard partials lse-merged."""
+    P_total = kv_pages.shape[1]
+    P_local = P_total // ctx.num_shards
+    _, _, ps, Hkv, _ = kv_pages.shape
+    if scale_pages is None:
+        scale_pages = jnp.zeros((2, P_total, ps, Hkv), jnp.float32)
+
+    def body(q, pos, kv, sc, phys):
+        first = _shard_index(ctx) * P_local
+        lphys = global_to_local_pages(phys, first, P_local)
+        o, m, l = _fc.flash_chunk_prefill(
+            q, pos, kv[0], kv[1], sc[0], sc[1], lphys,
+            opt_kv=opt_kv, opt_gqa=opt_gqa, window=window,
+            sink_pages=sink_pages, return_state=True, interpret=interpret)
+        return _lse_merge(ctx, o, m, l, q.dtype)
+
+    return shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(P(), P(), _pages_spec(5, 1, ctx), _pages_spec(4, 1, ctx),
+                  P()),
+        out_specs=P(), check_rep=False,
+    )(q, positions.astype(jnp.int32), kv_pages, scale_pages,
+      phys_table.astype(jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("ctx", "sm_scale", "opt_kv", "window",
+                                   "sink_pages", "interpret"))
+def paged_latent_decode(ctx: ShardCtx, q_lat, q_rope, lat_pages, scale_pages,
+                        cache_len, phys_table, log_table, *, sm_scale: float,
+                        opt_kv: bool, window: int = 0, sink_pages: int = 0,
+                        interpret: bool = True):
+    """Distributed ``paged_latent_decode``: latent pool (P_total, ps, R+dr)
+    pages-sharded; absorbed queries replicated; returns o_lat (B, H, R) f32."""
+    P_total, ps, _ = lat_pages.shape
+    P_local = P_total // ctx.num_shards
+    if scale_pages is None:
+        scale_pages = jnp.zeros((P_total, ps, 2), jnp.float32)
+
+    def body(ql, qr, lat, sc, cl, phys, log):
+        first = _shard_index(ctx) * P_local
+        lphys = global_to_local_pages(phys, first, P_local)
+        o, m, l = _ld.paged_latent_decode(
+            ql, qr, lat, sc, cl, lphys, log, sm_scale=sm_scale,
+            opt_kv=opt_kv, window=window, sink_pages=sink_pages,
+            return_state=True, interpret=interpret)
+        return _lse_merge(ctx, o, m, l, jnp.float32)
+
+    return shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(P(), P(), _pages_spec(3, 0, ctx), _pages_spec(3, 0, ctx),
+                  P(), P(), P()),
+        out_specs=P(), check_rep=False,
+    )(q_lat, q_rope, lat_pages, scale_pages, cache_len.astype(jnp.int32),
+      phys_table.astype(jnp.int32), log_table.astype(jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("ctx", "sm_scale", "opt_kv", "window",
+                                   "sink_pages", "interpret"))
+def latent_chunk_prefill(ctx: ShardCtx, q_lat, q_rope, positions, lat_pages,
+                         scale_pages, phys_table, *, sm_scale: float,
+                         opt_kv: bool, window: int = 0, sink_pages: int = 0,
+                         interpret: bool = True):
+    """Distributed ``latent_chunk_prefill``: chunk of absorbed queries
+    (B, S, H, R) replicated, latent pool pages-sharded; returns o_lat
+    (B, S, H, R) f32."""
+    P_total, ps, _ = lat_pages.shape
+    P_local = P_total // ctx.num_shards
+    if scale_pages is None:
+        scale_pages = jnp.zeros((P_total, ps, 2), jnp.float32)
+
+    def body(ql, qr, pos, lat, sc, phys):
+        first = _shard_index(ctx) * P_local
+        lphys = global_to_local_pages(phys, first, P_local)
+        o, m, l = _lc.latent_chunk_prefill(
+            ql, qr, pos, lat, sc, lphys, sm_scale=sm_scale, opt_kv=opt_kv,
+            window=window, sink_pages=sink_pages, return_state=True,
+            interpret=interpret)
+        return _lse_merge(ctx, o, m, l, jnp.float32)
+
+    return shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(P(), P(), P(), _pages_spec(3, 0, ctx),
+                  _pages_spec(3, 0, ctx), P()),
+        out_specs=P(), check_rep=False,
+    )(q_lat, q_rope, positions.astype(jnp.int32), lat_pages, scale_pages,
+      phys_table.astype(jnp.int32))
+
+
+# ------------------------------------------------------------ write path --
+@partial(jax.jit, static_argnames=("ctx", "opt_kv"))
+def kv_pool_write(ctx: ShardCtx, kv_cache, scale_cache, k_new, v_new,
+                  slot_idx, *, opt_kv: bool):
+    """Shard-local write into the pages-sharded KV pool: quantization runs
+    replicated on the (small) new tokens, then each shard scatters only the
+    slots inside its own page range (others mapped one PAST the shard's
+    range by ``global_to_local_slots`` and OOB-dropped — never -1, which
+    would wrap onto the shard's live last line). No cross-shard traffic, no
+    sentinel line needed — live lines match ``opt_kv.write_kv``'s jnp
+    scatter exactly. Returns updated (kv_cache, scale_cache)."""
+    _, Pt, ps, H, D = kv_cache.shape
+    P_local = Pt // ctx.num_shards
+    new = jnp.stack([k_new, v_new])                      # (2,B,S,H,D)
+    if opt_kv:
+        vals, scl = quantize_fp8(new, axis=-1)
+    else:
+        vals, scl = new, jnp.zeros(new.shape[:-1], jnp.float32)
+    has_scale = scale_cache is not None
+    if not has_scale:
+        scale_cache = jnp.zeros((2, Pt, ps, H), jnp.float32)
+
+    def body(kv, sc, vals, scl, slots):
+        first = _shard_index(ctx) * (P_local * ps)
+        ls = global_to_local_slots(slots, first, P_local * ps)
+        flat = kv.reshape(2, P_local * ps, H, D)
+        flat = flat.at[:, ls].set(vals.astype(flat.dtype), mode="drop")
+        sflat = sc.reshape(2, P_local * ps, H)
+        sflat = sflat.at[:, ls].set(scl, mode="drop")
+        return (flat.reshape(2, P_local, ps, H, D),
+                sflat.reshape(2, P_local, ps, H))
+
+    kv, sc = shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(_pages_spec(5, 1, ctx), _pages_spec(4, 1, ctx),
+                  P(), P(), P()),
+        out_specs=(_pages_spec(5, 1, ctx), _pages_spec(4, 1, ctx)),
+        check_rep=False,
+    )(kv_cache, scale_cache, vals, scl, slot_idx.astype(jnp.int32))
+    return kv, (sc if has_scale else None)
+
+
+@partial(jax.jit, static_argnames=("ctx", "opt_kv", "lora_rank"))
+def latent_pool_write(ctx: ShardCtx, lat_cache, scale_cache, latent,
+                      slot_idx, *, opt_kv: bool, lora_rank: int):
+    """Shard-local write into the pages-sharded MLA latent pool (dual-scale
+    quantization replicated, scatter shard-local). lat_cache (P, ps, R+dr);
+    latent (B, S, R+dr). Returns updated (lat_cache, scale_cache)."""
+    Pt, ps, W = lat_cache.shape
+    P_local = Pt // ctx.num_shards
+    if opt_kv:
+        vals, scl = quantize_latent(latent, lora_rank)
+    else:
+        vals, scl = latent, jnp.zeros(latent.shape[:-1] + (2,), jnp.float32)
+    has_scale = scale_cache is not None
+    if not has_scale:
+        scale_cache = jnp.zeros((Pt, ps, 2), jnp.float32)
+
+    def body(lat, sc, vals, scl, slots):
+        first = _shard_index(ctx) * (P_local * ps)
+        ls = global_to_local_slots(slots, first, P_local * ps)
+        flat = lat.reshape(P_local * ps, W)
+        flat = flat.at[ls].set(vals.astype(flat.dtype), mode="drop")
+        sflat = sc.reshape(P_local * ps, 2)
+        sflat = sflat.at[ls].set(scl, mode="drop")
+        return flat.reshape(P_local, ps, W), sflat.reshape(P_local, ps, 2)
+
+    lat, sc = shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(_pages_spec(3, 0, ctx), _pages_spec(3, 0, ctx), P(), P(),
+                  P()),
+        out_specs=(_pages_spec(3, 0, ctx), _pages_spec(3, 0, ctx)),
+        check_rep=False,
+    )(lat_cache, scale_cache, vals, scl, slot_idx.astype(jnp.int32))
+    return lat, (sc if has_scale else None)

@@ -30,7 +30,7 @@ def make_host_mesh():
 def make_sim_mesh(data: int = 4, model: int = 2, pod: int = 1):
     """Simulated small mesh for CPU verification of the sharded KV pool
     (needs ``XLA_FLAGS=--xla_force_host_platform_device_count>=pod*data*model``
-    set before the first jax import — see the tier1-mesh8 CI job)."""
+    set before the first jax import — see the CI mesh-matrix job)."""
     if pod > 1:
         return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
@@ -38,11 +38,14 @@ def make_sim_mesh(data: int = 4, model: int = 2, pod: int = 1):
 
 def kv_shard_count(mesh) -> int:
     """Number of KV-pool page-range shards a mesh implies: the product of
-    the mesh axes the cache ``pages`` axis is sharded over (CACHE_RULES:
-    pages -> (pod, data)). Feed this to ``EngineConfig.num_shards`` so the
-    host allocator's page ranges coincide with device shard boundaries."""
-    return math.prod(mesh.shape[a] for a in ("pod", "data")
-                     if a in mesh.shape)
+    the mesh axes the cache ``pages`` axis is sharded over
+    (``core.opt_kv.PAGES_AXES``, the same partition CACHE_RULES and the
+    ``kernels.sharded`` shard_map layer use). Feed this to
+    ``EngineConfig.num_shards`` so the host allocator's page ranges coincide
+    with device shard boundaries — ``serving.Engine`` derives/checks this
+    itself when handed a mesh."""
+    from repro.core.opt_kv import PAGES_AXES
+    return math.prod(mesh.shape[a] for a in PAGES_AXES if a in mesh.shape)
 
 
 # TPU v5e hardware constants (per chip) — roofline denominators.

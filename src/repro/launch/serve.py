@@ -24,7 +24,11 @@ def serve_workload(arch: str, mode: str, *, requests: int = 16,
                    num_lanes: int = 4, max_len: int = 512,
                    max_new_tokens: int = 24, scale: float = 0.15,
                    seed: int = 0, use_kernel: bool = False,
-                   temperature: float = 0.0, num_shards: int = 1):
+                   temperature: float = 0.0, num_shards: int = 1,
+                   mesh=None):
+    """``mesh``: optional jax Mesh — the engine derives/validates the KV
+    shard count from its pages axes, places the cache, and (with
+    ``use_kernel``) runs the pooled kernels through the shard_map layer."""
     # Pallas kernels run compiled on TPU, interpret-mode elsewhere
     from repro.kernels import ops
     ops.configure_for_backend()
@@ -35,7 +39,7 @@ def serve_workload(arch: str, mode: str, *, requests: int = 16,
         prefill_buckets=(32, 64, 128, 256, max_len),
         sampling=SamplingParams(temperature=temperature), seed=seed,
         num_shards=num_shards)
-    engine = Engine(cfg, coopt, ecfg)
+    engine = Engine(cfg, coopt, ecfg, mesh=mesh)
     stream = RequestStream(cfg.vocab_size, seed=seed, scale=scale)
     reqs = stream.take(requests, max_new_tokens=max_new_tokens)
     for r in reqs:
@@ -84,15 +88,25 @@ def main(argv=None):
     ap.add_argument("--shards", type=int, default=1,
                     help="KV-pool page-range shards (= mesh pod*data "
                          "extent; see launch.mesh.kv_shard_count)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="serve on a simulated (data=--shards, model=1) "
+                         "mesh — device cache pages-sharded, kernels via "
+                         "the shard_map layer when --use-kernel (needs "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count"
+                         ">=shards)")
     args = ap.parse_args(argv)
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_sim_mesh
+        mesh = make_sim_mesh(data=args.shards, model=1)
     arch = args.arch + ("-reduced" if args.reduced else "")
     out = serve_workload(arch, args.mode, requests=args.requests,
                          num_lanes=args.lanes, max_len=args.max_len,
                          max_new_tokens=args.max_new_tokens,
                          use_kernel=args.use_kernel,
                          temperature=args.temperature,
-                         num_shards=args.shards)
+                         num_shards=args.shards, mesh=mesh)
     print(json.dumps(out, indent=2))
 
 

@@ -48,6 +48,12 @@ WEIGHT_RULES = {"d_in": "data", "d_out": "model", "vocab": "data",
 CACHE_RULES = {"batch": ("pod", "data"), "pages": ("pod", "data"),
                "kv_heads": "model", "head_dim": "model", "heads": "model",
                "latent": "model", "d_model": "model", "layers": None}
+# kernel (shard_map) hot path: the pool leaves are partitioned ONLY along
+# the pages axes — each shard streams its own page range through the
+# unchanged Pallas kernels (kernels.sharded); heads/latent stay replicated
+# on the pool (weights/activations keep their model parallelism), so no
+# KV/latent bytes ever cross the interconnect.
+KERNEL_CACHE_RULES = {"batch": ("pod", "data"), "pages": ("pod", "data")}
 ACT_RULES_SEQ = {"batch": ("pod", "data"), "seq": "model", "ffn": "model",
                  "experts": None}
 ACT_RULES_DECODE = {"batch": ("pod", "data"), "ffn": "model",
@@ -80,8 +86,8 @@ def axes_pspec(shape: Tuple[int, ...], axes, mesh: Mesh, rules) -> PS:
 
 
 def cache_shardings(model, batch: int, max_len: int, coopt: CoOptConfig,
-                    mesh: Mesh, rules=CACHE_RULES):
-    shapes = model.cache_shape(batch, max_len, coopt)
+                    mesh: Mesh, rules=CACHE_RULES, num_shards: int = 1):
+    shapes = model.cache_shape(batch, max_len, coopt, num_shards=num_shards)
     return ({k: jax.ShapeDtypeStruct(sh, dt)
              for k, (sh, dt, _) in shapes.items()},
             {k: NamedSharding(mesh, axes_pspec(sh, ax, mesh, rules))
@@ -168,10 +174,13 @@ def default_microbatches(cfg: ModelConfig) -> int:
 def make_step(arch_id: str, shape_name: str, mesh: Mesh,
               coopt: CoOptConfig = COOPT, *, lr: float = 3e-4,
               num_microbatches: Optional[int] = None) -> StepBundle:
+    kctx = None
     if coopt.use_kernel:
-        # Pallas kernels run compiled on TPU, interpret-mode elsewhere
+        # Pallas kernels run compiled on TPU, interpret-mode elsewhere;
+        # a mesh with sharded pages axes gets the shard_map kernel layer
         from repro.kernels import ops
         ops.configure_for_backend()
+        kctx = ops.make_mesh_ctx(mesh)
     cfg = get_config(arch_id)
     shape = get_shape(shape_name)
     cfg = effective_config(cfg, shape)
@@ -207,13 +216,23 @@ def make_step(arch_id: str, shape_name: str, mesh: Mesh,
             (params_sh, opt_sh, batch_sh), (params_sh, opt_sh, None),
             cfg, shape, coopt)
 
+    # kernel path: pool pages axis padded to tile the mesh's KV shards and
+    # partitioned ONLY along the pages axes (the shard_map layer's layout)
+    if coopt.use_kernel:
+        from repro.launch.mesh import kv_shard_count
+        crules, ns = KERNEL_CACHE_RULES, kv_shard_count(mesh)
+    else:
+        crules, ns = CACHE_RULES, 1
     cache_abs, cache_sh = cache_shardings(
-        model, shape.global_batch, shape.seq_len, coopt, mesh)
+        model, shape.global_batch, shape.seq_len, coopt, mesh, rules=crules,
+        num_shards=ns)
 
     if shape.kind == "prefill":
 
         def prefill_step(params, batch, cache):
-            with activation_sharding(mesh, act_rules):
+            from repro.kernels import ops
+            with ops.mesh_ctx_scope(kctx), \
+                    activation_sharding(mesh, act_rules):
                 return model.prefill(params, batch, cache, coopt)
 
         return StepBundle(
@@ -223,7 +242,9 @@ def make_step(arch_id: str, shape_name: str, mesh: Mesh,
 
     # decode: ONE new token against a cache of seq_len (serve_step)
     def serve_step(params, batch, cache):
-        with activation_sharding(mesh, act_rules):
+        from repro.kernels import ops
+        with ops.mesh_ctx_scope(kctx), \
+                activation_sharding(mesh, act_rules):
             return model.decode_step(params, batch, cache, coopt,
                                      long_window=lw)
 

@@ -13,10 +13,13 @@ Hot path: under ``coopt.use_kernel`` both ``mla_paged_decode`` and
 ``mla_chunk_attention`` dispatch to the fused Pallas kernels
 (``kernels.paged_latent_decode`` / ``kernels.latent_chunk_prefill``) that
 stream latent pages HBM->VMEM once for all H heads straight off the FP8
-pool — no ``jnp.take`` full-pool gather. The jnp code below is the
-numerically-equivalent PARITY REFERENCE used by tests and by the
-distributed (GSPMD) path; the ``w_uk`` absorption and ``w_uv`` expansion
-live outside the kernels in both cases, so weights never enter VMEM.
+pool — no ``jnp.take`` full-pool gather. Under a GSPMD mesh the SAME
+kernels run per shard against their owned latent page range through the
+``kernels.sharded`` shard_map layer (partial softmax states lse-merged
+across the pages axes) — there is no separate distributed hot path. The
+jnp code below is the numerically-equivalent PARITY REFERENCE used by
+tests; the ``w_uk`` absorption and ``w_uv`` expansion live outside the
+kernels in both cases, so weights never enter VMEM.
 """
 from __future__ import annotations
 

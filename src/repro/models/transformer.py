@@ -326,22 +326,12 @@ class TransformerModel:
         """Write cache entries for one layer (GLOBAL flat slots; -1 =
         SkipSet drop). MLA: new_a=(B,S,R+dr), kv_c=(P,ps,R+dr)."""
         if self.cfg.family == "mla":
-            B, S, W = new_a.shape
-            P, ps, _ = kv_c.shape
-            flat = kv_c.reshape(P * ps, W)
-            clipped = jnp.where(slots < 0, -1, slots)
-            if coopt.opt_kv:
-                from repro.cache.quant import quantize_latent
-                qv, s = quantize_latent(new_a, self.cfg.kv_lora_rank)
-                flat = flat.at[clipped].set(qv.astype(flat.dtype),
-                                            mode="drop")
-                sf = sc_c.reshape(P * ps, 2)
-                sf = sf.at[clipped].set(s, mode="drop")       # (B,S,2)
-                sc_c = sf.reshape(P, ps, 2)
-            else:
-                flat = flat.at[clipped].set(new_a.astype(flat.dtype),
-                                            mode="drop")
-            return flat.reshape(P, ps, W), sc_c
+            # ops dispatch: shard-local scatter under a mesh ctx, the
+            # identical jnp scatter otherwise (ONE write implementation)
+            from repro.kernels import ops
+            return ops.latent_pool_write(
+                kv_c, sc_c, new_a, slots, opt_kv=coopt.opt_kv,
+                lora_rank=self.cfg.kv_lora_rank)
         return write_kv(kv_c, sc_c, new_a, new_b, slots, coopt)
 
     def _scan_with_cache(self, params, cache, h, new_len, coopt, step_fn):

@@ -43,6 +43,7 @@ crashing; impossible requests are REJECTED and surfaced.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
@@ -154,9 +155,32 @@ class EngineStats:
 class Engine:
     def __init__(self, model_cfg: ModelConfig, coopt: CoOptConfig = COOPT,
                  engine_cfg: EngineConfig = EngineConfig(),
-                 params=None):
+                 params=None, mesh=None):
+        """``mesh``: optional ``jax.sharding.Mesh``. When given, the KV-pool
+        shard count is DERIVED from the mesh's pages axes
+        (``launch.mesh.kv_shard_count``) — a default ``num_shards=1`` config
+        is upgraded to match, and a conflicting explicit value raises (the
+        host page ranges and the device pages-axis partition must coincide).
+        The cache leaves are placed on the mesh, and with
+        ``coopt.use_kernel`` the pooled Pallas kernels run through the
+        ``kernels.sharded`` shard_map layer — one kernel hot path, single-
+        host and distributed."""
         self.cfg = model_cfg
         self.coopt = coopt
+        if mesh is not None:
+            from repro.launch.mesh import kv_shard_count
+            ns = kv_shard_count(mesh)
+            if engine_cfg.num_shards == 1:
+                # config built before the mesh: derive the shard count
+                engine_cfg = dataclasses.replace(engine_cfg, num_shards=ns)
+            elif engine_cfg.num_shards != ns:
+                raise ValueError(
+                    f"EngineConfig.num_shards={engine_cfg.num_shards} "
+                    f"disagrees with the mesh's KV shard count {ns} "
+                    f"(pages axes {tuple(mesh.shape)}); build the config "
+                    "from launch.mesh.kv_shard_count(mesh) or leave it at "
+                    "the default to derive it")
+        self.mesh = mesh
         self.ecfg = engine_cfg
         self.model = get_model(model_cfg)
         if params is None:
@@ -169,6 +193,13 @@ class Engine:
         # KV shards (host page ids == device page ids, see opt_kv helpers)
         self.cache = self.model.init_cache(B, M, coopt,
                                            num_shards=engine_cfg.num_shards)
+        # pages-axis shard_map dispatch for the pooled kernels (None for no
+        # mesh / an unsharded mesh: identical single-host code path)
+        from repro.kernels import ops
+        self._kernel_ctx = (ops.make_mesh_ctx(mesh)
+                            if coopt.use_kernel else None)
+        if mesh is not None:
+            self.cache = self._place_cache(self.cache, mesh)
         self._patch_offset = (model_cfg.num_patches
                               if model_cfg.family == "vlm" else 0)
         # recurrent-state families: chunk boundaries land on page boundaries
@@ -203,6 +234,25 @@ class Engine:
         self._prefill_fn = jax.jit(self._prefill_impl)
         self._decode_fn = jax.jit(self._decode_impl)
 
+    # ------------------------------------------------------- mesh placement --
+    def _place_cache(self, cache, mesh):
+        """Shard the device cache leaves onto the mesh: the kernel path
+        partitions the pool ONLY along its pages axes (the shard_map
+        layer's layout — heads/latent replicated); the jnp reference path
+        uses the full CACHE_RULES (GSPMD handles the rest)."""
+        from jax.sharding import NamedSharding
+        from repro.launch.steps import (CACHE_RULES, KERNEL_CACHE_RULES,
+                                        axes_pspec)
+        rules = (KERNEL_CACHE_RULES if self.coopt.use_kernel
+                 else CACHE_RULES)
+        shapes = self.model.cache_shape(self.ecfg.num_lanes,
+                                        self.ecfg.max_len, self.coopt,
+                                        num_shards=self.ecfg.num_shards)
+        return {k: jax.device_put(
+                    leaf, NamedSharding(mesh, axes_pspec(
+                        shapes[k][0], shapes[k][2], mesh, rules)))
+                for k, leaf in cache.items()}
+
     # ---------------------------------------------------------- jit bodies --
     def _mask_lanes(self, new_cache, old_cache, lane_mask):
         out = {}
@@ -217,16 +267,20 @@ class Engine:
         return out
 
     def _prefill_impl(self, params, batch, cache, lane_mask):
-        logits, new_cache = self.model.prefill(
-            params, batch, cache, self.coopt,
-            long_window=self.ecfg.long_window)
-        return logits, self._mask_lanes(new_cache, cache, lane_mask)
+        from repro.kernels import ops
+        with ops.mesh_ctx_scope(self._kernel_ctx):   # trace-scoped
+            logits, new_cache = self.model.prefill(
+                params, batch, cache, self.coopt,
+                long_window=self.ecfg.long_window)
+            return logits, self._mask_lanes(new_cache, cache, lane_mask)
 
     def _decode_impl(self, params, batch, cache, lane_mask):
-        logits, new_cache = self.model.decode_step(
-            params, batch, cache, self.coopt,
-            long_window=self.ecfg.long_window)
-        return logits, self._mask_lanes(new_cache, cache, lane_mask)
+        from repro.kernels import ops
+        with ops.mesh_ctx_scope(self._kernel_ctx):   # trace-scoped
+            logits, new_cache = self.model.decode_step(
+                params, batch, cache, self.coopt,
+                long_window=self.ecfg.long_window)
+            return logits, self._mask_lanes(new_cache, cache, lane_mask)
 
     # -------------------------------------------------------------- common --
     def _sample(self, logits) -> np.ndarray:

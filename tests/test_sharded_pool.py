@@ -5,7 +5,7 @@ and bit-identical greedy serving vs the single-shard pool.
 The BlockManager partition is pure host-side Python, so most tests run on a
 single device; the mesh-gated test at the bottom exercises a real
 (data=4, model=2) simulated mesh when the process was started with
-``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the tier1-mesh8 CI
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI mesh-matrix
 job).
 """
 import jax
@@ -199,15 +199,15 @@ def test_request_larger_than_shard_rejected():
 # ------------------------------------------------------------ mesh-gated --
 @pytest.mark.skipif(len(jax.devices()) < 8,
                     reason="needs XLA_FLAGS=--xla_force_host_platform_"
-                           "device_count=8 (tier1-mesh8 CI job)")
+                           "device_count=8 (CI mesh-matrix job)")
 def test_sharded_pool_on_simulated_mesh_bit_identical():
-    """On a real (data=4, model=2) simulated mesh: shard the device cache
-    leaves along the pages axis, run the engine with the matching host
-    page-range partition, and require bit-identical greedy outputs vs the
-    unsharded single-device engine."""
-    from jax.sharding import NamedSharding
+    """On a real (data=4, model=2) simulated mesh: the engine (handed the
+    mesh directly) derives the matching host page-range partition, places
+    the device cache pages-sharded, and serves bit-identical greedy outputs
+    vs the unsharded single-device engine — here on the jnp (GSPMD)
+    reference path; the kernel path's analogue lives in
+    tests/test_sharded_kernels.py."""
     from repro.launch.mesh import kv_shard_count, make_sim_mesh
-    from repro.launch.steps import CACHE_RULES, axes_pspec
 
     mesh = make_sim_mesh(data=4, model=2)
     ns = kv_shard_count(mesh)
@@ -221,15 +221,8 @@ def test_sharded_pool_on_simulated_mesh_bit_identical():
     ref = Engine(CFG, MODES["coopt"], ecfg)
     out_ref = ref.generate(prompts, max_new_tokens=5)
 
-    eng = Engine(CFG, MODES["coopt"],
-                 EngineConfig(**{**ecfg.__dict__, "num_shards": ns}))
-    shapes = eng.model.cache_shape(ecfg.num_lanes, ecfg.max_len,
-                                   eng.coopt, num_shards=ns)
-    eng.cache = {
-        k: jax.device_put(
-            leaf, NamedSharding(mesh, axes_pspec(shapes[k][0], shapes[k][2],
-                                                 mesh, CACHE_RULES)))
-        for k, leaf in eng.cache.items()}
+    eng = Engine(CFG, MODES["coopt"], ecfg, mesh=mesh)  # shards derived
+    assert eng.ecfg.num_shards == ns
     out_mesh = eng.generate(prompts, max_new_tokens=5)
     assert out_ref == out_mesh
     assert eng.stats.num_shards == ns

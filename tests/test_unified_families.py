@@ -262,19 +262,20 @@ def test_mla_engine_use_kernel_windowed_greedy_identical():
 
 @pytest.mark.skipif(len(__import__("jax").devices()) < 8,
                     reason="needs XLA_FLAGS=--xla_force_host_platform_"
-                           "device_count=8 (tier1-mesh8 CI job)")
+                           "device_count=8 (CI mesh-matrix job)")
 def test_mla_kernel_engine_on_simulated_mesh():
-    """mesh8 variant of the mla use_kernel engine run: under the 8-device
-    environment, serving with the mesh-implied HOST page-range sharding
-    (shard-affine placement => physically scattered, per-shard-range page
-    tables feeding the latent kernels) stays greedy-identical to the
-    single-shard jnp reference. The DEVICE cache stays unsharded — the
-    Pallas kernels are the single-host engine hot path; the GSPMD
-    distributed path keeps the jnp reference (see CoOptConfig.use_kernel)."""
+    """mesh8 variant of the mla use_kernel engine run: the engine places
+    the latent pool PAGES-SHARDED on a real (data=4, model=2) mesh and the
+    fused latent kernels run per shard through the ``kernels.sharded``
+    shard_map layer (global tables translated to per-shard holes, partial
+    softmax states lse-merged) — one kernel hot path, single-host and
+    distributed — staying greedy-identical to the meshless single-shard
+    jnp reference."""
     from repro.launch.mesh import kv_shard_count, make_sim_mesh
 
     cfg = _cfg("deepseek-v2-lite-16b")
-    ns = kv_shard_count(make_sim_mesh(data=4, model=2))
+    mesh = make_sim_mesh(data=4, model=2)
+    ns = kv_shard_count(mesh)
     assert ns == 4
     prompts = [_prompt(cfg, 70, seed=24), _prompt(cfg, 30, seed=25)]
     ecfg = EngineConfig(num_lanes=2, max_len=256,
@@ -283,8 +284,9 @@ def test_mla_kernel_engine_on_simulated_mesh():
     ref = Engine(cfg, MODES["coopt"], ecfg)
     out_ref = ref.generate(prompts, max_new_tokens=5)
 
-    eng = Engine(cfg, MODES["coopt"].replace(use_kernel=True),
-                 EngineConfig(**{**ecfg.__dict__, "num_shards": ns}))
+    eng = Engine(cfg, MODES["coopt"].replace(use_kernel=True), ecfg,
+                 mesh=mesh)                   # num_shards derived = 4
+    assert eng._kernel_ctx is not None
     out_mesh = eng.generate(prompts, max_new_tokens=5)
     assert out_ref == out_mesh
     assert eng.stats.num_shards == ns
