@@ -13,7 +13,7 @@ import os
 import time
 import traceback
 
-ALL = ("fig6", "fig7", "table12", "kernel", "mla", "roofline")
+ALL = ("fig6", "fig7", "table12", "kernel", "mla", "serving", "roofline")
 
 
 def main(argv=None):
@@ -47,6 +47,9 @@ def main(argv=None):
                 run(quick=args.quick)
             elif name == "mla":
                 from benchmarks.bench_mla import run
+                run(quick=args.quick)
+            elif name == "serving":
+                from benchmarks.bench_serving import run
                 run(quick=args.quick)
             elif name == "roofline":
                 from benchmarks.roofline import run, DRYRUN_FILE

@@ -131,7 +131,8 @@ def paged_decode_attention(q, kv_pages, scale_pages, cache_len, *,
 # ------------------------------------------------ continuation prefill ----
 def paged_chunk_attention(q, kv_pages, scale_pages, positions, page_table,
                           coopt: CoOptConfig, *, window: int = 0,
-                          sink_pages: int = 1) -> jax.Array:
+                          sink_pages: int = 1, seg_q=None, page_seg=None,
+                          page_base=None) -> jax.Array:
     """Chunked-continuation prefill attention (the ONE ragged step path):
     a chunk of queries per lane — q (B,S,Hq,D) with absolute ``positions``
     (B,S) — attends over the lane's WHOLE cached history (prefix-cache hits,
@@ -142,6 +143,12 @@ def paged_chunk_attention(q, kv_pages, scale_pages, positions, page_table,
     ``window`` > 0 applies the block-sparse {sliding window + sink} policy
     (griffin local attention, long-context decode) with the same mask as the
     decode path, so a token's logits are schedule-independent.
+
+    Concat-prefill packing: ``seg_q`` (B,S), ``page_seg`` (B,NP) and
+    ``page_base`` (B,NP) pack several prompts' chunks into one row — a
+    query attends a key only when their segment ids match, and key
+    positions restart per segment at ``page_base * ps``. None = unpacked
+    (byte-identical to the pre-packing math).
     Returns (B, S, Hq, D) in q.dtype."""
     B, S, Hq, D = q.shape
     _, P_total, ps, Hkv, _ = kv_pages.shape
@@ -153,7 +160,8 @@ def paged_chunk_attention(q, kv_pages, scale_pages, positions, page_table,
         return ops.paged_chunk_prefill(
             q, positions, kv_pages, scale_pages, page_table,
             opt_kv=coopt.opt_kv, opt_gqa=coopt.opt_gqa, window=window,
-            sink_pages=sink_pages)
+            sink_pages=sink_pages, seg_q=seg_q, page_seg=page_seg,
+            page_base=page_base)
 
     # jnp reference: gather the lane's pages in logical order, then a
     # position-masked softmax over the gathered view.
@@ -169,10 +177,19 @@ def paged_chunk_attention(q, kv_pages, scale_pages, positions, page_table,
     qg = q.reshape(B, S, Hg, G, D).astype(jnp.float32)
     s = jnp.einsum("bshgd,bthd->bhgst", qg, k.astype(jnp.float32))
     s = s * (1.0 / math.sqrt(D))
-    kpos = jnp.arange(T, dtype=jnp.int32)[None, None, :]
+    if page_base is not None:
+        # packed: key j's position restarts per segment at page_base*ps
+        kpos = (page_base.astype(jnp.int32)[:, :, None] * ps
+                + jnp.arange(ps, dtype=jnp.int32)[None, None, :]
+                ).reshape(B, T)[:, None, :]
+    else:
+        kpos = jnp.arange(T, dtype=jnp.int32)[None, None, :]
     qpos = positions[:, :, None]
     mask = (kpos <= qpos) & \
         jnp.repeat(page_table >= 0, ps, axis=1)[:, None, :]
+    if seg_q is not None:
+        mask &= (jnp.repeat(page_seg.astype(jnp.int32), ps, axis=1)[:, None]
+                 == seg_q.astype(jnp.int32)[:, :, None])
     if window:
         mask &= (kpos > qpos - window) | (kpos < sink_pages * ps)
     s = jnp.where(mask[:, None, None], s, _NEG)

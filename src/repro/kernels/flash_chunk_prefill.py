@@ -23,6 +23,17 @@ Page skipping: table entries of -1 (unallocated, or masked beyond the lane's
 DMA'd (index_map redirects to page 0) nor computed. Pages entirely in the
 future of the query tile are skipped by the same predicate using the tile's
 maximum position.
+
+Concat-prefill packing: a row may hold SEVERAL prompts' chunks (segments).
+The scalar-prefetch table then carries three planes per (row, slot) —
+physical page, in-segment logical page index, and segment id — and each
+query row carries its segment id alongside its position. Key positions are
+computed from the in-segment page index (``base * ps + iota``) and the mask
+additionally requires segment equality, so attention can NEVER leak across
+packed prompts: a cross-segment page contributes exactly zero (its
+probabilities are hard-zeroed, not just exp(-inf), so the online-softmax
+state is bit-identical to the unpacked run). Defaults (no packing) reduce
+to the exact previous math: base == slot index, one segment per row.
 """
 from __future__ import annotations
 
@@ -49,9 +60,11 @@ def _chunk_kernel(phys_ref,                          # scalar prefetch
     else:
         m_ref, l_ref, acc_ref = refs
     b = pl.program_id(0)
-    j = pl.program_id(3)                             # logical page id
+    j = pl.program_id(3)                             # page-table slot
     bq, D = q_ref.shape[2], q_ref.shape[3]
-    page = phys_ref[b, j]
+    page = phys_ref[0, b, j]                         # physical page to DMA
+    base = phys_ref[1, b, j]                         # in-segment logical page
+    pseg = phys_ref[2, b, j]                         # page's segment id
 
     @pl.when(j == 0)
     def _init():
@@ -60,10 +73,11 @@ def _chunk_kernel(phys_ref,                          # scalar prefetch
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     qpos = pos_ref[0, 0].astype(jnp.int32)           # (bq,) per-row position
+    qseg = pos_ref[0, 1].astype(jnp.int32)           # (bq,) per-row segment
     # causal page skip: the page is dead if its first key position is beyond
     # every query in the tile (positions are non-decreasing per lane only
     # within a chunk, so use the tile max)
-    live = jnp.logical_and(page >= 0, j * ps <= jnp.max(qpos))
+    live = jnp.logical_and(page >= 0, base * ps <= jnp.max(qpos))
 
     @pl.when(live)
     def _compute():
@@ -79,16 +93,19 @@ def _chunk_kernel(phys_ref,                          # scalar prefetch
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         s = s * (1.0 / math.sqrt(D))                 # (bq, ps)
-        kpos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (bq, ps), 1)
+        kpos = base * ps + jax.lax.broadcasted_iota(jnp.int32, (bq, ps), 1)
         qp = jnp.broadcast_to(qpos[:, None], (bq, ps))
-        mask = kpos <= qp
+        mask = (kpos <= qp) & (qseg[:, None] == pseg)
         if window:
             mask &= (kpos > qp - window) | (kpos < sink * ps)
         s = jnp.where(mask, s, _NEG)
         m_prev = m_ref[:, 0:1]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
         corr = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new)
+        # hard-zero masked probabilities: a row whose keys are ALL masked on
+        # this page (cross-segment page, pad row) must contribute nothing —
+        # exp(s - m_new) alone would yield 1.0 while m_new is still _NEG
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
         l_new = l_ref[:, 0:1] * corr + jnp.sum(p, -1, keepdims=True)
         acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
@@ -110,17 +127,32 @@ def flash_chunk_prefill(q, positions, k_pages, v_pages, k_scale, v_scale,
                         phys_table, *, opt_kv: bool, opt_gqa: bool = True,
                         window: int = 0, sink_pages: int = 0,
                         block_q: int = 256, return_state: bool = False,
-                        interpret: bool = True):
+                        interpret: bool = True, seg_q=None, page_seg=None,
+                        page_base=None):
     """q: (B, S, Hq, D) chunk queries; positions: (B, S) absolute per-row
     positions; k/v_pages: (P_total, ps, Hkv, D) GLOBAL pool [fp8 if opt_kv];
     k/v_scale: (P_total, ps, Hkv) f32 or None; phys_table: (B, NP) int32
     physical pages in logical order (-1 = skip, never DMA'd). The chunk's
     own K/V must already be written to the pool. Returns (B, S, Hq, D); with
     ``return_state`` also the final online-softmax (m, l) as (B, S, Hq) f32
-    for the cross-shard log-sum-exp merge (``kernels.sharded``)."""
+    for the cross-shard log-sum-exp merge (``kernels.sharded``).
+
+    Concat-prefill packing (all three or none): ``seg_q`` (B, S) int32 is
+    each query row's segment id (-1 = pad row, matches nothing);
+    ``page_seg`` (B, NP) the segment each table slot belongs to; and
+    ``page_base`` (B, NP) the slot's logical page index WITHIN its segment
+    (key positions are ``page_base * ps + iota``). Defaults reproduce the
+    unpacked layout exactly: one segment 0 per row, base == slot index."""
     B, S, Hq, D = q.shape
     P, ps, Hkv, _ = k_pages.shape
     NP = phys_table.shape[1]
+    if seg_q is None:
+        seg_q = jnp.zeros((B, S), jnp.int32)
+    if page_seg is None:
+        page_seg = jnp.zeros((B, NP), jnp.int32)
+    if page_base is None:
+        page_base = jnp.broadcast_to(jnp.arange(NP, dtype=jnp.int32),
+                                     (B, NP))
     if opt_gqa:
         G = Hq // Hkv
         heads, kv_of_head = Hkv, lambda h: h
@@ -140,17 +172,22 @@ def flash_chunk_prefill(q, positions, k_pages, v_pages, k_scale, v_scale,
     qf = q.reshape(B, S, heads, G, D).transpose(0, 2, 1, 3, 4) \
           .reshape(B, heads, R, D)
     pos_rep = jnp.repeat(positions.astype(jnp.int32), G, axis=1)  # (B, R)
-    pos_rep = pos_rep.reshape(B, 1, R)
+    seg_rep = jnp.repeat(seg_q.astype(jnp.int32), G, axis=1)      # (B, R)
+    pos_rep = jnp.stack([pos_rep, seg_rep], axis=1)               # (B, 2, R)
+    # scalar-prefetch planes: [physical page, in-segment base, segment id]
+    table3 = jnp.stack([phys_table.astype(jnp.int32),
+                        page_base.astype(jnp.int32),
+                        page_seg.astype(jnp.int32)])              # (3, B, NP)
 
     if k_scale is None:
         k_scale = jnp.zeros((P, ps, Hkv), jnp.float32)
         v_scale = k_scale
 
     def kv_idx(b, h, i, j, phys):
-        return (jnp.maximum(phys[b, j], 0), 0, kv_of_head(h), 0)
+        return (jnp.maximum(phys[0, b, j], 0), 0, kv_of_head(h), 0)
 
     def sc_idx(b, h, i, j, phys):
-        return (jnp.maximum(phys[b, j], 0), 0, kv_of_head(h))
+        return (jnp.maximum(phys[0, b, j], 0), 0, kv_of_head(h))
 
     out_blk = pl.BlockSpec((1, 1, bq, D),
                            lambda b, h, i, j, phys: (b, h, i, 0))
@@ -174,7 +211,7 @@ def flash_chunk_prefill(q, positions, k_pages, v_pages, k_scale, v_scale,
             in_specs=[
                 pl.BlockSpec((1, 1, bq, D),
                              lambda b, h, i, j, phys: (b, h, i, 0)),
-                pl.BlockSpec((1, 1, bq),
+                pl.BlockSpec((1, 2, bq),
                              lambda b, h, i, j, phys: (b, 0, i)),
                 pl.BlockSpec((1, ps, 1, D), kv_idx),
                 pl.BlockSpec((1, ps, 1, D), kv_idx),
@@ -193,8 +230,7 @@ def flash_chunk_prefill(q, positions, k_pages, v_pages, k_scale, v_scale,
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(phys_table.astype(jnp.int32), qf, pos_rep, k_pages, v_pages,
-      k_scale, v_scale)
+    )(table3, qf, pos_rep, k_pages, v_pages, k_scale, v_scale)
     out = res[0].reshape(B, heads, S, G, D).transpose(0, 2, 1, 3, 4) \
                 .reshape(B, S, Hq, D)
     if not return_state:

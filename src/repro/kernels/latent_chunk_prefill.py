@@ -54,7 +54,7 @@ def _latent_chunk_kernel(phys_ref,                   # scalar prefetch
     else:
         m_ref, l_ref, acc_ref = refs
     b = pl.program_id(0)
-    j = pl.program_id(2)                             # logical page id
+    j = pl.program_id(2)                             # page-table slot
     bq = ql_ref.shape[1]
 
     @pl.when(j == 0)
@@ -63,11 +63,14 @@ def _latent_chunk_kernel(phys_ref,                   # scalar prefetch
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    page = phys_ref[b, j]
+    page = phys_ref[0, b, j]                         # physical page to DMA
+    base = phys_ref[1, b, j]                         # in-segment logical page
+    pseg = phys_ref[2, b, j]                         # page's segment id
     qpos = pos_ref[0, 0].astype(jnp.int32)           # (bq,) per-row position
+    qseg = pos_ref[0, 1].astype(jnp.int32)           # (bq,) per-row segment
     # causal page skip: the page is dead if its first key position is beyond
     # every query row in the tile
-    live = jnp.logical_and(page >= 0, j * ps <= jnp.max(qpos))
+    live = jnp.logical_and(page >= 0, base * ps <= jnp.max(qpos))
 
     @pl.when(live)
     def _compute():
@@ -87,16 +90,20 @@ def _latent_chunk_kernel(phys_ref,                   # scalar prefetch
         s += jax.lax.dot_general(qr, r, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
         s = s * sm_scale                             # (bq, ps)
-        kpos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (bq, ps), 1)
+        kpos = base * ps + jax.lax.broadcasted_iota(jnp.int32, (bq, ps), 1)
         qp = jnp.broadcast_to(qpos[:, None], (bq, ps))
-        mask = kpos <= qp
+        mask = (kpos <= qp) & (qseg[:, None] == pseg)
         if window:
             mask &= (kpos > qp - window) | (kpos < sink * ps)
         s = jnp.where(mask, s, _NEG)
         m_prev = m_ref[:, 0:1]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
         corr = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new)
+        # hard-zero masked lanes: with packing a page can be ENTIRELY masked
+        # for a row (other segment) while m is still _NEG, where exp(s-m_new)
+        # would be exp(0)=1 and corrupt (l, acc). Unpacked this is a no-op
+        # (exp(_NEG - m) underflows to exactly 0.0 in f32).
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
         l_new = l_ref[:, 0:1] * corr + jnp.sum(p, -1, keepdims=True)
         acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
             p, c, (((1,), (0,)), ((), ())),
@@ -118,7 +125,8 @@ def latent_chunk_prefill(q_lat, q_rope, positions, lat_pages, scale_pages,
                          phys_table, *, sm_scale: float, opt_kv: bool,
                          window: int = 0, sink_pages: int = 0,
                          block_q: int = 256, return_state: bool = False,
-                         interpret: bool = True):
+                         interpret: bool = True, seg_q=None, page_seg=None,
+                         page_base=None):
     """q_lat: (B, S, H, R) W_uk-absorbed chunk queries; q_rope: (B, S, H, dr);
     positions: (B, S) absolute per-row positions; lat_pages: (P_total, ps,
     R+dr) GLOBAL latent pool [fp8 if opt_kv]; scale_pages: (P_total, ps, 2)
@@ -127,7 +135,14 @@ def latent_chunk_prefill(q_lat, q_rope, positions, lat_pages, scale_pages,
     already be written to the pool. Returns o_lat (B, S, H, R) f32; the
     caller applies the ``w_uv`` expansion. With ``return_state`` also the
     final online-softmax (m, l) as (B, S, H) f32 for the cross-shard
-    log-sum-exp merge (``kernels.sharded``)."""
+    log-sum-exp merge (``kernels.sharded``).
+
+    Concat-prefill packing: ``seg_q`` (B, S) int32 per-query segment ids,
+    ``page_seg`` (B, NP) int32 per-slot segment ids, ``page_base`` (B, NP)
+    int32 per-slot IN-SEGMENT logical page index. A query attends a key only
+    when segments match; key positions come from ``page_base`` so every
+    segment restarts its position domain. Defaults (no packing) reduce to
+    the exact previous math: base == slot index, one segment everywhere."""
     B, S, H, R = q_lat.shape
     P, ps, W = lat_pages.shape
     dr = q_rope.shape[-1]
@@ -141,16 +156,27 @@ def latent_chunk_prefill(q_lat, q_rope, positions, lat_pages, scale_pages,
         bq -= H
     NQ = RW // bq
 
+    if seg_q is None:
+        seg_q = jnp.zeros((B, S), jnp.int32)
+    if page_seg is None:
+        page_seg = jnp.zeros((B, NP), jnp.int32)
+    if page_base is None:
+        page_base = jnp.broadcast_to(jnp.arange(NP, dtype=jnp.int32), (B, NP))
+
     qlf = q_lat.reshape(B, RW, R)
     qrf = q_rope.reshape(B, RW, dr)
     pos_rep = jnp.repeat(positions.astype(jnp.int32), H, axis=1)  # (B, RW)
-    pos_rep = pos_rep.reshape(B, 1, RW)
+    seg_rep = jnp.repeat(seg_q.astype(jnp.int32), H, axis=1)      # (B, RW)
+    pos_rep = jnp.stack([pos_rep, seg_rep], axis=1)               # (B, 2, RW)
+    table3 = jnp.stack([phys_table.astype(jnp.int32),
+                        page_base.astype(jnp.int32),
+                        page_seg.astype(jnp.int32)])              # (3, B, NP)
 
     if scale_pages is None:
         scale_pages = jnp.zeros((P, ps, 2), jnp.float32)
 
     def lat_idx(b, i, j, phys):
-        return (jnp.maximum(phys[b, j], 0), 0, 0)
+        return (jnp.maximum(phys[0, b, j], 0), 0, 0)
 
     out_blk = pl.BlockSpec((1, bq, R), lambda b, i, j, phys: (b, i, 0))
     st_blk = pl.BlockSpec((1, bq, 128), lambda b, i, j, phys: (b, i, 0))
@@ -172,7 +198,7 @@ def latent_chunk_prefill(q_lat, q_rope, positions, lat_pages, scale_pages,
             in_specs=[
                 pl.BlockSpec((1, bq, R), lambda b, i, j, phys: (b, i, 0)),
                 pl.BlockSpec((1, bq, dr), lambda b, i, j, phys: (b, i, 0)),
-                pl.BlockSpec((1, 1, bq), lambda b, i, j, phys: (b, 0, i)),
+                pl.BlockSpec((1, 2, bq), lambda b, i, j, phys: (b, 0, i)),
                 pl.BlockSpec((1, ps, W), lat_idx),
                 pl.BlockSpec((1, ps, 2), lat_idx),
             ],
@@ -187,8 +213,7 @@ def latent_chunk_prefill(q_lat, q_rope, positions, lat_pages, scale_pages,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(phys_table.astype(jnp.int32), qlf, qrf, pos_rep, lat_pages,
-      scale_pages)
+    )(table3, qlf, qrf, pos_rep, lat_pages, scale_pages)
     out = res[0].reshape(B, S, H, R)
     if not return_state:
         return out

@@ -222,59 +222,72 @@ def paged_latent_decode(q_lat, q_rope, lat_pages, scale_pages, cache_len,
 @partial(jax.jit, static_argnames=("sm_scale", "opt_kv", "window",
                                    "sink_pages"))
 def _latent_chunk_prefill_single(q_lat, q_rope, positions, lat_pages,
-                                 scale_pages, phys_table, *, sm_scale: float,
+                                 scale_pages, phys_table, seg_q, page_seg,
+                                 page_base, *, sm_scale: float,
                                  opt_kv: bool, window: int, sink_pages: int):
     return _lc.latent_chunk_prefill(
         q_lat, q_rope, positions.astype(jnp.int32), lat_pages, scale_pages,
         phys_table.astype(jnp.int32), sm_scale=sm_scale, opt_kv=opt_kv,
-        window=window, sink_pages=sink_pages, interpret=INTERPRET)
+        window=window, sink_pages=sink_pages, interpret=INTERPRET,
+        seg_q=seg_q, page_seg=page_seg, page_base=page_base)
 
 
 def latent_chunk_prefill(q_lat, q_rope, positions, lat_pages, scale_pages,
                          phys_table, *, sm_scale: float, opt_kv: bool,
-                         window: int = 0, sink_pages: int = 0):
+                         window: int = 0, sink_pages: int = 0, seg_q=None,
+                         page_seg=None, page_base=None):
     """MLA absorbed continuation-prefill over the global latent pool: a
     chunk of absorbed queries q_lat (B,S,H,R) / q_rope (B,S,H,dr) with
     absolute ``positions`` (B,S) attends the lane's cached latent pages
     named by the scalar-prefetched ``phys_table`` (B,NP; -1 = never DMA'd).
     The chunk's own latents must already be written. Returns o_lat
-    (B,S,H,R) f32."""
+    (B,S,H,R) f32. ``seg_q``/``page_seg``/``page_base`` enable concat-
+    prefill packing (several prompts per row, see the kernel docstring);
+    None = unpacked."""
     if _MESH_CTX is not None:
         return _sh.latent_chunk_prefill(
             _MESH_CTX, q_lat, q_rope, positions, lat_pages, scale_pages,
             phys_table, sm_scale=sm_scale, opt_kv=opt_kv, window=window,
-            sink_pages=sink_pages, interpret=INTERPRET)
+            sink_pages=sink_pages, interpret=INTERPRET, seg_q=seg_q,
+            page_seg=page_seg, page_base=page_base)
     return _latent_chunk_prefill_single(
         q_lat, q_rope, positions, lat_pages, scale_pages, phys_table,
-        sm_scale=sm_scale, opt_kv=opt_kv, window=window,
-        sink_pages=sink_pages)
+        seg_q, page_seg, page_base, sm_scale=sm_scale, opt_kv=opt_kv,
+        window=window, sink_pages=sink_pages)
 
 
 @partial(jax.jit, static_argnames=("opt_kv", "opt_gqa", "window",
                                    "sink_pages"))
 def _paged_chunk_prefill_single(q, positions, kv_pages, scale_pages,
-                                phys_table, *, opt_kv: bool, opt_gqa: bool,
+                                phys_table, seg_q, page_seg, page_base, *,
+                                opt_kv: bool, opt_gqa: bool,
                                 window: int, sink_pages: int):
     ks = scale_pages[0] if scale_pages is not None else None
     vs = scale_pages[1] if scale_pages is not None else None
     return _fc.flash_chunk_prefill(
         q, positions.astype(jnp.int32), kv_pages[0], kv_pages[1], ks, vs,
         phys_table.astype(jnp.int32), opt_kv=opt_kv, opt_gqa=opt_gqa,
-        window=window, sink_pages=sink_pages, interpret=INTERPRET)
+        window=window, sink_pages=sink_pages, interpret=INTERPRET,
+        seg_q=seg_q, page_seg=page_seg, page_base=page_base)
 
 
 def paged_chunk_prefill(q, positions, kv_pages, scale_pages, phys_table, *,
                         opt_kv: bool, opt_gqa: bool, window: int = 0,
-                        sink_pages: int = 0):
+                        sink_pages: int = 0, seg_q=None, page_seg=None,
+                        page_base=None):
     """Continuation-prefill attention over the global pool: a chunk of
     queries (B,S,Hq,D) with absolute ``positions`` (B,S) attends the lane's
     cached pages named by the scalar-prefetched ``phys_table`` (B,NP; -1 =
-    never DMA'd). The chunk's own K/V must already be written."""
+    never DMA'd). The chunk's own K/V must already be written.
+    ``seg_q``/``page_seg``/``page_base`` enable concat-prefill packing
+    (several prompts per row, see the kernel docstring); None = unpacked."""
     if _MESH_CTX is not None:
         return _sh.paged_chunk_prefill(
             _MESH_CTX, q, positions, kv_pages, scale_pages, phys_table,
             opt_kv=opt_kv, opt_gqa=opt_gqa, window=window,
-            sink_pages=sink_pages, interpret=INTERPRET)
+            sink_pages=sink_pages, interpret=INTERPRET, seg_q=seg_q,
+            page_seg=page_seg, page_base=page_base)
     return _paged_chunk_prefill_single(
-        q, positions, kv_pages, scale_pages, phys_table, opt_kv=opt_kv,
-        opt_gqa=opt_gqa, window=window, sink_pages=sink_pages)
+        q, positions, kv_pages, scale_pages, phys_table, seg_q, page_seg,
+        page_base, opt_kv=opt_kv, opt_gqa=opt_gqa, window=window,
+        sink_pages=sink_pages)

@@ -138,31 +138,45 @@ def paged_pool_decode(ctx: ShardCtx, q, kv_pages, scale_pages, cache_len,
 def paged_chunk_prefill(ctx: ShardCtx, q, positions, kv_pages, scale_pages,
                         phys_table, *, opt_kv: bool, opt_gqa: bool,
                         window: int = 0, sink_pages: int = 0,
-                        interpret: bool = True):
+                        interpret: bool = True, seg_q=None, page_seg=None,
+                        page_base=None):
     """Distributed ``flash_chunk_prefill``: chunk queries (B, S, Hq, D)
-    replicated, pool pages-sharded; per-shard partials lse-merged."""
+    replicated, pool pages-sharded; per-shard partials lse-merged. The
+    packing tables (seg/base) live in the LOGICAL page domain, so they ride
+    along replicated and untranslated — only the physical table is mapped
+    into each shard's local range."""
+    B, S = positions.shape
     P_total = kv_pages.shape[1]
+    NP = phys_table.shape[1]
     P_local = P_total // ctx.num_shards
     _, _, ps, Hkv, _ = kv_pages.shape
     if scale_pages is None:
         scale_pages = jnp.zeros((2, P_total, ps, Hkv), jnp.float32)
+    if seg_q is None:
+        seg_q = jnp.zeros((B, S), jnp.int32)
+    if page_seg is None:
+        page_seg = jnp.zeros((B, NP), jnp.int32)
+    if page_base is None:
+        page_base = jnp.broadcast_to(jnp.arange(NP, dtype=jnp.int32), (B, NP))
 
-    def body(q, pos, kv, sc, phys):
+    def body(q, pos, kv, sc, phys, sq, pseg, pbase):
         first = _shard_index(ctx) * P_local
         lphys = global_to_local_pages(phys, first, P_local)
         o, m, l = _fc.flash_chunk_prefill(
             q, pos, kv[0], kv[1], sc[0], sc[1], lphys,
             opt_kv=opt_kv, opt_gqa=opt_gqa, window=window,
-            sink_pages=sink_pages, return_state=True, interpret=interpret)
+            sink_pages=sink_pages, return_state=True, interpret=interpret,
+            seg_q=sq, page_seg=pseg, page_base=pbase)
         return _lse_merge(ctx, o, m, l, q.dtype)
 
     return shard_map(
         body, mesh=ctx.mesh,
         in_specs=(P(), P(), _pages_spec(5, 1, ctx), _pages_spec(4, 1, ctx),
-                  P()),
+                  P(), P(), P(), P()),
         out_specs=P(), check_rep=False,
     )(q, positions.astype(jnp.int32), kv_pages, scale_pages,
-      phys_table.astype(jnp.int32))
+      phys_table.astype(jnp.int32), seg_q.astype(jnp.int32),
+      page_seg.astype(jnp.int32), page_base.astype(jnp.int32))
 
 
 @partial(jax.jit, static_argnames=("ctx", "sm_scale", "opt_kv", "window",
@@ -201,31 +215,42 @@ def paged_latent_decode(ctx: ShardCtx, q_lat, q_rope, lat_pages, scale_pages,
 def latent_chunk_prefill(ctx: ShardCtx, q_lat, q_rope, positions, lat_pages,
                          scale_pages, phys_table, *, sm_scale: float,
                          opt_kv: bool, window: int = 0, sink_pages: int = 0,
-                         interpret: bool = True):
+                         interpret: bool = True, seg_q=None, page_seg=None,
+                         page_base=None):
     """Distributed ``latent_chunk_prefill``: chunk of absorbed queries
     (B, S, H, R) replicated, latent pool pages-sharded; returns o_lat
-    (B, S, H, R) f32."""
+    (B, S, H, R) f32. Packing tables (seg/base) are logical-domain and ride
+    along replicated — only the physical table is shard-translated."""
+    B, S = positions.shape
+    NP = phys_table.shape[1]
     P_total, ps, _ = lat_pages.shape
     P_local = P_total // ctx.num_shards
     if scale_pages is None:
         scale_pages = jnp.zeros((P_total, ps, 2), jnp.float32)
+    if seg_q is None:
+        seg_q = jnp.zeros((B, S), jnp.int32)
+    if page_seg is None:
+        page_seg = jnp.zeros((B, NP), jnp.int32)
+    if page_base is None:
+        page_base = jnp.broadcast_to(jnp.arange(NP, dtype=jnp.int32), (B, NP))
 
-    def body(ql, qr, pos, lat, sc, phys):
+    def body(ql, qr, pos, lat, sc, phys, sq, pseg, pbase):
         first = _shard_index(ctx) * P_local
         lphys = global_to_local_pages(phys, first, P_local)
         o, m, l = _lc.latent_chunk_prefill(
             ql, qr, pos, lat, sc, lphys, sm_scale=sm_scale, opt_kv=opt_kv,
             window=window, sink_pages=sink_pages, return_state=True,
-            interpret=interpret)
+            interpret=interpret, seg_q=sq, page_seg=pseg, page_base=pbase)
         return _lse_merge(ctx, o, m, l, jnp.float32)
 
     return shard_map(
         body, mesh=ctx.mesh,
         in_specs=(P(), P(), P(), _pages_spec(3, 0, ctx),
-                  _pages_spec(3, 0, ctx), P()),
+                  _pages_spec(3, 0, ctx), P(), P(), P(), P()),
         out_specs=P(), check_rep=False,
     )(q_lat, q_rope, positions.astype(jnp.int32), lat_pages, scale_pages,
-      phys_table.astype(jnp.int32))
+      phys_table.astype(jnp.int32), seg_q.astype(jnp.int32),
+      page_seg.astype(jnp.int32), page_base.astype(jnp.int32))
 
 
 # ------------------------------------------------------------ write path --

@@ -90,7 +90,8 @@ def _expand_o(o_lat, p, cfg, dtype):
 
 def mla_chunk_attention(q_nope, q_rope, lat_pages, scale_pages, positions,
                         page_table, p, cfg, coopt: CoOptConfig, *,
-                        window: int = 0, sink_pages: int = 1):
+                        window: int = 0, sink_pages: int = 1, seg_q=None,
+                        page_seg=None, page_base=None):
     """Matrix-absorption CHUNK attention against the global latent pool —
     the MLA leg of the unified chunked-continuation prefill path.
 
@@ -102,7 +103,10 @@ def mla_chunk_attention(q_nope, q_rope, lat_pages, scale_pages, positions,
     lane is a chunk of length 1). Under ``coopt.use_kernel`` this dispatches
     to the fused ``latent_chunk_prefill`` Pallas kernel (latent pages
     streamed off the FP8 pool, no host-side gather); the jnp body below is
-    the parity reference. Returns (B,S,H,dv)."""
+    the parity reference. ``seg_q``/``page_seg``/``page_base`` enable
+    concat-prefill packing (segment-masked attention, per-segment position
+    restart — see ``opt_pa.paged_chunk_attention``); None = unpacked.
+    Returns (B,S,H,dv)."""
     H, dn, dr, R, dv = (cfg.num_heads, cfg.qk_nope_head_dim,
                         cfg.qk_rope_head_dim, cfg.kv_lora_rank,
                         cfg.v_head_dim)
@@ -120,7 +124,8 @@ def mla_chunk_attention(q_nope, q_rope, lat_pages, scale_pages, positions,
             q_lat, q_rope.astype(jnp.float32), positions, lat_pages,
             scale_pages if coopt.opt_kv else None, page_table,
             sm_scale=scale, opt_kv=coopt.opt_kv, window=window,
-            sink_pages=sink_pages)
+            sink_pages=sink_pages, seg_q=seg_q, page_seg=page_seg,
+            page_base=page_base)
         return _expand_o(o_lat, p, cfg, q_nope.dtype)
 
     q_lat = shard_act(q_lat, ("batch", None, None, "latent"))
@@ -142,10 +147,19 @@ def mla_chunk_attention(q_nope, q_rope, lat_pages, scale_pages, positions,
     s = (jnp.einsum("bshr,btr->bhst", q_lat, lat_c)
          + jnp.einsum("bshe,bte->bhst", q_rope, lat_r)) * scale
     s = shard_act(s, ("batch", None, None, None))
-    kpos = jnp.arange(T, dtype=jnp.int32)[None, None, :]
+    if page_base is not None:
+        # packed: key j's position restarts per segment at page_base*ps
+        kpos = (page_base.astype(jnp.int32)[:, :, None] * ps
+                + jnp.arange(ps, dtype=jnp.int32)[None, None, :]
+                ).reshape(B, T)[:, None, :]
+    else:
+        kpos = jnp.arange(T, dtype=jnp.int32)[None, None, :]
     qpos = positions[:, :, None]
     mask = (kpos <= qpos) & \
         jnp.repeat(page_table >= 0, ps, axis=1)[:, None, :]
+    if seg_q is not None:
+        mask &= (jnp.repeat(page_seg.astype(jnp.int32), ps, axis=1)[:, None]
+                 == seg_q.astype(jnp.int32)[:, :, None])
     if window:
         mask &= (kpos > qpos - window) | (kpos < sink_pages * ps)
     s = jnp.where(mask[:, None], s, _NEG)

@@ -374,7 +374,8 @@ class TransformerModel:
         return h, cache
 
     def _attention_chunk(self, p, x, positions, kv_c, sc_c, page_table,
-                         coopt, long_window: int = 0):
+                         coopt, long_window: int = 0, seg_q=None,
+                         page_seg=None, page_base=None):
         """Prefill-continuation attention (chunked prefill / mixed step):
         the chunk's K/V are already written to the GLOBAL paged cache;
         queries attend over the lane's WHOLE cache (prefix-cache hits +
@@ -396,7 +397,8 @@ class TransformerModel:
             qr = apply_rope(qr, positions, cfg.rope_theta)
             o = mla_mod.mla_chunk_attention(
                 qn, qr, kv_c, sc_c, positions, page_table, p, cfg, coopt,
-                window=window, sink_pages=cfg.sink_blocks)
+                window=window, sink_pages=cfg.sink_blocks, seg_q=seg_q,
+                page_seg=page_seg, page_base=page_base)
             return linear(o.reshape(B, S, -1), p["wo"])
         H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
         q = linear(x, p["wq"], p.get("bq")).reshape(B, S, H, D)
@@ -405,7 +407,8 @@ class TransformerModel:
         q = apply_rope(q, positions, cfg.rope_theta)
         o = paged_chunk_attention(q, kv_c, sc_c, positions, page_table,
                                   coopt, window=window,
-                                  sink_pages=cfg.sink_blocks)
+                                  sink_pages=cfg.sink_blocks, seg_q=seg_q,
+                                  page_seg=page_seg, page_base=page_base)
         return linear(o.reshape(B, S, H * D).astype(x.dtype), p["wo"])
 
     def _pool_defaults(self, cache, batch, B):
@@ -461,6 +464,9 @@ class TransformerModel:
             new_len = jnp.maximum(cache["length"],
                                   jnp.max(positions, axis=1) + 1)
         new_len = new_len.astype(jnp.int32)
+        seg_q = batch.get("seg_q")
+        page_seg = batch.get("page_seg")
+        page_base = batch.get("page_base")
 
         def step(hh, pl, kv_c, sc_c, kind):
             x = rmsnorm(hh, pl["ln1"], cfg.norm_eps)
@@ -469,7 +475,9 @@ class TransformerModel:
                 kv_c, sc_c = self._write_layer(kv_c, sc_c, new_a, new_b,
                                                slots, coopt)
                 a = self._attention_chunk(pl, x, positions, kv_c, sc_c,
-                                          page_table, coopt, long_window)
+                                          page_table, coopt, long_window,
+                                          seg_q=seg_q, page_seg=page_seg,
+                                          page_base=page_base)
             else:
                 a, new_a, new_b = self._attention_full(pl, x, positions,
                                                        coopt)
@@ -484,6 +492,11 @@ class TransformerModel:
                                          step)
         h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
         last = batch.get("last_pos", jnp.full((B,), S - 1, jnp.int32))
+        if last.ndim == 2:
+            # packed rows sample SEVERAL columns per row (one per finished
+            # segment): last (B, G) -> logits (B, G, V)
+            h_last = jnp.take_along_axis(h, last[..., None], axis=1)
+            return linear(h_last, params["lm_head"]), cache
         h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
         return linear(h_last, params["lm_head"]), cache
 

@@ -1,6 +1,7 @@
 from repro.serving.engine import Engine, EngineConfig
+from repro.serving.frontend import AsyncEngine, TokenStream
 from repro.serving.request import Request, RequestState
 from repro.serving.sampler import SamplingParams
 
-__all__ = ["Engine", "EngineConfig", "Request", "RequestState",
-           "SamplingParams"]
+__all__ = ["AsyncEngine", "Engine", "EngineConfig", "Request",
+           "RequestState", "SamplingParams", "TokenStream"]

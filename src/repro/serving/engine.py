@@ -60,7 +60,8 @@ from repro.models import get_model
 from repro.serving.request import Request, RequestState
 from repro.serving.sampler import SamplingParams, sample
 from repro.serving.scheduler import (DecodeItem, PrefillChunk, Scheduler,
-                                     StepPlan, bucket_len)
+                                     StepPlan, bucket_len, chunk_pages,
+                                     pack_rows)
 
 
 @dataclass(frozen=True)
@@ -79,6 +80,12 @@ class EngineConfig:
                                     # (launch.mesh.kv_shard_count)
     state_cache_entries: int = 128  # recurrent-state snapshots retained
                                     # (griffin/rwkv6 prefix-cache resume)
+    pack_prefill: bool = False      # concat-prefill packing: several
+                                    # prompts' chunks share one row through
+                                    # the segment-aware chunk kernels
+                                    # (dense/moe/mla families)
+    pack_slots: int = 4             # sampled-logit slots per packed row
+                                    # (max final chunks packed together)
 
 
 @dataclass
@@ -89,9 +96,13 @@ class EngineStats:
     generated_tokens: int = 0
     prefill_time: float = 0.0       # mixed-step wall time is split by
     decode_time: float = 0.0        # planned token share (Eq. 12 fairness)
+    packed_steps: int = 0           # steps run through the packed row path
+    packed_rows_saved: int = 0      # lane-rows eliminated by packing
     # ------------------------------------------------ per-request latency --
-    ttft_s: List[float] = field(default_factory=list)   # enqueue->1st token
+    ttft_s: List[float] = field(default_factory=list)   # submit->1st token
+                                                        # (queue wait incl.)
     tpot_s: List[float] = field(default_factory=list)   # mean s/token after
+    queue_wait_s: List[float] = field(default_factory=list)  # submit->admit
     # ----------------------------------------------------- pool health ----
     pool_pages: int = 0
     pages_in_use: int = 0           # referenced by live sequences (now)
@@ -126,18 +137,25 @@ class EngineStats:
         return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
 
     def ttft(self, q: float = 50.0) -> float:
-        """Time-to-first-token percentile (s) over finished requests."""
+        """Time-to-first-token percentile (s) over finished requests,
+        measured from SUBMISSION — queue wait included."""
         return self._pct(self.ttft_s, q)
 
     def tpot(self, q: float = 50.0) -> float:
         """Per-request mean time-per-output-token percentile (s)."""
         return self._pct(self.tpot_s, q)
 
+    def queue_wait(self, q: float = 50.0) -> float:
+        """Submission -> first lane admission percentile (s)."""
+        return self._pct(self.queue_wait_s, q)
+
     def latency_summary(self) -> Dict[str, float]:
         return {"ttft_p50_s": round(self.ttft(50), 4),
                 "ttft_p95_s": round(self.ttft(95), 4),
                 "tpot_p50_s": round(self.tpot(50), 4),
-                "tpot_p95_s": round(self.tpot(95), 4)}
+                "tpot_p95_s": round(self.tpot(95), 4),
+                "queue_wait_p50_s": round(self.queue_wait(50), 4),
+                "queue_wait_p95_s": round(self.queue_wait(95), 4)}
 
     def pool_utilization(self) -> float:
         return self.pages_in_use / self.pool_pages if self.pool_pages else 0.0
@@ -150,6 +168,34 @@ class EngineStats:
     def prefix_hit_rate(self) -> float:
         return self.prefix_cache_hits / self.prefix_cache_queries \
             if self.prefix_cache_queries else 0.0
+
+
+@dataclass
+class StepBatch:
+    """One fully-built device step: the static-shape arrays plus the host
+    metadata needed to route the sampled tokens back to requests. Built by
+    ``Engine._build_step`` and consumed by BOTH the synchronous loop and
+    the async pipeline (``serving.frontend``) — one step-construction path.
+
+    ``samples`` maps each sampled logit slot to (request, is_first_token,
+    index into the sampled-token array) — ``(lane,)`` for the per-lane
+    kinds, ``(row, slot)`` for the packed kind. ``feed``/``row_lane``/
+    ``scatter_lane`` carry the async device-token plumbing: column 0 of a
+    decode row can take its input token from the device-resident per-lane
+    ``lane_tok`` feed (-1) instead of a host value (-2 = keep the host
+    token), and every sampled token is scattered back into ``lane_tok`` at
+    ``scatter_lane`` (``num_lanes`` = drop), so planning step N+1 never
+    waits on step N's host sync."""
+    kind: str                      # "prefill" | "decode" | "packed"
+    batch: Dict[str, jnp.ndarray]
+    lane_mask: np.ndarray          # (num_lanes,) bool; unused for packed
+    plan: StepPlan
+    samples: List[Tuple[Request, bool, Tuple[int, ...]]]
+    tp: int                        # planned prefill tokens
+    td: int                        # planned decode tokens
+    feed: np.ndarray               # (R,) int32 col-0 token source
+    row_lane: np.ndarray           # (R,) int32 lane backing each row
+    scatter_lane: np.ndarray       # (n_slots,) int32 lane per sample slot
 
 
 class Engine:
@@ -231,8 +277,40 @@ class Engine:
                             for k, (_, _, axes) in shapes.items()
                             if "batch" in axes}
 
-        self._prefill_fn = jax.jit(self._prefill_impl)
-        self._decode_fn = jax.jit(self._decode_impl)
+        # cache donation (argnum 2 of every step impl): the pool is
+        # threaded through each step and immediately rebound to the
+        # output, so XLA may update pages in place instead of copying the
+        # whole pool per step
+        self._prefill_fn = jax.jit(self._prefill_impl, donate_argnums=(2,))
+        self._decode_fn = jax.jit(self._decode_impl, donate_argnums=(2,))
+        self._packed_fn = jax.jit(self._prefill_packed_impl,
+                                  donate_argnums=(2,))
+        # async two-stage pipeline step (sample-on-device); lazily traced,
+        # AOT-compiled by AsyncEngine.warmup over the step-shape lattice.
+        # lane_tok (argnum 4) is donated too — it is device-resident state
+        # owned by the pipeline, rebound on every dispatch.
+        self._async_fn = jax.jit(self._async_step_impl,
+                                 static_argnames=("kind",),
+                                 donate_argnums=(2, 4))
+        self._aot: Dict[tuple, object] = {}   # shape key -> Compiled
+        self._dev_cache: Dict[tuple, jnp.ndarray] = {}  # small recurring
+        # host arrays (lane masks, token-feed plumbing) memoized on device
+        # — steady-state decode reuses them every step, skipping the
+        # per-step device_put that would otherwise eat the pipeline win
+        self.aot_misses = 0                   # async steps that re-traced
+        self.trace_counts: Dict[str, int] = {}  # impl traces (trace-time
+                                                # side effect — retraces
+                                                # show up here)
+        # concat-prefill packing works where "length" is the ONLY
+        # batch-major leaf (rows decouple from lanes; the packed impl
+        # restores it): dense/moe/mla. vlm (patch stubs), whisper
+        # (cross-KV) and the recurrent families keep per-lane state.
+        self._pack_ok = (model_cfg.family in ("dense", "moe", "mla")
+                         and not self._rec_leaves)
+        if engine_cfg.pack_prefill and not self._pack_ok:
+            raise ValueError(
+                f"pack_prefill unsupported for family {model_cfg.family!r}"
+                " (per-lane batch-major cache state)")
 
     # ------------------------------------------------------- mesh placement --
     def _place_cache(self, cache, mesh):
@@ -266,8 +344,14 @@ class Engine:
             out[name] = jnp.where(m, leaf, old_cache[name])
         return out
 
+    def _count_trace(self, kind: str) -> None:
+        # runs at TRACE time only: steady-state (cached or AOT-compiled)
+        # steps never touch it, so any increment after warmup IS a retrace
+        self.trace_counts[kind] = self.trace_counts.get(kind, 0) + 1
+
     def _prefill_impl(self, params, batch, cache, lane_mask):
         from repro.kernels import ops
+        self._count_trace("prefill")
         with ops.mesh_ctx_scope(self._kernel_ctx):   # trace-scoped
             logits, new_cache = self.model.prefill(
                 params, batch, cache, self.coopt,
@@ -276,11 +360,65 @@ class Engine:
 
     def _decode_impl(self, params, batch, cache, lane_mask):
         from repro.kernels import ops
+        self._count_trace("decode")
         with ops.mesh_ctx_scope(self._kernel_ctx):   # trace-scoped
             logits, new_cache = self.model.decode_step(
                 params, batch, cache, self.coopt,
                 long_window=self.ecfg.long_window)
             return logits, self._mask_lanes(new_cache, cache, lane_mask)
+
+    def _prefill_packed_impl(self, params, batch, cache, lane_mask):
+        """Packed rows are DECOUPLED from lanes (R != num_lanes), so no
+        lane-shaped masking applies. Pool leaves are isolated by slot
+        disjointness as ever; the only batch-major leaf in the packable
+        families is ``length``, which is restored from the input cache
+        (the engine passes explicit ``cache_len`` every step, so the leaf
+        is bookkeeping only)."""
+        from repro.kernels import ops
+        self._count_trace("packed")
+        with ops.mesh_ctx_scope(self._kernel_ctx):   # trace-scoped
+            logits, new_cache = self.model.prefill(
+                params, batch, cache, self.coopt,
+                long_window=self.ecfg.long_window)
+            new_cache["length"] = cache["length"]
+            return logits, new_cache
+
+    def _async_step_impl(self, params, batch, cache, lane_mask, lane_tok,
+                         key, feed, row_lane, scatter_lane, *, kind: str):
+        """One async-pipeline device step: substitute device-resident input
+        tokens, run the model, SAMPLE ON DEVICE, and scatter the sampled
+        tokens back into the per-lane ``lane_tok`` feed — so the host can
+        build and dispatch step N+1 from metadata alone while step N
+        executes, deferring the host sync to the emit worker."""
+        self._count_trace("async_" + kind)
+        tok_key = "token" if kind == "decode" else "tokens"
+        batch = dict(batch)
+        if "dmeta" in batch:
+            # decode fast path: per-step metadata shipped as ONE (3, B)
+            # host->device transfer instead of three
+            dm = batch.pop("dmeta")
+            batch["positions"] = dm[0][:, None]
+            batch["slot_idx"] = dm[1][:, None]
+            batch["cache_len"] = dm[2]
+        t0 = batch[tok_key][:, 0]
+        t0 = jnp.where(feed == -1, lane_tok[row_lane],
+                       jnp.where(feed >= 0, feed, t0))
+        batch[tok_key] = batch[tok_key].at[:, 0].set(t0)
+        if kind == "decode":
+            logits, new_cache = self._decode_impl(params, batch, cache,
+                                                  lane_mask)
+        elif kind == "packed":
+            logits, new_cache = self._prefill_packed_impl(
+                params, batch, cache, lane_mask)
+        else:
+            logits, new_cache = self._prefill_impl(params, batch, cache,
+                                                   lane_mask)
+        sp = self.ecfg.sampling
+        toks = sample(logits, key, temperature=sp.temperature,
+                      top_k=sp.top_k, top_p=sp.top_p)
+        lane_tok = lane_tok.at[scatter_lane].set(
+            toks.reshape(-1).astype(jnp.int32), mode="drop")
+        return toks, new_cache, lane_tok
 
     # -------------------------------------------------------------- common --
     def _sample(self, logits) -> np.ndarray:
@@ -290,24 +428,52 @@ class Engine:
                                  top_k=sp.top_k, top_p=sp.top_p))
 
     def _emit(self, req: Request, tok: int, now: float,
-              first: bool) -> None:
+              first: bool) -> bool:
+        """Deliver one sampled token. Returns False when the token is
+        DROPPED: the request was cancelled, or already done (the async
+        pipeline's <= 1-step EOS overrun)."""
+        if req.inflight > 0:
+            req.inflight -= 1
+        if req.state is RequestState.CANCELLED or req.done():
+            return False
         req.output.append(tok)
         self.stats.generated_tokens += 1
         if first and req.prefill_time < 0:
             req.prefill_time = now          # TTFT anchor survives preemption
+        return True
+
+    @staticmethod
+    def _anchor(req: Request) -> float:
+        """TTFT / queue-wait anchor: client submission when stamped, else
+        scheduler-queue arrival."""
+        return req.submit_time if req.submit_time >= 0 else req.enqueue_time
 
     def _finish_done(self, reqs: List[Request]) -> None:
-        done = [r for r in reqs if r.done()]
         now = time.perf_counter()
-        for r in done:
+        for r in reqs:
+            if not r.done():
+                continue
+            if r.state is RequestState.PREEMPTED:
+                # async pipeline edge: preempted while its LAST tokens were
+                # still in flight — their emission just completed it, so it
+                # must never re-admit. Its pages were already freed.
+                if r in self.scheduler.waiting:
+                    self.scheduler.waiting.remove(r)
+                r.state = RequestState.FINISHED
+            elif r.state is RequestState.RUNNING:
+                self.scheduler.finish(r)
+            else:
+                continue
             r.finish_time = now
-            if r.prefill_time >= 0 and r.enqueue_time >= 0:
-                self.stats.ttft_s.append(r.prefill_time - r.enqueue_time)
+            t0 = self._anchor(r)
+            if r.prefill_time >= 0 and t0 >= 0:
+                self.stats.ttft_s.append(r.prefill_time - t0)
                 if r.num_generated > 1:
                     self.stats.tpot_s.append(
                         (r.finish_time - r.prefill_time)
                         / (r.num_generated - 1))
-            self.scheduler.finish(r)
+            if r.admit_time >= 0 and t0 >= 0:
+                self.stats.queue_wait_s.append(r.admit_time - t0)
 
     def _update_pool_stats(self) -> None:
         mgr = self.scheduler.manager
@@ -386,19 +552,27 @@ class Engine:
             self._state_cache.popitem(last=False)
 
     # --------------------------------------------------- the ONE step path --
-    def _run_mixed(self, plan: StepPlan) -> None:
-        """One device call for the whole step, for EVERY model family:
-        prefill chunks + decode tokens through the chunked-continuation
-        path (a decode lane is a chunk of length 1). A step with only
-        decode lanes takes the one-token decode kernel — same composition,
-        S == 1, with the block-sparse ``long_window`` policy available."""
+    def _should_pack(self, plan: StepPlan) -> bool:
+        return (self.ecfg.pack_prefill and self._pack_ok
+                and bool(plan.prefill))
+
+    def _build_step(self, plan: StepPlan,
+                    device_feed: bool = False) -> StepBatch:
+        """Build the whole step's static-shape arrays from the plan — ONE
+        construction path shared by the sync loop and the async pipeline.
+        With ``device_feed`` decode rows take their input token from the
+        device-resident lane feed (-1) instead of a host value, so the
+        plan can be built before the previous step's tokens reach the
+        host."""
+        if self._rec_leaves and plan.prefill:
+            self._reset_or_restore_state(plan.prefill)
+        if self._should_pack(plan):
+            return self._build_packed(plan, device_feed)
+
         B = self.ecfg.num_lanes
         NP = self.scheduler.pages_per_lane
         mgr = self.scheduler.manager
         off = self._patch_offset
-
-        if self._rec_leaves and plan.prefill:
-            self._reset_or_restore_state(plan.prefill)
 
         page_table = np.full((B, NP), -1, np.int32)
         cache_len = np.zeros(B, np.int32)
@@ -411,6 +585,9 @@ class Engine:
         slot_idx = np.full((B, S), -1, np.int32)      # Eq. 5 SkipSet: pads
         pad_mask = np.zeros((B, S), bool)
         last_pos = np.zeros(B, np.int32)
+        feed = np.full(B, -2, np.int32)
+        scatter_lane = np.full(B, B, np.int32)        # B = drop
+        samples: List[Tuple[Request, bool, Tuple[int, ...]]] = []
 
         for c in plan.prefill:
             lane, n = c.req.lane, c.n
@@ -428,9 +605,12 @@ class Engine:
             pad_mask[lane, :n] = True
             last_pos[lane] = n - 1
             lane_mask[lane] = True
+            if c.final:
+                samples.append((c.req, True, (lane,)))
+                scatter_lane[lane] = lane
         for d in plan.decode:                          # a chunk of length 1
             lane = d.req.lane
-            tokens[lane, 0] = d.req.output[-1]
+            tokens[lane, 0] = d.req.output[-1] if d.req.output else 0
             positions[lane] = d.pos
             slot_idx[lane, 0] = d.slot
             page_table[lane] = self.scheduler.page_table(d.req)
@@ -438,10 +618,27 @@ class Engine:
             pad_mask[lane, 0] = True
             last_pos[lane] = 0
             lane_mask[lane] = True
+            samples.append((d.req, False, (lane,)))
+            scatter_lane[lane] = lane
+            if device_feed:
+                feed[lane] = -1        # device lane feed, never host-sync
 
+        if device_feed and not plan.prefill:
+            # decode fast path: one fused metadata upload (unpacked in
+            # _async_step_impl) + constant zero tokens (device lane feed)
+            batch = {"dmeta": jnp.asarray(np.stack(
+                         [positions[:, 0], slot_idx[:, 0], cache_len])),
+                     "page_table": self._dev_const(page_table),
+                     "token": self._dev_const(np.zeros_like(tokens))}
+            return StepBatch(kind="decode", batch=batch,
+                             lane_mask=lane_mask, plan=plan,
+                             samples=samples, tp=0, td=len(plan.decode),
+                             feed=feed,
+                             row_lane=np.arange(B, dtype=np.int32),
+                             scatter_lane=scatter_lane)
         batch = {"positions": jnp.asarray(positions),
                  "slot_idx": jnp.asarray(slot_idx),
-                 "page_table": jnp.asarray(page_table),
+                 "page_table": self._dev_const(page_table),
                  "cache_len": jnp.asarray(cache_len)}
         if plan.prefill:
             batch.update(tokens=jnp.asarray(tokens),
@@ -461,43 +658,311 @@ class Engine:
                         (B, self.cfg.num_frames, self.cfg.d_model),
                         jnp.bfloat16)
                     batch["cross_mask"] = jnp.asarray(firsts)
-            fn = self._prefill_fn
+            kind = "prefill"
         else:
             batch["token"] = jnp.asarray(tokens)
-            fn = self._decode_fn
+            kind = "decode"
 
+        return StepBatch(kind=kind, batch=batch, lane_mask=lane_mask,
+                         plan=plan, samples=samples,
+                         tp=sum(c.n for c in plan.prefill),
+                         td=len(plan.decode), feed=feed,
+                         row_lane=np.arange(B, dtype=np.int32),
+                         scatter_lane=scatter_lane)
+
+    def _build_packed(self, plan: StepPlan,
+                      device_feed: bool = False) -> StepBatch:
+        """Concat-prefill packing: several prompts' chunks share one row as
+        SEGMENTS, with per-row segment ids (``seg_q``/``page_seg``) and
+        per-segment logical page indices (``page_base``) threaded to the
+        segment-aware chunk kernels so attention cannot leak across packed
+        prompts. Decode items keep one row each (their token feeds the
+        async lane plumbing); rows are padded to a power-of-two bucket, so
+        short-prompt steps run with FEWER rows than lanes — the packed
+        win."""
+        ps = self.coopt.page_size
+        NP = self.scheduler.pages_per_lane
+        G = self.ecfg.pack_slots
+        mgr = self.scheduler.manager
+
+        S = (bucket_len(max(c.n for c in plan.prefill),
+                        self.scheduler.prefill_buckets) or
+             max(c.n for c in plan.prefill))
+        rows = pack_rows(plan.prefill, S, G, NP, ps)
+        n_rows = len(plan.decode) + len(rows)
+        R = 1
+        while R < n_rows:
+            R *= 2
+        R = min(R, max(self.ecfg.num_lanes, n_rows))
+        B = self.ecfg.num_lanes
+
+        tokens = np.zeros((R, S), np.int32)
+        positions = np.zeros((R, S), np.int32)
+        seg_q = np.full((R, S), -1, np.int32)        # -1 matches no page
+        slot_idx = np.full((R, S), -1, np.int32)
+        page_table = np.full((R, NP), -1, np.int32)
+        page_seg = np.zeros((R, NP), np.int32)
+        page_base = np.zeros((R, NP), np.int32)
+        cache_len = np.zeros(R, np.int32)
+        pad_mask = np.zeros((R, S), bool)
+        last_pos = np.zeros((R, G), np.int32)
+        feed = np.full(R, -2, np.int32)
+        row_lane = np.zeros(R, np.int32)
+        scatter_lane = np.full(R * G, B, np.int32)   # num_lanes = drop
+        samples: List[Tuple[Request, bool, Tuple[int, ...]]] = []
+
+        for i, d in enumerate(plan.decode):          # one row per decode
+            tokens[i, 0] = d.req.output[-1] if d.req.output else 0
+            positions[i] = d.pos
+            seg_q[i, 0] = 0
+            slot_idx[i, 0] = d.slot
+            pt = self.scheduler.page_table(d.req)
+            page_table[i] = pt
+            page_base[i] = np.arange(NP)
+            cache_len[i] = d.pos + 1
+            pad_mask[i, 0] = True
+            row_lane[i] = d.req.lane
+            scatter_lane[i * G] = d.req.lane
+            samples.append((d.req, False, (i, 0)))
+            if device_feed:
+                feed[i] = -1
+
+        for j, row in enumerate(rows):
+            r = len(plan.decode) + j
+            t = pcur = g = 0
+            for k, c in enumerate(row.chunks):
+                n, npg = c.n, chunk_pages(c, ps)
+                tokens[r, t:t + n] = c.tokens
+                positions[r, t:t + n] = c.start + np.arange(n)
+                seg_q[r, t:t + n] = k
+                slot_idx[r, t:t + n] = mgr.slot_indices(
+                    c.req.pool_id, np.arange(c.start, c.start + n))
+                page_table[r, pcur:pcur + npg] = \
+                    self.scheduler.page_table(c.req)[:npg]
+                page_seg[r, pcur:pcur + npg] = k
+                page_base[r, pcur:pcur + npg] = np.arange(npg)
+                pad_mask[r, t:t + n] = True
+                if c.final:
+                    last_pos[r, g] = t + n - 1
+                    scatter_lane[r * G + g] = c.req.lane
+                    samples.insert(g + sum(x.finals for x in rows[:j]),
+                                   (c.req, True, (r, g)))
+                    g += 1
+                t += n
+                pcur += npg
+            cache_len[r] = t
+            row_lane[r] = row.chunks[0].req.lane
+
+        # prefill finals emit BEFORE decode tokens (matches the unpacked
+        # emission order exactly)
+        samples.sort(key=lambda s: not s[1])
+
+        batch = {"positions": jnp.asarray(positions),
+                 "slot_idx": jnp.asarray(slot_idx),
+                 "page_table": jnp.asarray(page_table),
+                 "cache_len": jnp.asarray(cache_len),
+                 "tokens": jnp.asarray(tokens),
+                 "pad_mask": jnp.asarray(pad_mask),
+                 "last_pos": jnp.asarray(last_pos),
+                 "seg_q": jnp.asarray(seg_q),
+                 "page_seg": jnp.asarray(page_seg),
+                 "page_base": jnp.asarray(page_base)}
+        self.stats.packed_steps += 1
+        self.stats.packed_rows_saved += max(
+            len(plan.decode) + len(plan.prefill) - R, 0)
+        return StepBatch(kind="packed", batch=batch,
+                         lane_mask=np.ones(B, bool), plan=plan,
+                         samples=samples,
+                         tp=sum(c.n for c in plan.prefill),
+                         td=len(plan.decode), feed=feed, row_lane=row_lane,
+                         scatter_lane=scatter_lane)
+
+    def _execute(self, sb: StepBatch):
+        """Synchronous dispatch: run the step, block, attribute wall time
+        by planned token share (a prefill-heavy mixed step must not book
+        its whole wall time under decode — Eq. 12)."""
+        fn = {"prefill": self._prefill_fn, "decode": self._decode_fn,
+              "packed": self._packed_fn}[sb.kind]
         t0 = time.perf_counter()
-        logits, self.cache = fn(self.params, batch, self.cache,
-                                jnp.asarray(lane_mask))
+        logits, self.cache = fn(self.params, sb.batch, self.cache,
+                                self._dev_const(sb.lane_mask))
         logits.block_until_ready()
-        dt = time.perf_counter() - t0
+        self._book_time(sb, time.perf_counter() - t0)
+        return logits
 
-        # timing attribution by planned token share: a prefill-heavy mixed
-        # step must not book its whole wall time under decode (Eq. 12)
-        tp = sum(c.n for c in plan.prefill)
-        td = len(plan.decode)
-        share = dt / max(tp + td, 1)
-        if tp:
-            self.stats.prefill_time += share * tp
+    def _book_time(self, sb: StepBatch, dt: float) -> None:
+        share = dt / max(sb.tp + sb.td, 1)
+        if sb.tp:
+            self.stats.prefill_time += share * sb.tp
             self.stats.prefill_calls += 1
-        if td:
-            self.stats.decode_time += share * td
+        if sb.td:
+            self.stats.decode_time += share * sb.td
             self.stats.decode_steps += 1
-        if tp and td:
+        if sb.tp and sb.td:
             self.stats.mixed_steps += 1
 
-        toks = self._sample(logits)
-        now = time.perf_counter()
-        for c in plan.prefill:
+    def _note_executed(self, sb: StepBatch) -> None:
+        """Host metadata updates that must land before the NEXT plan is
+        built (they do not depend on sampled token VALUES): advance
+        prefill progress, register prefix pages, snapshot recurrent
+        state."""
+        for c in sb.plan.prefill:
             self.scheduler.note_prefilled(c.req, c.n)
             if self._rec_leaves:
                 self._snapshot_state(c)
-            if c.final:
-                self._emit(c.req, int(toks[c.req.lane]), now, first=True)
-        for d in plan.decode:
-            self._emit(d.req, int(toks[d.req.lane]), now, first=False)
-        self._finish_done([c.req for c in plan.prefill if c.final] +
-                          [d.req for d in plan.decode])
+
+    def _postprocess(self, sb: StepBatch, toks: np.ndarray,
+                     now: float) -> None:
+        """Route host-visible sampled tokens back to their requests and
+        retire the finished ones."""
+        for req, first, idx in sb.samples:
+            self._emit(req, int(toks[idx]), now, first=first)
+        self._finish_done([req for req, _, _ in sb.samples])
+
+    def _run_mixed(self, plan: StepPlan) -> None:
+        """One device call for the whole step, for EVERY model family:
+        prefill chunks + decode tokens through the chunked-continuation
+        path (a decode lane is a chunk of length 1). A step with only
+        decode lanes takes the one-token decode kernel — same composition,
+        S == 1, with the block-sparse ``long_window`` policy available.
+        With ``pack_prefill`` the prefill chunks run through the packed
+        concat-prefill layout instead."""
+        sb = self._build_step(plan)
+        logits = self._execute(sb)
+        toks = self._sample(logits)
+        self._note_executed(sb)
+        self._postprocess(sb, toks, time.perf_counter())
+
+    # ------------------------------------------------- async step dispatch --
+    def _async_key(self, kind: str, batch: Dict[str, jnp.ndarray]) -> tuple:
+        """AOT executable key: the step kind plus every batch array's
+        (name, shape, dtype). ``lane_tok``/``feed``/``row_lane``/
+        ``scatter_lane`` shapes are functions of these, and params/cache
+        shapes are fixed per engine, so this pins the whole signature."""
+        return (kind,) + tuple(sorted(
+            (k, tuple(v.shape), str(v.dtype)) for k, v in batch.items()))
+
+    def _dev_const(self, arr: np.ndarray) -> jnp.ndarray:
+        """Device-memoized small host array (recurs across steps)."""
+        k = (arr.dtype.str, arr.shape, arr.tobytes())
+        v = self._dev_cache.get(k)
+        if v is None:
+            if len(self._dev_cache) > 512:
+                self._dev_cache.clear()
+            v = self._dev_cache[k] = jnp.asarray(arr)
+        return v
+
+    def _async_args(self, sb: StepBatch, lane_tok, key):
+        return (self.params, sb.batch, self.cache,
+                self._dev_const(sb.lane_mask), lane_tok, key,
+                self._dev_const(sb.feed), self._dev_const(sb.row_lane),
+                self._dev_const(sb.scatter_lane))
+
+    def _dispatch_async(self, sb: StepBatch, lane_tok):
+        """Dispatch one pipeline step WITHOUT blocking: prefer the AOT
+        executable warmed up for this shape (zero traces in steady state);
+        fall back to the jit path and count the miss."""
+        if self.ecfg.sampling.temperature > 0:
+            self.key, sub = jax.random.split(self.key)
+        else:
+            sub = self.key               # greedy: argmax ignores the key
+        args = self._async_args(sb, lane_tok, sub)
+        fn = self._aot.get(self._async_key(sb.kind, sb.batch))
+        if fn is not None:
+            toks, self.cache, lane_tok = fn(*args)
+        else:
+            self.aot_misses += 1
+            toks, self.cache, lane_tok = self._async_fn(*args, kind=sb.kind)
+        self._book_time(sb, 0.0)      # step counters; async wall time is
+        return toks, lane_tok         # booked end-to-end by the caller
+
+    # ------------------------------------------------------- AOT warmup ----
+    def _dummy_batch(self, kind: str, R: int, S: int,
+                     whisper_first: bool = True) -> Dict[str, jnp.ndarray]:
+        """A shape-exact stand-in for one step's batch (values never run —
+        ``lower().compile()`` only reads shapes/dtypes)."""
+        B = self.ecfg.num_lanes
+        NP = self.scheduler.pages_per_lane
+        if kind == "decode":       # fused-dmeta schema (device-feed path)
+            return {"dmeta": jnp.zeros((3, R), jnp.int32),
+                    "page_table": jnp.full((R, NP), -1, jnp.int32),
+                    "token": jnp.zeros((R, S), jnp.int32)}
+        batch = {"positions": jnp.zeros((R, S), jnp.int32),
+                 "slot_idx": jnp.full((R, S), -1, jnp.int32),
+                 "page_table": jnp.full((R, NP), -1, jnp.int32),
+                 "cache_len": jnp.zeros((R,), jnp.int32)}
+        batch.update(tokens=jnp.zeros((R, S), jnp.int32),
+                     pad_mask=jnp.zeros((R, S), bool))
+        if kind == "packed":
+            G = self.ecfg.pack_slots
+            batch.update(last_pos=jnp.zeros((R, G), jnp.int32),
+                         seg_q=jnp.full((R, S), -1, jnp.int32),
+                         page_seg=jnp.zeros((R, NP), jnp.int32),
+                         page_base=jnp.zeros((R, NP), jnp.int32))
+            return batch
+        batch["last_pos"] = jnp.zeros((R,), jnp.int32)
+        if self.cfg.family == "vlm":
+            batch["patches"] = jnp.zeros((B, self._patch_offset,
+                                          self.cfg.d_model), jnp.bfloat16)
+        if self.cfg.family == "whisper" and whisper_first:
+            batch["frames"] = jnp.zeros(
+                (B, self.cfg.num_frames, self.cfg.d_model), jnp.bfloat16)
+            batch["cross_mask"] = jnp.zeros((B,), bool)
+        return batch
+
+    def _warmup_lattice(self) -> List[Tuple[str, Dict[str, jnp.ndarray]]]:
+        """Every steady-state step shape the async pipeline can dispatch:
+        one decode shape, one prefill shape per bucket (whisper: with and
+        without the first-chunk encoder), and — when packing — every
+        (row-bucket x prefill-bucket) packed shape."""
+        B = self.ecfg.num_lanes
+        buckets = self.scheduler.prefill_buckets
+        lattice = [("decode", self._dummy_batch("decode", B, 1))]
+        for S in buckets:
+            lattice.append(("prefill", self._dummy_batch("prefill", B, S)))
+            if self.cfg.family == "whisper":
+                lattice.append(("prefill", self._dummy_batch(
+                    "prefill", B, S, whisper_first=False)))
+        if self.ecfg.pack_prefill and self._pack_ok:
+            row_buckets = []
+            r = 1
+            while r < B:
+                row_buckets.append(r)
+                r *= 2
+            row_buckets.append(B)
+            for R in row_buckets:
+                for S in buckets:
+                    lattice.append(("packed",
+                                    self._dummy_batch("packed", R, S)))
+        return lattice
+
+    def warmup(self) -> int:
+        """AOT-compile (``lower().compile()``) the async step executable
+        for EVERY shape in the bucket lattice, so steady-state serving
+        never traces or compiles. Returns the number of executables built.
+        Compiled executables bypass the jit call cache entirely — dispatch
+        looks them up by shape key (``_dispatch_async``)."""
+        B = self.ecfg.num_lanes
+        lane_tok = jnp.zeros((B,), jnp.int32)
+        key = jax.random.PRNGKey(0)
+        built = 0
+        for kind, batch in self._warmup_lattice():
+            akey = self._async_key(kind, batch)
+            if akey in self._aot:
+                continue
+            R = batch["page_table"].shape[0]
+            n_slots = batch["last_pos"].size if kind == "packed" else R
+            sb = StepBatch(kind=kind, batch=batch,
+                           lane_mask=np.ones(B, bool), plan=StepPlan(),
+                           samples=[], tp=0, td=0,
+                           feed=np.full(R, -2, np.int32),
+                           row_lane=np.zeros(R, np.int32),
+                           scatter_lane=np.full(n_slots, B, np.int32))
+            args = self._async_args(sb, lane_tok, key)
+            self._aot[akey] = self._async_fn.lower(
+                *args, kind=kind).compile()
+            built += 1
+        return built
 
     # ---------------------------------------------------------------- API --
     def add_request(self, req: Request) -> None:
@@ -525,11 +990,18 @@ class Engine:
         token lists (or the full Request objects with ``return_requests`` —
         inspect ``state`` to distinguish FINISHED from REJECTED; rejected
         requests surface with empty output and are counted in
-        ``stats.rejected``)."""
-        reqs = [Request(req_id=1000 + i, prompt=np.asarray(p, np.int32),
-                        max_new_tokens=max_new_tokens, eos_token=eos_token,
-                        arrival_time=float(i))
-                for i, p in enumerate(prompts)]
+        ``stats.rejected``). Requests are stamped with REAL submission
+        times (monotonic clock, submission order preserved by ``req_id``
+        tie-break), so ``stats.latency_summary()`` reports TTFT and queue
+        wait measured from submission."""
+        reqs = []
+        for i, p in enumerate(prompts):
+            now = time.perf_counter()
+            reqs.append(Request(req_id=1000 + i,
+                                prompt=np.asarray(p, np.int32),
+                                max_new_tokens=max_new_tokens,
+                                eos_token=eos_token,
+                                arrival_time=now, submit_time=now))
         for r in reqs:
             self.add_request(r)
         self.run()

@@ -1,0 +1,264 @@
+"""Async continuous-batching frontend: an overlapped host/device pipeline
+over the synchronous ``Engine``.
+
+The sync loop serializes HOST plan-building, DEVICE execution, and HOST
+token emission: every step blocks on ``np.asarray(logits)`` before the next
+plan can be built, so the host and device take turns idling. This frontend
+exploits JAX's async dispatch to overlap them:
+
+  * ``AsyncEngine.submit(prompt, ...)`` registers a request and returns a
+    ``TokenStream``; ``stream()`` (or iterating it) yields generated token
+    ids as they arrive. ``cancel(handle)`` releases the request's pool
+    pages and lane as soon as its in-flight device tokens drain, dropping
+    any still-pipelined samples at emission.
+  * The LOOP (driving thread) builds the plan for step N+1 and dispatches
+    it while step N still executes on device (pipeline depth
+    ``PIPELINE_DEPTH`` = 2). It never blocks on device results: sampling
+    happens ON DEVICE inside the step (``Engine._async_step_impl``) and
+    each decode lane's input token is read from the device-resident
+    ``lane_tok`` feed, so plan construction needs only host metadata
+    (the scheduler's pool state advances at DISPATCH time, not emission
+    time — ``Request.inflight`` tracks the gap).
+  * The EMIT worker (background thread) owns the only host sync: it drains
+    the dispatch queue in device order, blocks on ``np.asarray(tokens)``,
+    and hands the host tokens back to the loop, which routes them to the
+    per-request stream queues ("detokenize/emit off the critical path").
+  * ``warmup()`` AOT-compiles (``jax.jit(...).lower().compile()``) the
+    async step executable for EVERY shape in the bucket lattice — prefill
+    buckets x packed row buckets x decode — so steady-state serving never
+    traces: ``engine.aot_misses`` stays 0 and ``engine.trace_counts`` is
+    frozen after warmup.
+
+Greedy outputs are bit-identical to ``Engine.generate``: the device
+consumes its own sampled tokens in dispatch order, and the paged-pool step
+math is schedule-independent, so overlapping only changes WHEN tokens reach
+the host, never their values. The pipeline may overrun EOS by at most
+``PIPELINE_DEPTH - 1`` steps; overrun tokens are dropped at emission.
+
+Single-process, two threads: the loop thread owns ALL scheduler/request/
+cache mutation; the emit worker only converts device arrays to host and
+never touches shared state. Used by ``launch.serve --async`` and
+``benchmarks.bench_serving``.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import Engine, StepBatch
+from repro.serving.request import Request, RequestState
+
+PIPELINE_DEPTH = 2          # dispatched-but-not-emitted device steps
+_END = object()             # TokenStream sentinel
+
+
+@dataclass
+class TokenStream:
+    """Per-request output channel. ``get()`` blocks for the next token id
+    (None = stream closed); iteration yields tokens until completion."""
+    req: Request
+    _q: "queue.Queue[object]" = field(default_factory=queue.Queue)
+
+    def put(self, tok: int) -> None:
+        self._q.put(tok)
+
+    def close(self) -> None:
+        self._q.put(_END)
+
+    def get(self, timeout: Optional[float] = None) -> Optional[int]:
+        tok = self._q.get(timeout=timeout)
+        return None if tok is _END else tok      # type: ignore[return-value]
+
+    def __iter__(self):
+        while True:
+            tok = self.get()
+            if tok is None:
+                return
+            yield tok
+
+
+class AsyncEngine:
+    """Continuous-batching request frontend over a synchronous ``Engine``.
+
+    ``submit()`` / ``stream()`` / ``cancel()`` may be called from any
+    thread; the serving loop runs on the caller of ``run_until_idle`` (or
+    the ``serve_forever`` thread)."""
+
+    def __init__(self, engine: Engine, pipeline_depth: int = PIPELINE_DEPTH,
+                 warmup: bool = True):
+        self.engine = engine
+        self.depth = max(1, int(pipeline_depth))
+        self._submit_q: "queue.Queue[Tuple[Request, TokenStream]]" = \
+            queue.Queue()
+        self._emit_q: "queue.Queue[Optional[Tuple[StepBatch, object]]]" = \
+            queue.Queue()
+        self._done_q: "queue.Queue[Tuple[StepBatch, np.ndarray]]" = \
+            queue.Queue()
+        self._streams: Dict[int, TokenStream] = {}
+        self._cancelled: set = set()           # req_ids pending release
+        self._inflight_steps = 0
+        self._next_id = 0
+        self._id_lock = threading.Lock()
+        # device-resident per-lane token feed (decode inputs / sample sink)
+        self._lane_tok = jnp.zeros((engine.ecfg.num_lanes,), jnp.int32)
+        self._emitter = threading.Thread(target=self._emit_worker,
+                                         daemon=True)
+        self._emitter.start()
+        self.warmed_shapes = engine.warmup() if warmup else 0
+
+    # ------------------------------------------------------------- client --
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
+               eos_token: Optional[int] = None) -> TokenStream:
+        """Register a request; returns its ``TokenStream``. Stamps the
+        submission time — the TTFT anchor, so queue wait counts."""
+        now = time.perf_counter()
+        with self._id_lock:
+            rid = self._next_id
+            self._next_id += 1
+        req = Request(req_id=rid, prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens, eos_token=eos_token,
+                      arrival_time=now, submit_time=now)
+        stream = TokenStream(req)
+        self._submit_q.put((req, stream))
+        return stream
+
+    def stream(self, handle: TokenStream):
+        """Yield the request's generated token ids until completion."""
+        return iter(handle)
+
+    def cancel(self, handle: TokenStream) -> None:
+        """Abandon a request: the loop releases its pool pages and lane on
+        its next turn; still-pipelined samples are dropped at emission and
+        the stream closes."""
+        self._cancelled.add(handle.req.req_id)
+
+    # --------------------------------------------------------- emit worker --
+    def _emit_worker(self) -> None:
+        """The ONLY host sync: drain dispatched steps in device order and
+        convert the sampled tokens to host memory off the loop's critical
+        path."""
+        while True:
+            item = self._emit_q.get()
+            if item is None:
+                return
+            sb, toks_dev = item
+            self._done_q.put((sb, np.asarray(toks_dev)))
+
+    # ---------------------------------------------------------------- loop --
+    def _drain_submissions(self) -> None:
+        while True:
+            try:
+                req, stream = self._submit_q.get_nowait()
+            except queue.Empty:
+                return
+            self._streams[req.req_id] = stream
+            self.engine.add_request(req)
+
+    def _drain_done(self, block: bool) -> bool:
+        """Apply one completed step's host tokens: decrement in-flight
+        counters, drop post-EOS / cancelled samples, route the rest to
+        their streams, retire finished requests."""
+        try:
+            sb, toks = self._done_q.get(block=block)
+        except queue.Empty:
+            return False
+        self._inflight_steps -= 1
+        eng = self.engine
+        now = time.perf_counter()
+        finished: List[Request] = []
+        for req, first, idx in sb.samples:
+            emitted = eng._emit(req, int(toks[idx]), now, first=first)
+            stream = self._streams.get(req.req_id)
+            if emitted and stream is not None:
+                stream.put(int(toks[idx]))
+            finished.append(req)
+        eng._finish_done(finished)
+        for req in finished:
+            if req.state is RequestState.FINISHED:
+                self._close_stream(req)
+        eng._update_pool_stats()
+        return True
+
+    def _close_stream(self, req: Request) -> None:
+        stream = self._streams.pop(req.req_id, None)
+        if stream is not None:
+            stream.close()
+        self._cancelled.discard(req.req_id)
+
+    def _apply_cancels(self) -> None:
+        """Release cancelled requests IMMEDIATELY — pool pages and lane
+        back to the free lists, stream closed. Already-dispatched steps
+        that still reference the freed pages are safe: the device executes
+        steps in dispatch order, so any reuse of those pages happens in a
+        LATER step; their sampled tokens are dropped at emission
+        (``Engine._emit`` checks CANCELLED)."""
+        if not self._cancelled:
+            return
+        sched = self.engine.scheduler
+        for req in (list(sched.running.values()) + list(sched.waiting)):
+            if req.req_id in self._cancelled:
+                sched.release(req)
+                self._close_stream(req)
+
+    def _dispatch_one(self) -> bool:
+        """Build + dispatch ONE device step without waiting for results."""
+        eng = self.engine
+        plan = eng.scheduler.schedule_step()
+        if plan.empty:
+            return False
+        sb = eng._build_step(plan, device_feed=True)
+        toks_dev, self._lane_tok = eng._dispatch_async(sb, self._lane_tok)
+        # host metadata advances at DISPATCH time so the next plan can be
+        # built immediately; emission-side effects wait for the tokens
+        eng._note_executed(sb)
+        for req, _, _ in sb.samples:
+            req.inflight += 1
+        self._inflight_steps += 1
+        self._emit_q.put((sb, toks_dev))
+        return True
+
+    def _loop_once(self) -> bool:
+        """One scheduling turn. Returns True if anything happened."""
+        self._drain_submissions()
+        progressed = False
+        while self._drain_done(block=False):
+            progressed = True
+        self._apply_cancels()
+        if self._inflight_steps < self.depth:
+            if self._dispatch_one():
+                return True
+        if not progressed and self._inflight_steps:
+            # pipeline full (or nothing plannable): block for the oldest
+            # dispatched step instead of spinning
+            progressed = self._drain_done(block=True)
+        return progressed
+
+    @property
+    def _has_work(self) -> bool:
+        return (self.engine.scheduler.has_work or self._inflight_steps > 0
+                or not self._submit_q.empty())
+
+    def run_until_idle(self, max_steps: int = 1_000_000) -> None:
+        """Drive the pipeline until every submitted request is finished,
+        rejected, or cancelled."""
+        steps = 0
+        while steps < max_steps:
+            self._drain_submissions()
+            if not self._has_work:
+                break
+            self._loop_once()
+            steps += 1
+        # surface rejections (no device step will ever touch them)
+        for rid, stream in list(self._streams.items()):
+            if stream.req.state is RequestState.REJECTED:
+                self._close_stream(stream.req)
+
+    def close(self) -> None:
+        self._emit_q.put(None)
+        self._emitter.join(timeout=5.0)

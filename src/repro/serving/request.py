@@ -12,6 +12,15 @@ States: WAITING -> RUNNING -> FINISHED, plus
               effective prompt is ``prompt + output`` (everything generated
               so far is re-prefilled — possibly straight from the prefix
               cache), so greedy decoding resumes token-for-token.
+  CANCELLED — the client gave up (``AsyncEngine.cancel``): pool pages are
+              released, the lane freed, and any still-in-flight sampled
+              tokens are dropped at emission.
+
+Latency anchors: ``submit_time`` is stamped when the CLIENT hands the
+request over (Engine.generate / AsyncEngine.submit — the TTFT anchor, so
+queue wait counts); ``enqueue_time`` when the scheduler queue receives it;
+``admit_time`` at first lane admission (queue_wait = admit - submit);
+``prefill_time`` at first-token emission.
 """
 from __future__ import annotations
 
@@ -28,6 +37,7 @@ class RequestState(enum.Enum):
     FINISHED = "finished"
     REJECTED = "rejected"
     PREEMPTED = "preempted"
+    CANCELLED = "cancelled"
 
 
 @dataclass
@@ -58,10 +68,16 @@ class Request:
                                              # incremental snapshot keying,
                                              # recurrent families)
     enqueue_time: float = -1.0               # perf_counter at add_request
-                                             # (TTFT anchor)
+    submit_time: float = -1.0                # perf_counter at client submit
+                                             # (TTFT / queue-wait anchor;
+                                             # falls back to enqueue_time)
+    admit_time: float = -1.0                 # first lane admission
     prefill_time: float = -1.0               # first-token timestamp (kept
                                              # across preemptions)
     finish_time: float = -1.0
+    inflight: int = 0                        # tokens sampled on device but
+                                             # not yet host-emitted (async
+                                             # pipeline; 0 in the sync loop)
 
     @property
     def prompt_len(self) -> int:

@@ -43,6 +43,7 @@ Each engine step is composed under a TOKEN BUDGET (Sarathi-style):
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional
@@ -250,6 +251,10 @@ class Scheduler:
                 break
             if r.state is not RequestState.RUNNING:
                 continue                               # preempted this step
+            if r.num_generated + r.inflight >= r.max_new_tokens:
+                continue   # async pipeline: every remaining output token is
+                           # already sampled on device (never binds when the
+                           # sync loop drains emissions each step)
             slot = self._append_with_preemption(r)
             if slot is None:
                 continue
@@ -276,6 +281,11 @@ class Scheduler:
         # 3) admissions (shard-affine placement, chunked for every family)
         while self.waiting and self.free_lanes and budget > 0:
             r = self.waiting[0]
+            if r.inflight > 0:
+                # async pipeline: a preempted request with sampled-but-not-
+                # emitted tokens has an incomplete effective_prompt — hold
+                # the queue (it sits at the FRONT) until they drain
+                break
             eff = r.effective_prompt()
             total = len(eff) + self.extra_tokens
             # a request is pinned to ONE shard, so the largest shard's page
@@ -301,6 +311,8 @@ class Scheduler:
             self._next_pool_id += 1
             r.pool_id = pool_id
             r.shard = shard
+            if r.admit_time < 0:
+                r.admit_time = time.perf_counter()   # queue-wait anchor
             self.waiting.popleft()
             lane = self.free_lanes.pop()
             r.lane = lane
@@ -334,6 +346,21 @@ class Scheduler:
         self.free_lanes.append(req.lane)
         req.lane = -1
 
+    def release(self, req: Request) -> None:
+        """Cancel support: drop ``req`` wherever it currently lives — free
+        its pool pages and lane if running, or unlink it from the waiting
+        queue. Safe with in-flight sampled tokens: the async pipeline drops
+        them at emission (state CANCELLED), and device-order execution
+        keeps already-dispatched steps ahead of any page reuse."""
+        if req.state is RequestState.RUNNING:
+            self.manager.free(req.pool_id)
+            del self.running[req.lane]
+            self.free_lanes.append(req.lane)
+            req.lane = -1
+        elif req in self.waiting:
+            self.waiting.remove(req)
+        req.state = RequestState.CANCELLED
+
     # ------------------------------------------------------------ queries --
     def active_lanes(self) -> List[int]:
         return sorted(self.running)
@@ -348,3 +375,52 @@ class Scheduler:
 
 def _younger(a: Request, b: Request) -> bool:
     return (a.arrival_time, a.req_id) > (b.arrival_time, b.req_id)
+
+
+# ----------------------------------------------- concat-prefill packing ----
+@dataclass
+class PackedRow:
+    """One engine-step row holding SEVERAL requests' prefill chunks as
+    segments — the concat-prefill layout the segment-aware chunk kernels
+    execute (per-row segment ids keep attention from leaking across
+    prompts)."""
+    chunks: List[PrefillChunk] = field(default_factory=list)
+    tokens: int = 0                # occupied query columns
+    pages: int = 0                 # page-table slots used
+    finals: int = 0                # chunks sampling a first token
+    shard: int = -1                # all chunks share one KV shard
+
+
+def chunk_pages(c: PrefillChunk, page_size: int) -> int:
+    """Page-table slots chunk ``c`` needs: its request's WHOLE cached
+    history through the end of the chunk (the chunk attends everything)."""
+    return -(-(c.start + c.n) // page_size)
+
+
+def pack_rows(chunks: List[PrefillChunk], width: int, pack_slots: int,
+              pages_per_lane: int, page_size: int) -> List[PackedRow]:
+    """First-fit-decreasing packing of prefill chunks into rows of
+    ``width`` query columns. A chunk is NEVER split: it lands whole in one
+    row (and a request's pages live on one shard, so neither crosses
+    shards). Row constraints: total tokens <= width, page-table slots <=
+    ``pages_per_lane`` (the step's page-table width), sampled chunks
+    (final=True) <= ``pack_slots`` (the packed step's per-row logits
+    slots), and one KV shard per row."""
+    rows: List[PackedRow] = []
+    for c in sorted(chunks, key=lambda c: -c.n):
+        np_c = chunk_pages(c, page_size)
+        shard = c.req.shard
+        for row in rows:
+            if (row.tokens + c.n <= width
+                    and row.pages + np_c <= pages_per_lane
+                    and row.finals + int(c.final) <= pack_slots
+                    and row.shard == shard):
+                break
+        else:
+            row = PackedRow(shard=shard)
+            rows.append(row)
+        row.chunks.append(c)
+        row.tokens += c.n
+        row.pages += np_c
+        row.finals += int(c.final)
+    return rows
