@@ -1,0 +1,43 @@
+"""cooptlint — repo-specific static analysis for the serving stack's
+unwritten contracts.
+
+PRs 1-6 grew a serving substrate whose correctness rests on conventions no
+generic linter knows about: the async pipeline is only sound if exactly one
+code path host-syncs, buffer donation is only sound if no caller reads a
+donated binding after dispatch, AOT warmup's zero-retrace guarantee is only
+sound if jitted impls never capture mutable state, and every Pallas kernel
+must honor the ``-1`` page sentinel and scalar-prefetch-only ``index_map``
+contracts. Each pass here descends from a real incident recorded in
+CHANGES.md; see the individual pass modules for the lineage.
+
+Passes (stable finding codes):
+
+  COOPT001  host-sync        stray device->host syncs on the serving step
+                             path (``repro.analysis.host_sync``)
+  COOPT002  use-after-donation  reads of a donated jit argument after the
+                             donating call (``repro.analysis.donation``)
+  COOPT003  mesh-ctx scoping  un-scoped ``ops.set_mesh_ctx`` calls
+                             (``repro.analysis.mesh_ctx``)
+  COOPT004  trace-safety     jitted fns capturing mutable state; full-pool
+                             gathers on the kernel hot path
+                             (``repro.analysis.trace_safety``)
+  COOPT005  Pallas contracts  index_map / sentinel / VMEM-budget checks
+                             (``repro.analysis.pallas_vmem``)
+
+Usage::
+
+    python -m repro.analysis [paths...] [--format text|json]
+        [--baseline FILE] [--write-baseline] [--vmem-report FILE]
+        [--vmem-budget BYTES] [--select CODES]
+
+Inline suppression: append ``# coopt: allow[COOPT001]`` (comma-separate
+multiple codes) to the offending line or the line directly above it, with a
+short rationale in the surrounding comment. Grandfathered findings live in
+the committed baseline (``src/repro/analysis/baseline.json``), each with a
+one-line justification; the CLI exits non-zero on any finding that is
+neither suppressed nor baselined.
+"""
+from repro.analysis.core import (Finding, load_baseline, run_suite,
+                                 write_baseline)
+
+__all__ = ["Finding", "run_suite", "load_baseline", "write_baseline"]

@@ -1,0 +1,127 @@
+"""CLI for cooptlint: ``python -m repro.analysis [paths...]``.
+
+Exit status is 0 iff every finding is suppressed inline or carried by the
+committed baseline — so CI can run this as a blocking gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List
+
+from repro.analysis.core import (Finding, load_baseline, run_suite,
+                                 write_baseline)
+
+_DEFAULT_BASELINE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "baseline.json")
+
+
+def _fmt_bytes(n: int) -> str:
+    return f"{n / (1024 * 1024):.2f} MiB"
+
+
+def _print_text(live: List[Finding], suppressed: List[Finding],
+                baselined: List[Finding], vmem_report, show_vmem: bool
+                ) -> None:
+    for f in live:
+        sym = f" [{f.symbol}]" if f.symbol else ""
+        print(f"{f.path}:{f.line}: {f.code}{sym}: {f.message}")
+    if show_vmem and vmem_report:
+        print()
+        print("VMEM report (est. per-kernel working set, "
+              "blocks x2 double-buffered + scratch):")
+        for e in vmem_report:
+            mark = "OK " if e["under_budget"] else "OVER"
+            extra = ""
+            if e["unresolved_dims"]:
+                extra = (" (unresolved dims default to 128: "
+                         + ", ".join(e["unresolved_dims"]) + ")")
+            print(f"  {mark} {e['kernel']:<45s} "
+                  f"{_fmt_bytes(e['est_vmem_bytes']):>10s} / "
+                  f"{_fmt_bytes(e['budget_bytes'])}"
+                  f"  ({e['path']}:{e['line']}){extra}")
+    print()
+    print(f"cooptlint: {len(live)} finding(s), {len(suppressed)} "
+          f"suppressed inline, {len(baselined)} baselined")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="cooptlint: static analysis for the serving stack's "
+                    "trace-safety, donation, host-sync, mesh-ctx, and "
+                    "Pallas kernel contracts")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files or directories to lint (default: src/repro)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--baseline", default=_DEFAULT_BASELINE,
+                    help="baseline JSON of grandfathered findings "
+                         "(default: the committed src/repro/analysis/"
+                         "baseline.json); pass '' to disable")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write the current live findings to --baseline "
+                         "(each entry then needs a justification) and "
+                         "exit 0")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated finding codes to run, e.g. "
+                         "COOPT001,COOPT005")
+    ap.add_argument("--vmem-budget", type=int, default=None,
+                    help="per-kernel VMEM budget in bytes "
+                         "(default: 8388608 = half of ~16 MiB/core)")
+    ap.add_argument("--vmem-report", default=None, metavar="FILE",
+                    help="also write the per-kernel VMEM report as JSON")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or ["src/repro"]
+    select = ([c.strip() for c in args.select.split(",") if c.strip()]
+              if args.select else None)
+    baseline = args.baseline or None
+
+    live, suppressed, baselined, vmem_report = run_suite(
+        paths, select=select, baseline_path=baseline,
+        vmem_budget=args.vmem_budget)
+
+    if args.write_baseline:
+        if not baseline:
+            print("--write-baseline requires --baseline", file=sys.stderr)
+            return 2
+        write_baseline(baseline, live)
+        print(f"wrote {len(live)} finding(s) to {baseline}; fill in the "
+              "justification for each")
+        return 0
+
+    if args.vmem_report:
+        with open(args.vmem_report, "w", encoding="utf-8") as fh:
+            json.dump({"budget_bytes": args.vmem_budget or 8 * 1024 * 1024,
+                       "kernels": vmem_report}, fh, indent=2)
+            fh.write("\n")
+
+    # stale-baseline hygiene: entries that no longer match anything are
+    # reported (non-fatal) so the baseline shrinks over time
+    stale = 0
+    if baseline:
+        matched = {f.match_key() for f in baselined}
+        from repro.analysis.core import baseline_keys
+        stale = len(baseline_keys(load_baseline(baseline)) - matched)
+
+    if args.format == "json":
+        print(json.dumps({
+            "findings": [f.to_json() for f in live],
+            "suppressed": [f.to_json() for f in suppressed],
+            "baselined": [f.to_json() for f in baselined],
+            "stale_baseline_entries": stale,
+            "vmem_report": vmem_report,
+        }, indent=2))
+    else:
+        _print_text(live, suppressed, baselined, vmem_report,
+                    show_vmem=True)
+        if stale:
+            print(f"note: {stale} baseline entr{'y' if stale == 1 else 'ies'} "
+                  "no longer match any finding — prune the baseline")
+    return 1 if live else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

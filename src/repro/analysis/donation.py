@@ -1,0 +1,223 @@
+"""COOPT002 — use-after-donation.
+
+Lineage: PR 6 made the engine donate its largest buffers — the whole paged
+KV pool and the async pipeline's ``lane_tok`` feed — into every step
+(``jax.jit(..., donate_argnums=...)``, ``serving/engine.py``), so XLA can
+update pages in place instead of copying the pool each step. Donation's
+contract is unforgiving: after the donating call, the caller's binding
+refers to a buffer the runtime may already have reused. Reading it again
+is at best a ``DeviceArray has been deleted`` crash and at worst (through
+aliasing layers like the shard_map write path) silently corrupt pool
+lines — the same class as PR 5's slot-wrap incident, where a stale mapping
+let a write land on a live pool line.
+
+Contract enforced: for every ``jax.jit(..., donate_argnums=...)`` site,
+walk each caller and flag any read of the donated argument's binding after
+the call, unless the call statement itself rebinds it (the engine's
+idiom: ``logits, self.cache = fn(..., self.cache, ...)``).
+
+Scope and honesty: the analysis resolves donating callables bound to
+locals / ``self.`` attributes, dict-of-donating-fns lookups (the
+``_execute`` idiom), and methods that RETURN a donating jit (the
+``StepBundle.jitted`` idiom). Calls it cannot resolve (``fn(*args)``)
+are skipped, not guessed at.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import (FileCtx, Finding, dotted_name,
+                                 enclosing_index, scope_of)
+
+CODE = "COOPT002"
+
+
+def _donate_argnums(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """The donate_argnums of a ``jax.jit(...)`` call, else None."""
+    if dotted_name(call.func) not in ("jax.jit", "jit"):
+        return None
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            v = kw.value
+            if isinstance(v, ast.Tuple):
+                nums = []
+                for e in v.elts:
+                    if isinstance(e, ast.Constant) and isinstance(e.value,
+                                                                  int):
+                        nums.append(e.value)
+                return tuple(nums)
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return (v.value,)
+            return ()  # dynamic donate spec: registered, argnums unknown
+    return None
+
+
+def _binding_repr(node: ast.AST) -> Optional[str]:
+    """Canonical text for a simple binding (Name or self.attr chain)."""
+    name = dotted_name(node)
+    if name is None:
+        return None
+    return name
+
+
+class _Registry:
+    """Donating callables: binding-text -> donated argnums; plus method
+    names whose RETURN VALUE is a donating jit (``jitted`` idiom)."""
+
+    def __init__(self):
+        self.bindings: Dict[str, Tuple[int, ...]] = {}
+        self.returning_methods: Dict[str, Tuple[int, ...]] = {}
+
+    def register_from(self, files: List[FileCtx]) -> None:
+        for f in files:
+            for node in ast.walk(f.tree):
+                if isinstance(node, ast.Assign) and \
+                        isinstance(node.value, ast.Call):
+                    nums = _donate_argnums(node.value)
+                    if nums:
+                        for t in node.targets:
+                            b = _binding_repr(t)
+                            if b:
+                                self.bindings[b] = nums
+                elif isinstance(node, ast.Return) and \
+                        isinstance(node.value, ast.Call):
+                    nums = _donate_argnums(node.value)
+                    if nums:
+                        # find the enclosing def name via the scope index
+                        idx = enclosing_index(f.tree)
+                        q = scope_of(idx, node.lineno)
+                        if q:
+                            self.returning_methods[q.split(".")[-1]] = nums
+
+    def resolve_local(self, fn_node: ast.AST,
+                      local: Dict[str, Tuple[int, ...]]) -> \
+            Optional[Tuple[int, ...]]:
+        b = _binding_repr(fn_node)
+        if b is not None:
+            if b in local:
+                return local[b]
+            if b in self.bindings:
+                return self.bindings[b]
+        return None
+
+
+def _loads_of(node: ast.AST, binding: str) -> List[ast.AST]:
+    """READ occurrences of ``binding`` inside ``node`` (stores excluded)."""
+    hits = []
+    for n in ast.walk(node):
+        if _binding_repr(n) == binding and \
+                isinstance(getattr(n, "ctx", None), ast.Load):
+            # skip the inner parts of a longer attribute chain
+            hits.append(n)
+    return hits
+
+
+def _stores_binding(stmt: ast.stmt, binding: str) -> bool:
+    """Does ``stmt`` (re)bind ``binding`` (plain assignment targets)?"""
+    targets = []
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    for t in targets:
+        for el in (t.elts if isinstance(t, (ast.Tuple, ast.List)) else [t]):
+            if _binding_repr(el) == binding:
+                return True
+    return False
+
+
+def _scan_function(f: FileCtx, qual: str, fn: ast.AST, reg: _Registry,
+                   out: List[Finding]) -> None:
+    # local donating bindings inside this function:
+    #   fn = {"a": self._x_fn, ...}[key]   (all values donating, same nums)
+    #   fn = self._x_fn
+    #   fn = bundle.jitted()
+    local: Dict[str, Tuple[int, ...]] = {}
+    stmts = list(ast.walk(fn))
+    for node in stmts:
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        tgt = _binding_repr(node.targets[0])
+        if tgt is None:
+            continue
+        v = node.value
+        if isinstance(v, ast.Subscript) and isinstance(v.value, ast.Dict):
+            sets: Set[Tuple[int, ...]] = set()
+            for dv in v.value.values:
+                nums = reg.resolve_local(dv, {})
+                if nums is None:
+                    sets.clear()
+                    break
+                sets.add(nums)
+            if len(sets) == 1:
+                local[tgt] = sets.pop()
+        elif isinstance(v, ast.Call) and isinstance(v.func, ast.Attribute) \
+                and v.func.attr in reg.returning_methods:
+            local[tgt] = reg.returning_methods[v.func.attr]
+        else:
+            nums = reg.resolve_local(v, {})
+            if nums is not None:
+                local[tgt] = nums
+
+    # walk statements; for each donating call, check reads-after
+    body_stmts = [n for n in ast.walk(fn) if isinstance(n, ast.stmt)]
+    for stmt in body_stmts:
+        for call in [n for n in ast.walk(stmt)
+                     if isinstance(n, ast.Call)]:
+            nums = reg.resolve_local(call.func, local)
+            if nums is None:
+                # direct jax.jit(...)(...) invocation
+                if isinstance(call.func, ast.Call):
+                    nums = _donate_argnums(call.func)
+                if not nums:
+                    continue
+            if any(isinstance(a, ast.Starred) for a in call.args):
+                continue  # unresolvable splat — skipped, not guessed
+            for argnum in nums:
+                if argnum >= len(call.args):
+                    continue
+                donated = _binding_repr(call.args[argnum])
+                if donated is None:
+                    continue
+                if _stores_binding(stmt, donated):
+                    continue  # rebound by the call's own statement
+                _flag_reads_after(f, qual, fn, stmt, call, donated, out)
+
+
+def _flag_reads_after(f: FileCtx, qual: str, fn: ast.AST, call_stmt: ast.stmt,
+                      call: ast.Call, donated: str,
+                      out: List[Finding]) -> None:
+    call_end = getattr(call_stmt, "end_lineno", call_stmt.lineno)
+    stmts = sorted((n for n in ast.walk(fn) if isinstance(n, ast.stmt)),
+                   key=lambda n: n.lineno)
+    for stmt in stmts:
+        if stmt.lineno <= call_end:
+            continue
+        if _stores_binding(stmt, donated):
+            return  # rebound before any further read we'd flag
+        reads = _loads_of(stmt, donated)
+        if _stores_binding(stmt, donated) is False and reads:
+            out.append(Finding(
+                code=CODE, path=f.path, line=reads[0].lineno, symbol=qual,
+                message=(f"read of donated binding '{donated}' after the "
+                         f"donating call at line {call.lineno} "
+                         "(donate_argnums): the buffer may already be "
+                         "reused — rebind the result or drop the read")))
+            return
+
+
+def run(files: List[FileCtx]) -> List[Finding]:
+    reg = _Registry()
+    reg.register_from(files)
+    out: List[Finding] = []
+    for f in files:
+        for qual, fn, _cls in [(q, n, c) for q, n, c in
+                               _iter_funcs(f.tree)]:
+            _scan_function(f, qual, fn, reg, out)
+    return out
+
+
+def _iter_funcs(tree: ast.Module):
+    from repro.analysis.core import iter_scopes
+    return iter_scopes(tree)

@@ -1,0 +1,99 @@
+"""COOPT001 — host-sync discipline on the serving step path.
+
+Lineage: PR 6's whole design exists to prevent this class. The async
+pipeline (``serving.frontend``) overlaps host plan-building with device
+execution ONLY because exactly one code path blocks on device values — the
+emit worker's ``np.asarray(tokens)``. Any other ``np.asarray`` /
+``.block_until_ready()`` / ``.item()`` / ``float()`` applied to a device
+value on the step path re-serializes the pipeline: the host stalls, the
+device starves, and the dispatch-depth-2 win silently evaporates (the
+pipeline-stall class CHANGES.md PR 6 calls out — "a device-resident
+lane_tok feed so decode plans never wait for token values").
+
+Contract enforced: inside the serving modules (``serving/engine.py``,
+``serving/frontend.py``) every host-sync pattern must live in one of the
+ALLOWED scopes below — the sync loop's designated host boundary
+(``Engine._execute`` / ``Engine._sample``), the async pipeline's single
+sync point (``AsyncEngine._emit_worker``), or host-side setup/client-API
+scopes that never run per-step. Anything else is a finding: move the sync
+to the emit worker, keep the value on device, or — if the sync is a
+deliberate design decision — add an inline ``# coopt: allow[COOPT001]``
+with a rationale (canonical example: ``EngineStats._pct``, which applies
+``float``/``np.asarray`` to host-side Python lists, not device values).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.core import (FileCtx, Finding, dotted_name,
+                                 enclosing_index, scope_of)
+
+CODE = "COOPT001"
+
+# modules under the host-sync contract (matched by path suffix)
+CHECKED_SUFFIXES = ("serving/engine.py", "serving/frontend.py")
+
+# scopes where host syncs are part of the design, not a pipeline stall
+ALLOWED_SCOPES = frozenset({
+    # setup / teardown — never on the per-step path
+    "Engine.__init__", "Engine._place_cache", "Engine.warmup",
+    "Engine._dummy_batch", "Engine._warmup_lattice",
+    "AsyncEngine.__init__", "AsyncEngine.close",
+    # the synchronous loop's designated host boundary: _execute blocks on
+    # the step it just dispatched, _sample converts its logits' samples
+    "Engine._execute", "Engine._sample",
+    # client API — coerces caller-provided host prompts, stamps times
+    "Engine.generate", "Engine.add_request", "AsyncEngine.submit",
+    # THE async host sync: the emit worker owns the only blocking convert
+    "AsyncEngine._emit_worker",
+})
+
+# call patterns that force a device->host sync when fed a device value
+_SYNC_FUNCS = {"np.asarray", "numpy.asarray", "np.array", "numpy.array",
+               "jax.device_get"}
+_SYNC_METHODS = {"block_until_ready", "item"}
+
+
+def _is_checked(path: str) -> bool:
+    return any(path.endswith(s) for s in CHECKED_SUFFIXES)
+
+
+def _sync_kind(node: ast.Call):
+    """Return a description if this call matches a sync pattern."""
+    fn = node.func
+    name = dotted_name(fn)
+    if name in _SYNC_FUNCS:
+        return f"{name}(...)"
+    if isinstance(fn, ast.Attribute) and fn.attr in _SYNC_METHODS \
+            and not isinstance(fn.value, ast.Constant):
+        return f".{fn.attr}()"
+    if isinstance(fn, ast.Name) and fn.id == "float" and node.args \
+            and not isinstance(node.args[0], ast.Constant):
+        return "float(...)"
+    return None
+
+
+def run(files: List[FileCtx]) -> List[Finding]:
+    out: List[Finding] = []
+    for f in files:
+        if not _is_checked(f.path):
+            continue
+        index = enclosing_index(f.tree)
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            kind = _sync_kind(node)
+            if kind is None:
+                continue
+            scope = scope_of(index, node.lineno)
+            if scope in ALLOWED_SCOPES:
+                continue
+            out.append(Finding(
+                code=CODE, path=f.path, line=node.lineno, symbol=scope,
+                message=(f"host sync {kind} on the serving step path "
+                         f"(scope {scope or '<module>'}): only "
+                         "AsyncEngine._emit_worker (async) and "
+                         "Engine._execute/_sample (sync loop) may block "
+                         "on device values")))
+    return out

@@ -67,11 +67,14 @@ def kv_cache_write(k_new, v_new, slot_idx, k_cache, v_cache, k_scale, v_scale,
     sentinel = NS - 1
     slots = jnp.where(slot_idx < 0, sentinel, slot_idx).astype(jnp.int32)
 
+    # no jnp.maximum clamp needed: -1 slots were pre-mapped to the pool's
+    # reserved sentinel line (`slots = jnp.where(slot_idx < 0, sentinel,
+    # ...)` above), so -1 can never reach these index_maps
     def cache_idx(b, s, slot):
-        return (slot[b, s], 0, 0)
+        return (slot[b, s], 0, 0)  # coopt: allow[COOPT005]
 
     def scale_idx(b, s, slot):
-        return (slot[b, s], 0)
+        return (slot[b, s], 0)  # coopt: allow[COOPT005]
 
     kern = functools.partial(_write_kernel, opt_kv=opt_kv)
     out = pl.pallas_call(

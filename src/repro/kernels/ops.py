@@ -84,18 +84,24 @@ def mesh_ctx_scope(ctx: Optional[_sh.ShardCtx]):
 
 
 # ---------------------------------------------------------------------------
+# NOTE: every jitted wrapper below takes `interpret` as a STATIC argument
+# fed from the unjitted public dispatcher at call time. Reading the module
+# global INTERPRET inside the jitted body would bake its trace-time value
+# into the cached executable, so configure_for_backend()'s post-import flip
+# would be silently ignored (COOPT004, `python -m repro.analysis`).
 @partial(jax.jit, static_argnames=("opt_kv", "opt_gqa", "window",
-                                   "sink_pages"))
+                                   "sink_pages", "interpret"))
 def _paged_pool_decode_single(q, kv_pages, scale_pages, cache_len,
                               phys_table, log_table, *, opt_kv: bool,
-                              opt_gqa: bool, window: int, sink_pages: int):
+                              opt_gqa: bool, window: int, sink_pages: int,
+                              interpret: bool):
     ks = scale_pages[0] if scale_pages is not None else None
     vs = scale_pages[1] if scale_pages is not None else None
     return _pd.paged_pool_decode(
         q, kv_pages[0], kv_pages[1], ks, vs, cache_len.astype(jnp.int32),
         phys_table.astype(jnp.int32), log_table.astype(jnp.int32),
         opt_kv=opt_kv, opt_gqa=opt_gqa, window=window,
-        sink_pages=sink_pages, interpret=INTERPRET)
+        sink_pages=sink_pages, interpret=interpret)
 
 
 def paged_pool_decode(q, kv_pages, scale_pages, cache_len, phys_table,
@@ -112,12 +118,12 @@ def paged_pool_decode(q, kv_pages, scale_pages, cache_len, phys_table,
     return _paged_pool_decode_single(
         q, kv_pages, scale_pages, cache_len, phys_table, log_table,
         opt_kv=opt_kv, opt_gqa=opt_gqa, window=window,
-        sink_pages=sink_pages)
+        sink_pages=sink_pages, interpret=INTERPRET)
 
 
-@partial(jax.jit, static_argnames=("opt_kv",))
+@partial(jax.jit, static_argnames=("opt_kv", "interpret"))
 def _kv_cache_write_single(kv_cache, scale_cache, k_new, v_new, slot_idx, *,
-                           opt_kv: bool):
+                           opt_kv: bool, interpret: bool):
     _, Pt, ps, Hkv, D = kv_cache.shape
     flat_k = kv_cache[0].reshape(Pt * ps, Hkv, D)
     flat_v = kv_cache[1].reshape(Pt * ps, Hkv, D)
@@ -129,7 +135,7 @@ def _kv_cache_write_single(kv_cache, scale_cache, k_new, v_new, slot_idx, *,
         s_v = s_k
     k_c, v_c, ks_c, vs_c = _kw.kv_cache_write(
         k_new, v_new, slot_idx.astype(jnp.int32), flat_k, flat_v, s_k, s_v,
-        opt_kv=opt_kv, interpret=INTERPRET)
+        opt_kv=opt_kv, interpret=interpret)
     kv = jnp.stack([k_c.reshape(Pt, ps, Hkv, D),
                     v_c.reshape(Pt, ps, Hkv, D)])
     if scale_cache is not None:
@@ -149,7 +155,8 @@ def kv_cache_write(kv_cache, scale_cache, k_new, v_new, slot_idx, *,
         return _sh.kv_pool_write(_MESH_CTX, kv_cache, scale_cache, k_new,
                                  v_new, slot_idx, opt_kv=opt_kv)
     return _kv_cache_write_single(kv_cache, scale_cache, k_new, v_new,
-                                  slot_idx, opt_kv=opt_kv)
+                                  slot_idx, opt_kv=opt_kv,
+                                  interpret=INTERPRET)
 
 
 def latent_pool_write(lat_cache, scale_cache, latent, slot_idx, *,
@@ -179,25 +186,33 @@ def latent_pool_write(lat_cache, scale_cache, latent, slot_idx, *,
 
 
 @partial(jax.jit, static_argnames=("window", "block_q", "block_k",
-                                   "q_offset"))
-def flash_prefill(q, k, v, *, window: int = 0, block_q: int = 256,
-                  block_k: int = 256, q_offset: int = 0):
+                                   "q_offset", "interpret"))
+def _flash_prefill_single(q, k, v, *, window: int, block_q: int,
+                          block_k: int, q_offset: int, interpret: bool):
     return _fp.flash_prefill(q, k, v, window=window, block_q=block_q,
                              block_k=block_k, q_offset=q_offset,
-                             interpret=INTERPRET)
+                             interpret=interpret)
+
+
+def flash_prefill(q, k, v, *, window: int = 0, block_q: int = 256,
+                  block_k: int = 256, q_offset: int = 0):
+    """Self-attention prefill over in-chunk K/V (no pool paging)."""
+    return _flash_prefill_single(q, k, v, window=window, block_q=block_q,
+                                 block_k=block_k, q_offset=q_offset,
+                                 interpret=INTERPRET)
 
 
 @partial(jax.jit, static_argnames=("sm_scale", "opt_kv", "window",
-                                   "sink_pages"))
+                                   "sink_pages", "interpret"))
 def _paged_latent_decode_single(q_lat, q_rope, lat_pages, scale_pages,
                                 cache_len, phys_table, log_table, *,
                                 sm_scale: float, opt_kv: bool, window: int,
-                                sink_pages: int):
+                                sink_pages: int, interpret: bool):
     return _ld.paged_latent_decode(
         q_lat, q_rope, lat_pages, scale_pages, cache_len.astype(jnp.int32),
         phys_table.astype(jnp.int32), log_table.astype(jnp.int32),
         sm_scale=sm_scale, opt_kv=opt_kv, window=window,
-        sink_pages=sink_pages, interpret=INTERPRET)
+        sink_pages=sink_pages, interpret=interpret)
 
 
 def paged_latent_decode(q_lat, q_rope, lat_pages, scale_pages, cache_len,
@@ -216,19 +231,20 @@ def paged_latent_decode(q_lat, q_rope, lat_pages, scale_pages, cache_len,
     return _paged_latent_decode_single(
         q_lat, q_rope, lat_pages, scale_pages, cache_len, phys_table,
         log_table, sm_scale=sm_scale, opt_kv=opt_kv, window=window,
-        sink_pages=sink_pages)
+        sink_pages=sink_pages, interpret=INTERPRET)
 
 
 @partial(jax.jit, static_argnames=("sm_scale", "opt_kv", "window",
-                                   "sink_pages"))
+                                   "sink_pages", "interpret"))
 def _latent_chunk_prefill_single(q_lat, q_rope, positions, lat_pages,
                                  scale_pages, phys_table, seg_q, page_seg,
                                  page_base, *, sm_scale: float,
-                                 opt_kv: bool, window: int, sink_pages: int):
+                                 opt_kv: bool, window: int, sink_pages: int,
+                                 interpret: bool):
     return _lc.latent_chunk_prefill(
         q_lat, q_rope, positions.astype(jnp.int32), lat_pages, scale_pages,
         phys_table.astype(jnp.int32), sm_scale=sm_scale, opt_kv=opt_kv,
-        window=window, sink_pages=sink_pages, interpret=INTERPRET,
+        window=window, sink_pages=sink_pages, interpret=interpret,
         seg_q=seg_q, page_seg=page_seg, page_base=page_base)
 
 
@@ -253,21 +269,22 @@ def latent_chunk_prefill(q_lat, q_rope, positions, lat_pages, scale_pages,
     return _latent_chunk_prefill_single(
         q_lat, q_rope, positions, lat_pages, scale_pages, phys_table,
         seg_q, page_seg, page_base, sm_scale=sm_scale, opt_kv=opt_kv,
-        window=window, sink_pages=sink_pages)
+        window=window, sink_pages=sink_pages, interpret=INTERPRET)
 
 
 @partial(jax.jit, static_argnames=("opt_kv", "opt_gqa", "window",
-                                   "sink_pages"))
+                                   "sink_pages", "interpret"))
 def _paged_chunk_prefill_single(q, positions, kv_pages, scale_pages,
                                 phys_table, seg_q, page_seg, page_base, *,
                                 opt_kv: bool, opt_gqa: bool,
-                                window: int, sink_pages: int):
+                                window: int, sink_pages: int,
+                                interpret: bool):
     ks = scale_pages[0] if scale_pages is not None else None
     vs = scale_pages[1] if scale_pages is not None else None
     return _fc.flash_chunk_prefill(
         q, positions.astype(jnp.int32), kv_pages[0], kv_pages[1], ks, vs,
         phys_table.astype(jnp.int32), opt_kv=opt_kv, opt_gqa=opt_gqa,
-        window=window, sink_pages=sink_pages, interpret=INTERPRET,
+        window=window, sink_pages=sink_pages, interpret=interpret,
         seg_q=seg_q, page_seg=page_seg, page_base=page_base)
 
 
@@ -290,4 +307,4 @@ def paged_chunk_prefill(q, positions, kv_pages, scale_pages, phys_table, *,
     return _paged_chunk_prefill_single(
         q, positions, kv_pages, scale_pages, phys_table, seg_q, page_seg,
         page_base, opt_kv=opt_kv, opt_gqa=opt_gqa, window=window,
-        sink_pages=sink_pages)
+        sink_pages=sink_pages, interpret=INTERPRET)
