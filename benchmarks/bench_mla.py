@@ -37,15 +37,26 @@ def run(quick: bool = False):
                     "wall-clock; on TPU configure_for_backend() compiles "
                     "the kernels."),
            "serve": {}}
+    from repro.kernels import ops
     for label, uk in (("jnp", False), ("kernel", True)):
         r = serve_workload(ARCH + "-reduced", "coopt", requests=requests,
                            num_lanes=2, max_len=256,
                            max_new_tokens=new_toks, use_kernel=uk)
         out["serve"][label] = {k: r[k] for k in SERVE_KEYS}
+        # wall-clock honesty: interpret-mode kernel timings are emulator
+        # timings, never comparable to the compiled jnp path
+        out["serve"][label]["timing"] = ("interpret" if uk and ops.INTERPRET
+                                         else "compiled-xla")
         print(f"bench_mla serve[{label}]: "
               f"{r['throughput_tok_s']} tok/s, "
-              f"tpot p50/p95 = {r['tpot_p50_s']}/{r['tpot_p95_s']} s",
+              f"tpot p50/p95 = {r['tpot_p50_s']}/{r['tpot_p95_s']} s "
+              f"[{out['serve'][label]['timing']}]",
               flush=True)
+    # headline throughput considers ONLY compiled timings; an interpret-mode
+    # kernel run is excluded rather than mislabelled as kernel wall-clock
+    out["headline_throughput_tok_s"] = max(
+        (s["throughput_tok_s"] for s in out["serve"].values()
+         if s["timing"] != "interpret"), default=None)
 
     header = ["mode", "jnp_us_per_call", "hbm_bytes_per_call",
               "kernel_max_err"]

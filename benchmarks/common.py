@@ -72,6 +72,12 @@ def run_engine_workload(cfg, coopt, *, requests: int = 8, num_lanes: int = 3,
             s.peak_pages_in_use / max(s.pool_pages, 1), 4),
         "prefix_hit_rate": round(s.prefix_hit_rate(), 4),
         "preemptions": s.preemptions,
+        # cross-lane prefix sharing seen by decode steps (the page visits
+        # the kernels' visit grid dedups; see kernels.visits) — scalar
+        # counters ride in via latency_summary(), the histogram maps
+        # "lanes sharing a page" -> deduped visit count
+        "lanes_per_shared_page": {
+            str(k): v for k, v in sorted(s.lanes_per_shared_page.items())},
         # page-range sharding health (per-shard utilization + placement)
         "kv_shards": s.num_shards,
         "shard_peak_utilization": [

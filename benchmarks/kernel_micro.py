@@ -34,20 +34,32 @@ from benchmarks.common import write_csv
 
 
 def kernel_bytes_per_call(B, P, ps, Hkv, D, *, opt_kv, opt_pa, opt_gqa, Hq,
-                          cache_len):
-    """HBM->VMEM traffic of one decode-attention call (bytes)."""
+                          cache_len, shared_prefix_pages=0, lanes_sharing=0,
+                          share_visits=False):
+    """HBM->VMEM traffic of one decode-attention call (bytes).
+
+    ``shared_prefix_pages``/``lanes_sharing`` describe a prompt prefix whose
+    pages are refcount-shared by ``lanes_sharing`` lanes. The per-lane grid
+    streams each of those pages once PER LANE; the cross-lane visit grid
+    (``share_visits=True``, kernels.visits) streams each once TOTAL, so the
+    duplicate ``(lanes_sharing - 1) * shared`` page streams drop out."""
     kv_elt = 1 if opt_kv else 2                   # fp8 vs bf16
     pages_touched = (min((cache_len + ps - 1) // ps, P) if opt_pa else P)
+    page_streams = B * pages_touched              # per-lane page visits
+    if share_visits and lanes_sharing > 1 and shared_prefix_pages > 0:
+        shared = min(shared_prefix_pages, pages_touched)
+        page_streams -= (min(lanes_sharing, B) - 1) * shared
     streams = 1 if opt_gqa else Hq // Hkv         # KV re-streamed per q head
-    kv_bytes = 2 * B * pages_touched * ps * Hkv * D * kv_elt * streams
-    scale_bytes = (2 * B * pages_touched * ps * Hkv * 4 * streams
+    kv_bytes = 2 * page_streams * ps * Hkv * D * kv_elt * streams
+    scale_bytes = (2 * page_streams * ps * Hkv * 4 * streams
                    if opt_kv else 0)
     q_bytes = B * Hq * D * 2
     return kv_bytes + scale_bytes + q_bytes
 
 
 def latent_bytes_per_call(B, NP, ps, R, dr, *, fused: bool, opt_kv: bool,
-                          cache_len: int):
+                          cache_len: int, shared_prefix_pages=0,
+                          lanes_sharing=0, share_visits=False):
     """HBM traffic of one MLA absorbed decode-attention call (bytes).
 
     The jnp gather reference ``jnp.take``s the lane's ENTIRE page table and
@@ -59,8 +71,13 @@ def latent_bytes_per_call(B, NP, ps, R, dr, *, fused: bool, opt_kv: bool,
     elt = 1 if opt_kv else 2                       # fp8 vs bf16 storage
     if fused:
         pages = min((cache_len + ps - 1) // ps, NP)  # Eq. 9: -1 never DMA'd
-        scale = B * pages * ps * 2 * 4 if opt_kv else 0
-        return B * pages * ps * W * elt + scale
+        page_streams = B * pages
+        if share_visits and lanes_sharing > 1 and shared_prefix_pages > 0:
+            # cross-lane visit grid: shared prefix pages stream once total
+            page_streams -= ((min(lanes_sharing, B) - 1)
+                             * min(shared_prefix_pages, pages))
+        scale = page_streams * ps * 2 * 4 if opt_kv else 0
+        return page_streams * ps * W * elt + scale
     stored = B * NP * ps * W * elt + (B * NP * ps * 2 * 4 if opt_kv else 0)
     f32 = B * NP * ps * W * 4
     return stored + 2 * f32                        # materialise + re-read

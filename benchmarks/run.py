@@ -13,7 +13,8 @@ import os
 import time
 import traceback
 
-ALL = ("fig6", "fig7", "table12", "kernel", "mla", "serving", "roofline")
+ALL = ("fig6", "fig7", "table12", "kernel", "kernels", "mla", "serving",
+       "roofline")
 
 
 def main(argv=None):
@@ -44,6 +45,9 @@ def main(argv=None):
                 run(quick=args.quick)
             elif name == "kernel":
                 from benchmarks.kernel_micro import run
+                run(quick=args.quick)
+            elif name == "kernels":
+                from benchmarks.bench_kernels import run
                 run(quick=args.quick)
             elif name == "mla":
                 from benchmarks.bench_mla import run

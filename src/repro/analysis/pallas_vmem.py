@@ -50,6 +50,12 @@ ASSUMPTIONS: Dict[str, int] = {
     "R": 512,       # MLA latent rank
     "W": 576,       # packed latent width R + d_rope
     "dr": 64,       # rope sub-dim
+    # cross-lane visit grids (kernels.visits): flattened row counts at the
+    # MAX_VISIT_LANES=32 dispatch ceiling — BG = B*G, BH = B*H_q(mla=8)
+    "BG": 128, "BH": 256,
+    # tile-resident chunk streaming: resident row-block caps
+    # (flash_chunk_prefill.RESIDENT_ROWS / latent_chunk_prefill's)
+    "rq": 1024, "rl": 512,
 }
 _UNKNOWN_DEFAULT = 128
 

@@ -219,6 +219,20 @@ class BlockManager:
         return self.prefix_hits / self.prefix_queries \
             if self.prefix_queries else 0.0
 
+    def shared_page_counts(self) -> Dict[int, int]:
+        """Physical pages held by more than one live sequence, with their
+        refcounts. These are exactly the pages the cross-lane visit grid
+        (kernels.visits) can batch when the holders decode in one step."""
+        return {p: r for p, r in self._ref.items() if r > 1}
+
+    def sharing_histogram(self) -> Dict[int, int]:
+        """Histogram refcount -> number of shared pages (refcount > 1)."""
+        hist: Dict[int, int] = {}
+        for r in self._ref.values():
+            if r > 1:
+                hist[r] = hist.get(r, 0) + 1
+        return hist
+
     def can_allocate(self, num_tokens: int,
                      shard: Optional[int] = None) -> bool:
         need = (num_tokens + self.page_size - 1) // self.page_size

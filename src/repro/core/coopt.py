@@ -23,6 +23,13 @@ class CoOptConfig:
     use_kernel: bool = False  # Pallas hot path (single-host AND shard_map
                               # distributed — kernels.sharded) vs the
                               # pure-jnp parity reference
+    # Cross-lane shared-prefix page batching (kernels.visits): the decode
+    # kernels iterate a deduplicated (page, lane-set) visit list, so a
+    # prefix page shared by N lanes streams into VMEM once instead of N
+    # times. Degenerates to the bit-identical per-lane grid when no sharing
+    # exists (and for B == 1 or B > visits.MAX_VISIT_LANES). Kernel path
+    # only; the jnp reference gathers per lane regardless.
+    share_visits: bool = True
     # MoE serving knob: expert capacity = ceil(S * top_k / E * cf). Decode
     # (S=1) is inherently dropless; cf >= E/top_k makes prefill dropless too
     # (exact teacher-forcing consistency) at proportional dispatch cost.

@@ -105,7 +105,8 @@ def paged_decode_attention(q, kv_pages, scale_pages, cache_len, *,
             q, kv_pages, scale_pages, cache_len, phys, logical,
             opt_kv=coopt.opt_kv,
             opt_gqa=True if window else coopt.opt_gqa,
-            window=window, sink_pages=sink_pages if window else 0)
+            window=window, sink_pages=sink_pages if window else 0,
+            share_visits=coopt.share_visits)
 
     if window:
         # Block-sparse policy: Opt-KV SkipSet = outside {sinks + window},

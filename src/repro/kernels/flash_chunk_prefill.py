@@ -11,12 +11,23 @@ index_map, so a chunk's queries attend over prior cached pages without the
 host gathering the whole history into a contiguous buffer (Opt-Pa "lazy
 memory mapping", paper §3.3, applied to the prefill continuation).
 
-Grid: (batch, kv_head, q_block, logical_page). Queries arrive grouped
+Grid: (batch, kv_head, q_group, logical_page). Queries arrive grouped
 (Opt-GQA): rows are (seq, group) pairs, so each KV page is streamed into VMEM
 once per G query heads. Per-row absolute positions ride along as a VMEM
 input blocked with the query tiles; the causal / sliding-window / sink masks
 compare them against ``logical_page * ps + iota`` — Eq. 9's valid-block
 filter in the logical page domain, Eq. 10's online softmax across pages.
+
+Tile-resident chunk streaming: the page dim is innermost and every row-side
+block (q, positions, out, state, scratch) is keyed on the RESIDENT GROUP
+index only, so the whole group stays VMEM-resident across the inner page
+loop and a page is DMA'd once per group — not once per small query tile.
+The group is sized by ``resident_rows`` (largest divisor of R under
+``RESIDENT_ROWS`` rows that keeps (seq, group) rows together), so a typical
+chunk (R <= 1024 rows) streams each cached page exactly ONCE per (b, h);
+the page re-stream factor is ceil(R / rq) instead of the former fixed
+R / 256. VMEM stays under the 8 MiB budget: rows cost (2*D + 3*128) * 4 B
+each double-buffered (~5.9 MiB at rq = 1024, D = 128).
 
 Page skipping: table entries of -1 (unallocated, or masked beyond the lane's
 ``cache_len`` by the caller) are predicated off with ``pl.when`` — neither
@@ -49,6 +60,24 @@ from repro.kernels._compat import CompilerParams as _CompilerParams
 
 _NEG = -1e30
 
+# VMEM-resident query-group row budget: sized so the group's q/out/state
+# blocks plus (m, l, acc) scratch stay well inside the 8 MiB VMEM budget at
+# D = 128 while letting a typical chunk's rows (R = S * G) fit in ONE group
+# — the page streamed per group is then streamed per CHUNK.
+RESIDENT_ROWS = 1024
+
+
+def resident_rows(R: int, G: int, cap: int = 0) -> int:
+    """Rows per VMEM-resident query group: the largest divisor of ``R``
+    that is <= cap (default ``RESIDENT_ROWS``) and keeps a sequence row's G
+    grouped heads together. ``G`` always qualifies, so the search
+    terminates. The page re-stream factor of the chunk kernel is
+    ``R // resident_rows(R, G)``."""
+    rq = min(cap or RESIDENT_ROWS, R)
+    while R % rq or rq % G:
+        rq -= 1
+    return rq
+
 
 def _chunk_kernel(phys_ref,                          # scalar prefetch
                   q_ref, pos_ref, k_ref, v_ref, ks_ref, vs_ref,
@@ -61,7 +90,7 @@ def _chunk_kernel(phys_ref,                          # scalar prefetch
         m_ref, l_ref, acc_ref = refs
     b = pl.program_id(0)
     j = pl.program_id(3)                             # page-table slot
-    bq, D = q_ref.shape[2], q_ref.shape[3]
+    rq, D = q_ref.shape[2], q_ref.shape[3]
     page = phys_ref[0, b, j]                         # physical page to DMA
     base = phys_ref[1, b, j]                         # in-segment logical page
     pseg = phys_ref[2, b, j]                         # page's segment id
@@ -72,8 +101,8 @@ def _chunk_kernel(phys_ref,                          # scalar prefetch
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    qpos = pos_ref[0, 0].astype(jnp.int32)           # (bq,) per-row position
-    qseg = pos_ref[0, 1].astype(jnp.int32)           # (bq,) per-row segment
+    qpos = pos_ref[0, 0].astype(jnp.int32)           # (rq,) per-row position
+    qseg = pos_ref[0, 1].astype(jnp.int32)           # (rq,) per-row segment
     # causal page skip: the page is dead if its first key position is beyond
     # every query in the tile (positions are non-decreasing per lane only
     # within a chunk, so use the tile max)
@@ -81,7 +110,7 @@ def _chunk_kernel(phys_ref,                          # scalar prefetch
 
     @pl.when(live)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)          # (bq, D)
+        q = q_ref[0, 0].astype(jnp.float32)          # (rq, D)
         k = k_ref[0, :, 0, :]                        # (ps, D)
         v = v_ref[0, :, 0, :]
         if opt_kv:                                   # Eq. 6 fused dequant
@@ -92,9 +121,9 @@ def _chunk_kernel(phys_ref,                          # scalar prefetch
             v = v.astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
-        s = s * (1.0 / math.sqrt(D))                 # (bq, ps)
-        kpos = base * ps + jax.lax.broadcasted_iota(jnp.int32, (bq, ps), 1)
-        qp = jnp.broadcast_to(qpos[:, None], (bq, ps))
+        s = s * (1.0 / math.sqrt(D))                 # (rq, ps)
+        kpos = base * ps + jax.lax.broadcasted_iota(jnp.int32, (rq, ps), 1)
+        qp = jnp.broadcast_to(qpos[:, None], (rq, ps))
         mask = (kpos <= qp) & (qseg[:, None] == pseg)
         if window:
             mask &= (kpos > qp - window) | (kpos < sink * ps)
@@ -126,7 +155,7 @@ def _chunk_kernel(phys_ref,                          # scalar prefetch
 def flash_chunk_prefill(q, positions, k_pages, v_pages, k_scale, v_scale,
                         phys_table, *, opt_kv: bool, opt_gqa: bool = True,
                         window: int = 0, sink_pages: int = 0,
-                        block_q: int = 256, return_state: bool = False,
+                        block_q: int = 0, return_state: bool = False,
                         interpret: bool = True, seg_q=None, page_seg=None,
                         page_base=None):
     """q: (B, S, Hq, D) chunk queries; positions: (B, S) absolute per-row
@@ -162,10 +191,11 @@ def flash_chunk_prefill(q, positions, k_pages, v_pages, k_scale, v_scale,
         heads, kv_of_head = Hq, lambda h: h // max(Hq // Hkv, 1)
     R = S * G
 
-    bq = min(block_q, R)
-    while R % bq or bq % G:                          # seq rows stay grouped
-        bq -= 1
-    NQ = R // bq
+    # resident-group sizing: rows stay VMEM-resident across the whole inner
+    # page loop, so NQ is the page re-stream factor (1 for typical chunks).
+    # block_q = 0 means "as large as the VMEM budget allows" (RESIDENT_ROWS).
+    rq = resident_rows(R, G, block_q)
+    NQ = R // rq
 
     # (B,S,Hq,D) -> (B,heads,R,D): row r = s*G + g; positions repeat per
     # group (grouped mode) or per head block (MHA mode: R == S).
@@ -189,9 +219,9 @@ def flash_chunk_prefill(q, positions, k_pages, v_pages, k_scale, v_scale,
     def sc_idx(b, h, i, j, phys):
         return (jnp.maximum(phys[0, b, j], 0), 0, kv_of_head(h))
 
-    out_blk = pl.BlockSpec((1, 1, bq, D),
+    out_blk = pl.BlockSpec((1, 1, rq, D),
                            lambda b, h, i, j, phys: (b, h, i, 0))
-    st_blk = pl.BlockSpec((1, 1, bq, 128),
+    st_blk = pl.BlockSpec((1, 1, rq, 128),
                           lambda b, h, i, j, phys: (b, h, i, 0))
     out_specs = [out_blk]
     out_shape = [jax.ShapeDtypeStruct((B, heads, R, D), q.dtype)]
@@ -209,9 +239,9 @@ def flash_chunk_prefill(q, positions, k_pages, v_pages, k_scale, v_scale,
             num_scalar_prefetch=1,
             grid=(B, heads, NQ, NP),
             in_specs=[
-                pl.BlockSpec((1, 1, bq, D),
+                pl.BlockSpec((1, 1, rq, D),
                              lambda b, h, i, j, phys: (b, h, i, 0)),
-                pl.BlockSpec((1, 2, bq),
+                pl.BlockSpec((1, 2, rq),
                              lambda b, h, i, j, phys: (b, 0, i)),
                 pl.BlockSpec((1, ps, 1, D), kv_idx),
                 pl.BlockSpec((1, ps, 1, D), kv_idx),
@@ -220,9 +250,9 @@ def flash_chunk_prefill(q, positions, k_pages, v_pages, k_scale, v_scale,
             ],
             out_specs=out_specs,
             scratch_shapes=[
-                pltpu.VMEM((bq, 128), jnp.float32),
-                pltpu.VMEM((bq, 128), jnp.float32),
-                pltpu.VMEM((bq, D), jnp.float32),
+                pltpu.VMEM((rq, 128), jnp.float32),
+                pltpu.VMEM((rq, 128), jnp.float32),
+                pltpu.VMEM((rq, D), jnp.float32),
             ],
         ),
         out_shape=out_shape,

@@ -20,14 +20,24 @@ ranges, Eq. 6); the lane's physical page table is scalar-prefetched and
 dereferenced in the BlockSpec index_map (-1 = unallocated/SkipSet, never
 DMA'd — the pool's sentinel last page never appears in a table).
 
-Grid: (batch, q_block, logical_page). Per-row positions ride along as a
+Grid: (batch, q_group, logical_page). Per-row positions ride along as a
 VMEM input blocked with the query tiles; the causal / sliding-window / sink
 masks compare them against ``logical_page * ps + iota`` (Eq. 9's valid-block
 filter in the logical page domain, Eq. 10's online softmax across pages).
 Pages entirely in the future of a query tile are skipped by the same
 ``pl.when`` predicate using the tile's maximum position. The (m, l, acc)
-accumulator is VMEM-resident with acc in LATENT space (bq, R); the ``w_uv``
+accumulator is VMEM-resident with acc in LATENT space (rl, R); the ``w_uv``
 expansion stays outside so weights never enter VMEM.
+
+Tile-resident chunk streaming: the page dim is innermost and every row-side
+block (ql, qr, positions, out, state, scratch) is keyed on the RESIDENT
+GROUP index only, so the group stays VMEM-resident across the inner page
+loop and a latent page is DMA'd once per group, not once per small query
+tile. ``resident_rows`` sizes the group (largest divisor of RW = S * H
+under ``RESIDENT_ROWS`` that keeps a token's H head rows together); latent
+rows are ~4x wider than dense ones (R + 3*128 floats vs 2*D + 3*128), so
+the cap is 512 rows (~7.0 MiB double-buffered at R = 512) and the page
+re-stream factor is RW / rl instead of the former fixed RW / 256.
 """
 from __future__ import annotations
 
@@ -42,6 +52,22 @@ from repro.kernels._compat import CompilerParams as _CompilerParams
 
 _NEG = -1e30
 
+# VMEM-resident query-group row budget — half the dense kernel's cap: a
+# latent row carries R = kv_lora_rank (typ. 512) accumulator floats, so 512
+# rows keep blocks + (m, l, acc) scratch inside the 8 MiB VMEM budget.
+RESIDENT_ROWS = 512
+
+
+def resident_rows(RW: int, H: int, cap: int = 0) -> int:
+    """Rows per VMEM-resident query group: the largest multiple of ``H``
+    <= cap (default ``RESIDENT_ROWS``) that divides ``RW`` (a token's H head
+    rows stay together; ``H`` always qualifies, so the search terminates).
+    The page re-stream factor of the chunk kernel is ``RW // rl``."""
+    rl = H * max(min(cap or RESIDENT_ROWS, RW) // H, 1)
+    while RW % rl:
+        rl -= H
+    return rl
+
 
 def _latent_chunk_kernel(phys_ref,                   # scalar prefetch
                          ql_ref, qr_ref, pos_ref, lat_ref, sc_ref,
@@ -55,7 +81,7 @@ def _latent_chunk_kernel(phys_ref,                   # scalar prefetch
         m_ref, l_ref, acc_ref = refs
     b = pl.program_id(0)
     j = pl.program_id(2)                             # page-table slot
-    bq = ql_ref.shape[1]
+    rl = ql_ref.shape[1]
 
     @pl.when(j == 0)
     def _init():
@@ -66,16 +92,16 @@ def _latent_chunk_kernel(phys_ref,                   # scalar prefetch
     page = phys_ref[0, b, j]                         # physical page to DMA
     base = phys_ref[1, b, j]                         # in-segment logical page
     pseg = phys_ref[2, b, j]                         # page's segment id
-    qpos = pos_ref[0, 0].astype(jnp.int32)           # (bq,) per-row position
-    qseg = pos_ref[0, 1].astype(jnp.int32)           # (bq,) per-row segment
+    qpos = pos_ref[0, 0].astype(jnp.int32)           # (rl,) per-row position
+    qseg = pos_ref[0, 1].astype(jnp.int32)           # (rl,) per-row segment
     # causal page skip: the page is dead if its first key position is beyond
     # every query row in the tile
     live = jnp.logical_and(page >= 0, base * ps <= jnp.max(qpos))
 
     @pl.when(live)
     def _compute():
-        ql = ql_ref[0].astype(jnp.float32)           # (bq, R)  absorbed q
-        qr = qr_ref[0].astype(jnp.float32)           # (bq, dr)
+        ql = ql_ref[0].astype(jnp.float32)           # (rl, R)  absorbed q
+        qr = qr_ref[0].astype(jnp.float32)           # (rl, dr)
         lat = lat_ref[0]                             # (ps, R+dr)
         c = lat[:, :R]
         r = lat[:, R:]
@@ -89,9 +115,9 @@ def _latent_chunk_kernel(phys_ref,                   # scalar prefetch
                                 preferred_element_type=jnp.float32)
         s += jax.lax.dot_general(qr, r, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
-        s = s * sm_scale                             # (bq, ps)
-        kpos = base * ps + jax.lax.broadcasted_iota(jnp.int32, (bq, ps), 1)
-        qp = jnp.broadcast_to(qpos[:, None], (bq, ps))
+        s = s * sm_scale                             # (rl, ps)
+        kpos = base * ps + jax.lax.broadcasted_iota(jnp.int32, (rl, ps), 1)
+        qp = jnp.broadcast_to(qpos[:, None], (rl, ps))
         mask = (kpos <= qp) & (qseg[:, None] == pseg)
         if window:
             mask &= (kpos > qp - window) | (kpos < sink * ps)
@@ -124,7 +150,7 @@ def _latent_chunk_kernel(phys_ref,                   # scalar prefetch
 def latent_chunk_prefill(q_lat, q_rope, positions, lat_pages, scale_pages,
                          phys_table, *, sm_scale: float, opt_kv: bool,
                          window: int = 0, sink_pages: int = 0,
-                         block_q: int = 256, return_state: bool = False,
+                         block_q: int = 0, return_state: bool = False,
                          interpret: bool = True, seg_q=None, page_seg=None,
                          page_base=None):
     """q_lat: (B, S, H, R) W_uk-absorbed chunk queries; q_rope: (B, S, H, dr);
@@ -149,12 +175,11 @@ def latent_chunk_prefill(q_lat, q_rope, positions, lat_pages, scale_pages,
     NP = phys_table.shape[1]
     RW = S * H                                       # row r = s*H + h
 
-    # largest multiple of H <= block_q that divides RW (head rows stay
-    # grouped; bq = H always qualifies, so the search terminates there)
-    bq = H * max(min(block_q, RW) // H, 1)
-    while RW % bq:
-        bq -= H
-    NQ = RW // bq
+    # resident-group sizing: rows stay VMEM-resident across the whole inner
+    # page loop, so NQ is the page re-stream factor. block_q = 0 means "as
+    # large as the VMEM budget allows" (RESIDENT_ROWS).
+    rl = resident_rows(RW, H, block_q)
+    NQ = RW // rl
 
     if seg_q is None:
         seg_q = jnp.zeros((B, S), jnp.int32)
@@ -178,8 +203,8 @@ def latent_chunk_prefill(q_lat, q_rope, positions, lat_pages, scale_pages,
     def lat_idx(b, i, j, phys):
         return (jnp.maximum(phys[0, b, j], 0), 0, 0)
 
-    out_blk = pl.BlockSpec((1, bq, R), lambda b, i, j, phys: (b, i, 0))
-    st_blk = pl.BlockSpec((1, bq, 128), lambda b, i, j, phys: (b, i, 0))
+    out_blk = pl.BlockSpec((1, rl, R), lambda b, i, j, phys: (b, i, 0))
+    st_blk = pl.BlockSpec((1, rl, 128), lambda b, i, j, phys: (b, i, 0))
     out_specs = [out_blk]
     out_shape = [jax.ShapeDtypeStruct((B, RW, R), jnp.float32)]
     if return_state:
@@ -196,17 +221,17 @@ def latent_chunk_prefill(q_lat, q_rope, positions, lat_pages, scale_pages,
             num_scalar_prefetch=1,
             grid=(B, NQ, NP),
             in_specs=[
-                pl.BlockSpec((1, bq, R), lambda b, i, j, phys: (b, i, 0)),
-                pl.BlockSpec((1, bq, dr), lambda b, i, j, phys: (b, i, 0)),
-                pl.BlockSpec((1, 2, bq), lambda b, i, j, phys: (b, 0, i)),
+                pl.BlockSpec((1, rl, R), lambda b, i, j, phys: (b, i, 0)),
+                pl.BlockSpec((1, rl, dr), lambda b, i, j, phys: (b, i, 0)),
+                pl.BlockSpec((1, 2, rl), lambda b, i, j, phys: (b, 0, i)),
                 pl.BlockSpec((1, ps, W), lat_idx),
                 pl.BlockSpec((1, ps, 2), lat_idx),
             ],
             out_specs=out_specs,
             scratch_shapes=[
-                pltpu.VMEM((bq, 128), jnp.float32),
-                pltpu.VMEM((bq, 128), jnp.float32),
-                pltpu.VMEM((bq, R), jnp.float32),
+                pltpu.VMEM((rl, 128), jnp.float32),
+                pltpu.VMEM((rl, 128), jnp.float32),
+                pltpu.VMEM((rl, R), jnp.float32),
             ],
         ),
         out_shape=out_shape,

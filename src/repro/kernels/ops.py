@@ -38,6 +38,7 @@ from repro.kernels import latent_chunk_prefill as _lc
 from repro.kernels import paged_gqa_decode as _pd
 from repro.kernels import paged_latent_decode as _ld
 from repro.kernels import sharded as _sh
+from repro.kernels import visits as _vs
 
 INTERPRET = True
 
@@ -89,14 +90,29 @@ def mesh_ctx_scope(ctx: Optional[_sh.ShardCtx]):
 # global INTERPRET inside the jitted body would bake its trace-time value
 # into the cached executable, so configure_for_backend()'s post-import flip
 # would be silently ignored (COOPT004, `python -m repro.analysis`).
+def _use_visits(share_visits: bool, B: int) -> bool:
+    # the batched-visit grid pays off only with >1 lane, and its int32 lane
+    # bitmask caps membership at MAX_VISIT_LANES; beyond either bound the
+    # per-lane grid is the degenerate (and bit-identical) fallback
+    return bool(share_visits) and 1 < B <= _vs.MAX_VISIT_LANES
+
+
 @partial(jax.jit, static_argnames=("opt_kv", "opt_gqa", "window",
-                                   "sink_pages", "interpret"))
+                                   "sink_pages", "share_visits", "interpret"))
 def _paged_pool_decode_single(q, kv_pages, scale_pages, cache_len,
                               phys_table, log_table, *, opt_kv: bool,
                               opt_gqa: bool, window: int, sink_pages: int,
-                              interpret: bool):
+                              share_visits: bool, interpret: bool):
     ks = scale_pages[0] if scale_pages is not None else None
     vs = scale_pages[1] if scale_pages is not None else None
+    if _use_visits(share_visits, q.shape[0]):
+        # trace-time dedup: pages shared across lanes stream into VMEM once
+        vp, vm, vl = _vs.plan_visits(phys_table.astype(jnp.int32),
+                                     log_table.astype(jnp.int32))
+        return _pd.paged_pool_decode_visits(
+            q, kv_pages[0], kv_pages[1], ks, vs, cache_len.astype(jnp.int32),
+            vp, vm, vl, opt_kv=opt_kv, opt_gqa=opt_gqa, window=window,
+            sink_pages=sink_pages, interpret=interpret)
     return _pd.paged_pool_decode(
         q, kv_pages[0], kv_pages[1], ks, vs, cache_len.astype(jnp.int32),
         phys_table.astype(jnp.int32), log_table.astype(jnp.int32),
@@ -106,19 +122,25 @@ def _paged_pool_decode_single(q, kv_pages, scale_pages, cache_len,
 
 def paged_pool_decode(q, kv_pages, scale_pages, cache_len, phys_table,
                       log_table, *, opt_kv: bool, opt_gqa: bool,
-                      window: int = 0, sink_pages: int = 0):
+                      window: int = 0, sink_pages: int = 0,
+                      share_visits: bool = False):
     """Fused decode over the global pool. q (B,Hq,D); kv_pages
     (2,P_total,ps,Hkv,D); scale_pages (2,P_total,ps,Hkv)|None; phys/log_table
-    (B,NSel) int32 (-1 = never DMA'd)."""
+    (B,NSel) int32 (-1 = never DMA'd). ``share_visits`` batches cross-lane
+    shared pages through the deduplicated visit grid
+    (``kernels.visits.plan_visits``); with no sharing present the result is
+    bit-identical to the per-lane grid."""
     if _MESH_CTX is not None:
         return _sh.paged_pool_decode(
             _MESH_CTX, q, kv_pages, scale_pages, cache_len, phys_table,
             log_table, opt_kv=opt_kv, opt_gqa=opt_gqa, window=window,
-            sink_pages=sink_pages, interpret=INTERPRET)
+            sink_pages=sink_pages, share_visits=share_visits,
+            interpret=INTERPRET)
     return _paged_pool_decode_single(
         q, kv_pages, scale_pages, cache_len, phys_table, log_table,
         opt_kv=opt_kv, opt_gqa=opt_gqa, window=window,
-        sink_pages=sink_pages, interpret=INTERPRET)
+        sink_pages=sink_pages, share_visits=share_visits,
+        interpret=INTERPRET)
 
 
 @partial(jax.jit, static_argnames=("opt_kv", "interpret"))
@@ -203,11 +225,20 @@ def flash_prefill(q, k, v, *, window: int = 0, block_q: int = 256,
 
 
 @partial(jax.jit, static_argnames=("sm_scale", "opt_kv", "window",
-                                   "sink_pages", "interpret"))
+                                   "sink_pages", "share_visits", "interpret"))
 def _paged_latent_decode_single(q_lat, q_rope, lat_pages, scale_pages,
                                 cache_len, phys_table, log_table, *,
                                 sm_scale: float, opt_kv: bool, window: int,
-                                sink_pages: int, interpret: bool):
+                                sink_pages: int, share_visits: bool,
+                                interpret: bool):
+    if _use_visits(share_visits, q_lat.shape[0]):
+        vp, vm, vl = _vs.plan_visits(phys_table.astype(jnp.int32),
+                                     log_table.astype(jnp.int32))
+        return _ld.paged_latent_decode_visits(
+            q_lat, q_rope, lat_pages, scale_pages,
+            cache_len.astype(jnp.int32), vp, vm, vl, sm_scale=sm_scale,
+            opt_kv=opt_kv, window=window, sink_pages=sink_pages,
+            interpret=interpret)
     return _ld.paged_latent_decode(
         q_lat, q_rope, lat_pages, scale_pages, cache_len.astype(jnp.int32),
         phys_table.astype(jnp.int32), log_table.astype(jnp.int32),
@@ -217,7 +248,8 @@ def _paged_latent_decode_single(q_lat, q_rope, lat_pages, scale_pages,
 
 def paged_latent_decode(q_lat, q_rope, lat_pages, scale_pages, cache_len,
                         phys_table, log_table, *, sm_scale: float,
-                        opt_kv: bool, window: int = 0, sink_pages: int = 0):
+                        opt_kv: bool, window: int = 0, sink_pages: int = 0,
+                        share_visits: bool = False):
     """Fused MLA absorbed decode over the global latent pool. q_lat
     (B,H,R) W_uk-absorbed queries; q_rope (B,H,dr); lat_pages
     (P_total,ps,R+dr) [c_kv|k_rope] packed; scale_pages (P_total,ps,2) dual
@@ -227,11 +259,13 @@ def paged_latent_decode(q_lat, q_rope, lat_pages, scale_pages, cache_len,
         return _sh.paged_latent_decode(
             _MESH_CTX, q_lat, q_rope, lat_pages, scale_pages, cache_len,
             phys_table, log_table, sm_scale=sm_scale, opt_kv=opt_kv,
-            window=window, sink_pages=sink_pages, interpret=INTERPRET)
+            window=window, sink_pages=sink_pages,
+            share_visits=share_visits, interpret=INTERPRET)
     return _paged_latent_decode_single(
         q_lat, q_rope, lat_pages, scale_pages, cache_len, phys_table,
         log_table, sm_scale=sm_scale, opt_kv=opt_kv, window=window,
-        sink_pages=sink_pages, interpret=INTERPRET)
+        sink_pages=sink_pages, share_visits=share_visits,
+        interpret=INTERPRET)
 
 
 @partial(jax.jit, static_argnames=("sm_scale", "opt_kv", "window",

@@ -199,3 +199,175 @@ def paged_pool_decode(q, k_pages, v_pages, k_scale, v_scale, cache_len,
     m = res[1][..., 0].reshape(B, Hq)
     l = res[2][..., 0].reshape(B, Hq)
     return out, m, l
+
+
+def _visit_kernel(vp_ref, vm_ref, vl_ref,            # scalar prefetch
+                  q_ref, len_ref, k_ref, v_ref, ks_ref, vs_ref,
+                  o_ref, *refs,
+                  ps: int, G: int, opt_kv: bool, window: int, sink: int,
+                  num_visits: int, return_state: bool):
+    """Cross-lane visit grid: one step per deduplicated (page, lane-set).
+
+    Query rows of ALL lanes ride VMEM-resident as one (BG, D) tile
+    (BG = B * G, row r = lane * G + group-head); each visit DMAs /
+    dequantizes its page ONCE and scatters scores into every member lane's
+    running (m, l, acc) state. Non-member rows take an exact identity
+    update (corr = exp(0) = 1, hard-zeroed p contributes +0.0), and a
+    lane's member visits arrive in the same ascending-slot order the
+    per-lane grid walks (``kernels.visits``), so per-row softmax state
+    evolves update-for-update like ``_pool_kernel`` — the no-sharing plan
+    is bit-identical, a shared plan saves (members - 1) page streams.
+    """
+    if return_state:
+        mo_ref, lo_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        m_ref, l_ref, acc_ref = refs
+    v_i = pl.program_id(1)
+    BG = q_ref.shape[1]
+    page = vp_ref[v_i]
+    lpage = vl_ref[v_i]
+    lanes = vm_ref[v_i]
+
+    @pl.when(v_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(page >= 0)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                     # (BG, D)
+        k = k_ref[0, :, 0, :]
+        v = v_ref[0, :, 0, :]
+        if opt_kv:  # Opt-KV Eq. 6: fused dequant — ONCE per visit, not per lane
+            k = k.astype(jnp.float32) * ks_ref[0].reshape(ps, 1)
+            v = v.astype(jnp.float32) * vs_ref[0].reshape(ps, 1)
+        else:
+            k = k.astype(jnp.float32)
+            v = v.astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * (1.0 / math.sqrt(q_ref.shape[2]))            # (BG, ps)
+        # row r belongs to lane r // G; membership = lane's bit in the mask
+        lane_r = jax.lax.broadcasted_iota(jnp.int32, (BG, 1), 0) // G
+        member = jnp.equal(
+            jnp.bitwise_and(jnp.right_shift(lanes, lane_r), 1), 1)
+        length = len_ref[:, 0:1]                             # (BG, 1)
+        pos = lpage * ps + jax.lax.broadcasted_iota(jnp.int32, (BG, ps), 1)
+        mask = member & (pos < length)
+        if window:
+            in_win = pos >= jnp.maximum(length - window, 0)
+            in_sink = pos < sink * ps
+            mask &= in_win | in_sink
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_ref[:, 0:1]                               # (BG, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        # member rows follow _pool_kernel verbatim (no hard zero on the
+        # positional mask — exp underflow self-corrects identically);
+        # non-member rows hard-zero so their (m, l, acc) are untouched
+        p = jnp.where(member, jnp.exp(s - m_new), 0.0)       # (BG, ps)
+        l_new = l_ref[:, 0:1] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(v_i == num_visits - 1)
+    def _finalize():
+        l = l_ref[:, 0:1]
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+        if return_state:
+            mo_ref[0] = m_ref[...]
+            lo_ref[0] = l_ref[...]
+
+
+def paged_pool_decode_visits(q, k_pages, v_pages, k_scale, v_scale,
+                             cache_len, visit_page, visit_lanes, visit_log,
+                             *, opt_kv: bool, opt_gqa: bool, window: int = 0,
+                             sink_pages: int = 0, return_state: bool = False,
+                             interpret: bool = True):
+    """Batched-visit twin of ``paged_pool_decode``: same pool/query/window
+    semantics, but the page grid dim iterates a deduplicated cross-lane
+    visit list (``kernels.visits.plan_visits``) instead of (lane x page) —
+    each page shared by N lanes is streamed into VMEM once, not N times.
+    visit_page/visit_lanes/visit_log: (NV,) int32 plan vectors. Requires
+    B <= visits.MAX_VISIT_LANES (int32 lane bitmask); ``ops`` dispatches
+    back to the per-lane grid beyond that."""
+    B, Hq, D = q.shape
+    P, ps, Hkv, _ = k_pages.shape
+    NV = visit_page.shape[0]
+
+    if opt_gqa:
+        G = Hq // Hkv
+        heads, kv_of_head = Hkv, lambda h: h
+    else:
+        G = 1
+        heads, kv_of_head = Hq, lambda h: h // max(Hq // Hkv, 1)
+    BG = B * G
+    # rows r = b * G + g per head plane: lane-contiguous row blocks
+    qf = q.reshape(B, heads, G, D).transpose(1, 0, 2, 3).reshape(heads, BG, D)
+    len_rows = jnp.broadcast_to(
+        cache_len.astype(jnp.int32)[:, None, None], (B, G, 128)
+    ).reshape(BG, 128)
+
+    if k_scale is None:
+        k_scale = jnp.zeros((P, ps, Hkv), jnp.float32)
+        v_scale = k_scale
+
+    def kv_idx(h, v, vp, vl, vm):
+        return (jnp.maximum(vp[v], 0), 0, kv_of_head(h), 0)
+
+    def sc_idx(h, v, vp, vl, vm):
+        return (jnp.maximum(vp[v], 0), 0, kv_of_head(h))
+
+    out_blk = pl.BlockSpec((1, BG, D), lambda h, v, vp, vl, vm: (h, 0, 0))
+    st_blk = pl.BlockSpec((1, BG, 128), lambda h, v, vp, vl, vm: (h, 0, 0))
+    out_specs = [out_blk]
+    out_shape = [jax.ShapeDtypeStruct((heads, BG, D), q.dtype)]
+    if return_state:
+        out_specs += [st_blk, st_blk]
+        out_shape += [jax.ShapeDtypeStruct((heads, BG, 128), jnp.float32)] * 2
+
+    kern = functools.partial(_visit_kernel, ps=ps, G=G, opt_kv=opt_kv,
+                             window=window, sink=sink_pages, num_visits=NV,
+                             return_state=return_state)
+    res = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(heads, NV),
+            in_specs=[
+                pl.BlockSpec((1, BG, D), lambda h, v, vp, vl, vm: (h, 0, 0)),
+                pl.BlockSpec((BG, 128), lambda h, v, vp, vl, vm: (0, 0)),
+                pl.BlockSpec((1, ps, 1, D), kv_idx),
+                pl.BlockSpec((1, ps, 1, D), kv_idx),
+                pl.BlockSpec((1, ps, 1), sc_idx),
+                pl.BlockSpec((1, ps, 1), sc_idx),
+            ],
+            out_specs=out_specs,
+            scratch_shapes=[
+                pltpu.VMEM((BG, 128), jnp.float32),
+                pltpu.VMEM((BG, 128), jnp.float32),
+                pltpu.VMEM((BG, D), jnp.float32),
+            ],
+        ),
+        out_shape=out_shape,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(visit_page, visit_lanes, visit_log, qf, len_rows,
+      k_pages, v_pages, k_scale, v_scale)
+
+    def unrows(x, last):
+        return x.reshape(heads, B, G, last).transpose(1, 0, 2, 3) \
+                .reshape(B, Hq, last)
+    out = unrows(res[0], D)
+    if not return_state:
+        return out
+    m = unrows(res[1], 128)[..., 0]
+    l = unrows(res[2], 128)[..., 0]
+    return out, m, l

@@ -192,3 +192,157 @@ def paged_latent_decode(q_lat, q_rope, lat_pages, scale_pages, cache_len,
     if not return_state:
         return res[0]
     return res[0], res[1][..., 0], res[2][..., 0]
+
+
+def _latent_visit_kernel(vp_ref, vm_ref, vl_ref,     # scalar prefetch
+                         ql_ref, qr_ref, len_ref, lat_ref, sc_ref,
+                         o_ref, *refs,
+                         ps: int, R: int, H: int, sm_scale: float,
+                         opt_kv: bool, window: int, sink: int,
+                         num_visits: int, return_state: bool):
+    """Cross-lane visit grid for the absorbed-MLA decode (see
+    ``paged_gqa_decode._visit_kernel`` for the scheme). Rows of all lanes'
+    absorbed queries ride VMEM-resident as one (BH, R) tile (BH = B * H,
+    row r = lane * H + head); each deduplicated visit streams and
+    dual-dequantizes its latent page ONCE and updates every member lane's
+    running (m, l, acc) state; non-member rows take exact identity updates
+    so the no-sharing plan is bit-identical to ``_latent_kernel``."""
+    if return_state:
+        mo_ref, lo_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        m_ref, l_ref, acc_ref = refs
+    v_i = pl.program_id(0)
+    BH = ql_ref.shape[0]
+    page = vp_ref[v_i]
+    lpage = vl_ref[v_i]
+    lanes = vm_ref[v_i]
+
+    @pl.when(v_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(page >= 0)
+    def _compute():
+        ql = ql_ref[...].astype(jnp.float32)             # (BH, R)
+        qr = qr_ref[...].astype(jnp.float32)             # (BH, dr)
+        lat = lat_ref[0]                                 # (ps, R+dr)
+        c = lat[:, :R]
+        r = lat[:, R:]
+        if opt_kv:  # Eq. 6 dual-scale dequant — ONCE per visit, not per lane
+            c = c.astype(jnp.float32) * sc_ref[0][:, 0].reshape(ps, 1)
+            r = r.astype(jnp.float32) * sc_ref[0][:, 1].reshape(ps, 1)
+        else:
+            c = c.astype(jnp.float32)
+            r = r.astype(jnp.float32)
+        s = jax.lax.dot_general(ql, c, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s += jax.lax.dot_general(qr, r, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        s = s * sm_scale                                 # (BH, ps)
+        lane_r = jax.lax.broadcasted_iota(jnp.int32, (BH, 1), 0) // H
+        member = jnp.equal(
+            jnp.bitwise_and(jnp.right_shift(lanes, lane_r), 1), 1)
+        length = len_ref[:, 0:1]                         # (BH, 1)
+        pos = lpage * ps + jax.lax.broadcasted_iota(jnp.int32, (BH, ps), 1)
+        mask = member & (pos < length)
+        if window:
+            in_win = pos >= jnp.maximum(length - window, 0)
+            in_sink = pos < sink * ps
+            mask &= in_win | in_sink
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_ref[:, 0:1]                           # (BH, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.where(member, jnp.exp(s - m_new), 0.0)   # (BH, ps)
+        l_new = l_ref[:, 0:1] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, c, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(v_i == num_visits - 1)
+    def _finalize():
+        l = l_ref[:, 0:1]
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+        if return_state:
+            mo_ref[...] = m_ref[...]
+            lo_ref[...] = l_ref[...]
+
+
+def paged_latent_decode_visits(q_lat, q_rope, lat_pages, scale_pages,
+                               cache_len, visit_page, visit_lanes, visit_log,
+                               *, sm_scale: float, opt_kv: bool,
+                               window: int = 0, sink_pages: int = 0,
+                               return_state: bool = False,
+                               interpret: bool = True):
+    """Batched-visit twin of ``paged_latent_decode``: the page grid dim
+    iterates a deduplicated cross-lane visit list (``kernels.visits``) so a
+    latent page shared by N lanes is streamed/dequantized once per step.
+    visit_page/visit_lanes/visit_log: (NV,) int32 plan vectors; requires
+    B <= visits.MAX_VISIT_LANES."""
+    B, H, R = q_lat.shape
+    P, ps, W = lat_pages.shape
+    dr = q_rope.shape[-1]
+    NV = visit_page.shape[0]
+    BH = B * H
+    # rows r = b * H + h: the natural reshape is already lane-contiguous
+    qlf = q_lat.reshape(BH, R)
+    qrf = q_rope.reshape(BH, dr)
+    len_rows = jnp.broadcast_to(
+        cache_len.astype(jnp.int32)[:, None, None], (B, H, 128)
+    ).reshape(BH, 128)
+
+    if scale_pages is None:
+        scale_pages = jnp.zeros((P, ps, 2), jnp.float32)
+
+    def lat_idx(v, vp, vl, vm):
+        return (jnp.maximum(vp[v], 0), 0, 0)
+
+    out_blk = pl.BlockSpec((BH, R), lambda v, vp, vl, vm: (0, 0))
+    st_blk = pl.BlockSpec((BH, 128), lambda v, vp, vl, vm: (0, 0))
+    out_specs = [out_blk]
+    out_shape = [jax.ShapeDtypeStruct((BH, R), jnp.float32)]
+    if return_state:
+        out_specs += [st_blk, st_blk]
+        out_shape += [jax.ShapeDtypeStruct((BH, 128), jnp.float32)] * 2
+
+    kern = functools.partial(_latent_visit_kernel, ps=ps, R=R, H=H,
+                             sm_scale=sm_scale, opt_kv=opt_kv, window=window,
+                             sink=sink_pages, num_visits=NV,
+                             return_state=return_state)
+    res = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(NV,),
+            in_specs=[
+                pl.BlockSpec((BH, R), lambda v, vp, vl, vm: (0, 0)),
+                pl.BlockSpec((BH, dr), lambda v, vp, vl, vm: (0, 0)),
+                pl.BlockSpec((BH, 128), lambda v, vp, vl, vm: (0, 0)),
+                pl.BlockSpec((1, ps, W), lat_idx),
+                pl.BlockSpec((1, ps, 2), lat_idx),
+            ],
+            out_specs=out_specs,
+            scratch_shapes=[
+                pltpu.VMEM((BH, 128), jnp.float32),
+                pltpu.VMEM((BH, 128), jnp.float32),
+                pltpu.VMEM((BH, R), jnp.float32),
+            ],
+        ),
+        out_shape=out_shape,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(visit_page, visit_lanes, visit_log, qlf, qrf, len_rows,
+      lat_pages, scale_pages)
+    out = res[0].reshape(B, H, R)
+    if not return_state:
+        return out
+    m = res[1][..., 0].reshape(B, H)
+    l = res[2][..., 0].reshape(B, H)
+    return out, m, l

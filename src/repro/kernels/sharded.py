@@ -50,6 +50,7 @@ from repro.kernels import flash_chunk_prefill as _fc
 from repro.kernels import latent_chunk_prefill as _lc
 from repro.kernels import paged_gqa_decode as _pd
 from repro.kernels import paged_latent_decode as _ld
+from repro.kernels import visits as _vs
 
 
 @dataclass(frozen=True)
@@ -101,27 +102,40 @@ def _pages_spec(ndim: int, pages_dim: int, ctx: ShardCtx) -> P:
 
 # ------------------------------------------------------------- read path --
 @partial(jax.jit, static_argnames=("ctx", "opt_kv", "opt_gqa", "window",
-                                   "sink_pages", "interpret"))
+                                   "sink_pages", "share_visits", "interpret"))
 def paged_pool_decode(ctx: ShardCtx, q, kv_pages, scale_pages, cache_len,
                       phys_table, log_table, *, opt_kv: bool, opt_gqa: bool,
                       window: int = 0, sink_pages: int = 0,
-                      interpret: bool = True):
+                      share_visits: bool = False, interpret: bool = True):
     """Distributed ``paged_gqa_decode``: kv_pages (2, P_total, ps, Hkv, D)
     pages-sharded over ``ctx.axes``; q/tables/cache_len replicated; returns
-    the replicated (B, Hq, D) attention output."""
+    the replicated (B, Hq, D) attention output. With ``share_visits`` each
+    shard plans its visit list AFTER the global->local page translation, so
+    visits are deduplicated within (and never cross) the shard's own page
+    range."""
     P_total = kv_pages.shape[1]
     P_local = P_total // ctx.num_shards
     _, _, ps, Hkv, _ = kv_pages.shape
     if scale_pages is None:
         scale_pages = jnp.zeros((2, P_total, ps, Hkv), jnp.float32)
+    use_visits = share_visits and 1 < q.shape[0] <= _vs.MAX_VISIT_LANES
 
     def body(q, kv, sc, cl, phys, log):
         first = _shard_index(ctx) * P_local
         lphys = global_to_local_pages(phys, first, P_local)
-        o, m, l = _pd.paged_pool_decode(
-            q, kv[0], kv[1], sc[0], sc[1], cl, lphys, log,
-            opt_kv=opt_kv, opt_gqa=opt_gqa, window=window,
-            sink_pages=sink_pages, return_state=True, interpret=interpret)
+        if use_visits:
+            vp, vm, vl = _vs.plan_visits(lphys, log)
+            o, m, l = _pd.paged_pool_decode_visits(
+                q, kv[0], kv[1], sc[0], sc[1], cl, vp, vm, vl,
+                opt_kv=opt_kv, opt_gqa=opt_gqa, window=window,
+                sink_pages=sink_pages, return_state=True,
+                interpret=interpret)
+        else:
+            o, m, l = _pd.paged_pool_decode(
+                q, kv[0], kv[1], sc[0], sc[1], cl, lphys, log,
+                opt_kv=opt_kv, opt_gqa=opt_gqa, window=window,
+                sink_pages=sink_pages, return_state=True,
+                interpret=interpret)
         return _lse_merge(ctx, o, m, l, q.dtype)
 
     return shard_map(
@@ -180,25 +194,36 @@ def paged_chunk_prefill(ctx: ShardCtx, q, positions, kv_pages, scale_pages,
 
 
 @partial(jax.jit, static_argnames=("ctx", "sm_scale", "opt_kv", "window",
-                                   "sink_pages", "interpret"))
+                                   "sink_pages", "share_visits", "interpret"))
 def paged_latent_decode(ctx: ShardCtx, q_lat, q_rope, lat_pages, scale_pages,
                         cache_len, phys_table, log_table, *, sm_scale: float,
                         opt_kv: bool, window: int = 0, sink_pages: int = 0,
-                        interpret: bool = True):
+                        share_visits: bool = False, interpret: bool = True):
     """Distributed ``paged_latent_decode``: latent pool (P_total, ps, R+dr)
-    pages-sharded; absorbed queries replicated; returns o_lat (B, H, R) f32."""
+    pages-sharded; absorbed queries replicated; returns o_lat (B, H, R) f32.
+    With ``share_visits`` each shard plans its visit list AFTER the
+    global->local translation (shard-local visit lists, see
+    ``paged_pool_decode``)."""
     P_total, ps, _ = lat_pages.shape
     P_local = P_total // ctx.num_shards
     if scale_pages is None:
         scale_pages = jnp.zeros((P_total, ps, 2), jnp.float32)
+    use_visits = share_visits and 1 < q_lat.shape[0] <= _vs.MAX_VISIT_LANES
 
     def body(ql, qr, lat, sc, cl, phys, log):
         first = _shard_index(ctx) * P_local
         lphys = global_to_local_pages(phys, first, P_local)
-        o, m, l = _ld.paged_latent_decode(
-            ql, qr, lat, sc, cl, lphys, log, sm_scale=sm_scale,
-            opt_kv=opt_kv, window=window, sink_pages=sink_pages,
-            return_state=True, interpret=interpret)
+        if use_visits:
+            vp, vm, vl = _vs.plan_visits(lphys, log)
+            o, m, l = _ld.paged_latent_decode_visits(
+                ql, qr, lat, sc, cl, vp, vm, vl, sm_scale=sm_scale,
+                opt_kv=opt_kv, window=window, sink_pages=sink_pages,
+                return_state=True, interpret=interpret)
+        else:
+            o, m, l = _ld.paged_latent_decode(
+                ql, qr, lat, sc, cl, lphys, log, sm_scale=sm_scale,
+                opt_kv=opt_kv, window=window, sink_pages=sink_pages,
+                return_state=True, interpret=interpret)
         return _lse_merge(ctx, o, m, l, jnp.float32)
 
     return shard_map(

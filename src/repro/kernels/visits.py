@@ -1,0 +1,116 @@
+"""Cross-lane shared-prefix visit planning for the pooled decode kernels.
+
+The refcounted ``BlockManager`` pool stores a prefix shared by N lanes ONCE
+(copy-on-write page sharing), yet the per-lane decode grid ``(B, heads,
+NSel)`` still streams every shared page into VMEM N times per step — the
+exact class of redundant KV traffic the paper's Opt-KV/Opt-GQA modes exist
+to eliminate, reintroduced one level up by the batch dimension. This module
+plans the deduplicated *visit list* that lets one kernel grid step serve
+every sharer at once.
+
+Visit-list plan format (the step-plan structure consumed by the
+``*_decode_visits`` kernels, documented here alongside its producers):
+
+  ``plan_visits(phys_table, log_table) -> (visit_page, visit_lanes,
+  visit_log)`` maps the per-lane ``(B, NSel)`` physical/logical page tables
+  onto three flat ``(B * NSel,)`` int32 vectors, one entry per *visit*:
+
+  * ``visit_page``  — physical pool page to DMA, or -1 = skip (padding /
+    non-owner duplicate / dead table entry). Exactly one visit per distinct
+    live (slot, physical, logical) triple survives; duplicates of a page
+    across lanes at the same slot collapse into their lowest-lane *owner*.
+  * ``visit_lanes`` — int32 bitmask of member lanes (bit b set ⇔ lane b's
+    table holds this same entry). The no-sharing case degenerates to
+    one-hot masks and the kernel's per-row updates become bit-identical to
+    the per-lane grid. Bitmask width caps the batched path at B <= 32
+    lanes; ``ops`` falls back to the per-lane grid beyond that.
+  * ``visit_log``   — logical page id (token positions = log * ps + i),
+    shared by construction between all members of a visit.
+
+  Visits are ordered slot-major (visit v = s * B + b), so each lane's member
+  visits occur in ascending-slot order — the same page order the per-lane
+  grid walks, which is what makes the running (m, l, acc) softmax states
+  match the per-lane kernel update-for-update.
+
+Dedup keys on (slot, physical, logical) rather than physical id alone:
+entries only merge when every member reads the SAME tokens at the SAME
+positions, so correctness never depends on how the scheduler laid pages
+out. Prefix sharing from the BlockManager is slot-aligned (a shared prefix
+occupies the same leading slots in every sharer's table, under both dense
+``decode_page_select`` and the windowed sink+window selection), so shared
+prefixes are exactly what this key collapses.
+
+The planner is pure ``jnp`` and runs at trace time inside the jitted decode
+step — inside ``kernels.sharded``'s shard_map bodies it runs AFTER
+``global_to_local_pages``, so each shard plans over its OWN local page
+domain and visit lists respect shard-local page ranges for free (non-owned
+pages are already -1 there). No new host->device transfer and no new AOT
+warmup axis: the visit vectors' shapes are functions of (B, NSel) only,
+which the bucket lattice already keys on.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+# int32 lane bitmask: the batched-visit kernels address lanes by bit index.
+MAX_VISIT_LANES = 32
+
+
+def plan_visits(phys_table, log_table):
+    """Plan the deduplicated visit list for one decode step.
+
+    phys_table/log_table: (B, NSel) int32 per-lane page tables (-1 = skip,
+    exactly as fed to the per-lane kernels). Returns (visit_page,
+    visit_lanes, visit_log), each (B * NSel,) int32 — see module docstring
+    for the plan format. Requires B <= MAX_VISIT_LANES (callers gate this).
+    """
+    B, _ = phys_table.shape
+    lane = jnp.arange(B, dtype=jnp.int32)
+    live = phys_table >= 0                                     # (B, NSel)
+    # same[b, b2, s]: lanes b and b2 hold the identical live entry at slot s
+    same = ((phys_table[:, None, :] == phys_table[None, :, :]) &
+            (log_table[:, None, :] == log_table[None, :, :]) &
+            live[:, None, :] & live[None, :, :])
+    # owner = lowest member lane: no earlier lane b2 < b shares the entry
+    earlier = same & (lane[None, :, None] < lane[:, None, None])
+    is_owner = live & ~jnp.any(earlier, axis=1)                # (B, NSel)
+    bit = jnp.left_shift(jnp.int32(1), lane)                   # (B,)
+    bits = jnp.sum(jnp.where(same, bit[None, :, None], 0),
+                   axis=1).astype(jnp.int32)                   # (B, NSel)
+    visit_page = jnp.where(is_owner, phys_table, -1)
+    visit_lanes = jnp.where(is_owner, bits, 0)
+    visit_log = jnp.where(is_owner, log_table, -1)
+    # slot-major flatten: visit v = s * B + b (ascending slots per lane)
+    return (visit_page.T.reshape(-1), visit_lanes.T.reshape(-1),
+            visit_log.T.reshape(-1))
+
+
+def sharing_stats(page_table: np.ndarray) -> dict:
+    """Host-side (numpy) sharing observability for ``EngineStats``.
+
+    page_table: (B, NP) int32 physical page table rows for the lanes of one
+    decode step (-1 = pad). Dedup is slot-aligned like ``plan_visits`` (a
+    BlockManager-shared prefix occupies the same slots in every sharer).
+    Returns counts for this step:
+      shared_page_visits     — distinct (slot, page) entries held by >1 lane
+      dup_page_streams_saved — per-lane page streams the visit grid
+                               eliminates: sum over shared entries of
+                               (members - 1)
+      lanes_per_shared_page  — {member-count: number of shared entries}
+    """
+    stats = {"shared_page_visits": 0, "dup_page_streams_saved": 0,
+             "lanes_per_shared_page": {}}
+    if page_table.size == 0:
+        return stats
+    for s in range(page_table.shape[1]):
+        col = page_table[:, s]
+        pages, counts = np.unique(col[col >= 0], return_counts=True)
+        for n in counts[counts > 1]:
+            n = int(n)
+            stats["shared_page_visits"] += 1
+            stats["dup_page_streams_saved"] += n - 1
+            hist = stats["lanes_per_shared_page"]
+            hist[n] = hist.get(n, 0) + 1
+    return stats

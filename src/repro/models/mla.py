@@ -205,7 +205,7 @@ def mla_paged_decode(q_nope, q_rope, lat_pages, scale_pages, cache_len, p, cfg,
             q_lat, q_rope.astype(jnp.float32), lat_pages,
             scale_pages if coopt.opt_kv else None, cache_len, phys, logical,
             sm_scale=scale, opt_kv=coopt.opt_kv, window=window,
-            sink_pages=sink_pages)
+            sink_pages=sink_pages, share_visits=coopt.share_visits)
         return _expand_o(o_lat, p, cfg, q_nope.dtype)
 
     # (q_lat resharded once per layer to match the model-sharded latent

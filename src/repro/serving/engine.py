@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cache.block_manager import chain_hash_tokens, extend_chain_hash
+from repro.kernels.visits import sharing_stats
 from repro.configs.base import ModelConfig
 from repro.core.coopt import CoOptConfig, COOPT
 from repro.models import get_model
@@ -98,6 +99,16 @@ class EngineStats:
     decode_time: float = 0.0        # planned token share (Eq. 12 fairness)
     packed_steps: int = 0           # steps run through the packed row path
     packed_rows_saved: int = 0      # lane-rows eliminated by packing
+    # ------------------------------------- cross-lane prefix sharing -----
+    # Accounted per decode step from the step's page table (the same array
+    # kernels.visits.plan_visits dedups on-device), so the numbers describe
+    # exactly what the visit grid batches: a (slot, page) entry held by k>1
+    # lanes streams once instead of k times.
+    shared_page_visits: int = 0     # deduped visits with >1 member lane
+    dup_page_streams_saved: int = 0 # per-lane page streams eliminated:
+                                    # sum over shared visits of (k - 1)
+    lanes_per_shared_page: Dict[int, int] = field(default_factory=dict)
+                                    # histogram: k lanes -> visit count
     # ------------------------------------------------ per-request latency --
     ttft_s: List[float] = field(default_factory=list)   # submit->1st token
                                                         # (queue wait incl.)
@@ -157,7 +168,13 @@ class EngineStats:
                 "tpot_p50_s": round(self.tpot(50), 4),
                 "tpot_p95_s": round(self.tpot(95), 4),
                 "queue_wait_p50_s": round(self.queue_wait(50), 4),
-                "queue_wait_p95_s": round(self.queue_wait(95), 4)}
+                "queue_wait_p95_s": round(self.queue_wait(95), 4),
+                # host-side Python int counters, not device values
+                "shared_page_visits":
+                    float(self.shared_page_visits),  # coopt: allow[COOPT001]
+                "dup_page_streams_saved":
+                    float(self.dup_page_streams_saved),  # coopt: allow[COOPT001]
+                }
 
     def pool_utilization(self) -> float:
         return self.pages_in_use / self.pool_pages if self.pool_pages else 0.0
@@ -558,6 +575,17 @@ class Engine:
         return (self.ecfg.pack_prefill and self._pack_ok
                 and bool(plan.prefill))
 
+    def _note_sharing(self, rows: np.ndarray) -> None:
+        """Accumulate cross-lane prefix-sharing stats for one decode step
+        from the decode lanes' page-table rows (the exact dedup the visit
+        grid performs on-device, counted host-side for observability)."""
+        st = sharing_stats(rows)
+        self.stats.shared_page_visits += st["shared_page_visits"]
+        self.stats.dup_page_streams_saved += st["dup_page_streams_saved"]
+        hist = self.stats.lanes_per_shared_page
+        for k, n in st["lanes_per_shared_page"].items():
+            hist[k] = hist.get(k, 0) + n
+
     def _build_step(self, plan: StepPlan,
                     device_feed: bool = False) -> StepBatch:
         """Build the whole step's static-shape arrays from the plan — ONE
@@ -624,6 +652,9 @@ class Engine:
             scatter_lane[lane] = lane
             if device_feed:
                 feed[lane] = -1        # device lane feed, never host-sync
+        if len(plan.decode) > 1:
+            self._note_sharing(page_table[[d.req.lane
+                                           for d in plan.decode]])
 
         if device_feed and not plan.prefill:
             # decode fast path: one fused metadata upload (unpacked in
@@ -728,6 +759,8 @@ class Engine:
             samples.append((d.req, False, (i, 0)))
             if device_feed:
                 feed[i] = -1
+        if len(plan.decode) > 1:
+            self._note_sharing(page_table[:len(plan.decode)])
 
         for j, row in enumerate(rows):
             r = len(plan.decode) + j

@@ -180,6 +180,48 @@ def test_sharded_decode_kernel_matches_jnp_reference(mesh, opt_kv_on):
 
 
 @needs_sharded_mesh
+def test_sharded_visit_grid_shard_local_and_matches_reference(mesh):
+    """``share_visits`` under shard_map: every shard plans its visit list
+    AFTER the global->local page remap, so visits reference only
+    shard-local page ids and shared prefix pages dedup inside the one
+    shard that owns them (pages in other shards become -1 holes there).
+    The table here shares prefix pages living in DIFFERENT shards and
+    must match both the jnp reference and the per-lane sharded grid
+    bit-for-bit."""
+    B, Hq, Hkv, D, ps, P_total, NP = 4, 8, 4, 128, 8, 16, 4
+    from repro.cache.quant import quantize_fp8
+    coopt = COOPT.replace(opt_kv=True, use_kernel=False)
+    kv = (jax.random.normal(jax.random.PRNGKey(1),
+                            (2, P_total, ps, Hkv, D), jnp.float32) * 0.3)
+    kv, scale = quantize_fp8(kv, axis=-1)
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, Hq, D), jnp.float32)
+    # prefix pages 0 and 9 shared by ALL lanes (they land in different
+    # shards under the page-range partition); two private tail pages each
+    pt = jnp.asarray([[0, 9, 2 + b, 12 + b] for b in range(B)], jnp.int32)
+    cache_len = jnp.asarray([NP * ps - 3 * b for b in range(B)], jnp.int32)
+    ref = opt_pa.paged_decode_attention(q, kv, scale, cache_len,
+                                        coopt=coopt, page_table=pt)
+
+    phys, log = opt_kv.decode_page_select(cache_len, pt, ps, opt_pa=True)
+    kv_sh = _sharded_pool(mesh, kv, 1)
+    sc_sh = _sharded_pool(mesh, scale, 1)
+    ops.set_mesh_ctx(ops.make_mesh_ctx(mesh))
+    on = ops.paged_pool_decode(q, kv_sh, sc_sh, cache_len, phys, log,
+                               opt_kv=True, opt_gqa=True, share_visits=True)
+    off = ops.paged_pool_decode(q, kv_sh, sc_sh, cache_len, phys, log,
+                                opt_kv=True, opt_gqa=True,
+                                share_visits=False)
+    # near-exact vs the per-lane grid: the visit grid batches all lanes'
+    # rows into one (B*G, ps) score dot where the per-lane grid runs
+    # (G, ps) dots, and the backend's matmul blocking may round a ULP
+    # apart at different M — tolerance covers exactly that, nothing more
+    np.testing.assert_allclose(np.asarray(on, np.float32),
+                               np.asarray(off, np.float32), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(on, np.float32),
+                               np.asarray(ref, np.float32), atol=0.05)
+
+
+@needs_sharded_mesh
 def test_sharded_chunk_kernel_matches_jnp_reference(mesh):
     B, S, Hq, Hkv, D, ps, P_total = 2, 4, 8, 4, 128, 8, 16
     coopt = COOPT.replace(opt_kv=False, use_kernel=False)
