@@ -23,6 +23,9 @@ Passes (stable finding codes):
                              (``repro.analysis.trace_safety``)
   COOPT005  Pallas contracts  index_map / sentinel / VMEM-budget checks
                              (``repro.analysis.pallas_vmem``)
+  COOPT006  fault swallowing  blanket ``except`` handlers that drop
+                             exceptions inside serving loops/workers
+                             (``repro.analysis.exceptions``)
 
 Usage::
 

@@ -188,9 +188,10 @@ def all_passes():
     """The registered passes, in code order. Imported lazily so a syntax
     error in one pass module names itself instead of breaking import of
     the package."""
-    from repro.analysis import (donation, host_sync, mesh_ctx, pallas_vmem,
-                                trace_safety)
-    return [host_sync, donation, mesh_ctx, trace_safety, pallas_vmem]
+    from repro.analysis import (donation, exceptions, host_sync, mesh_ctx,
+                                pallas_vmem, trace_safety)
+    return [host_sync, donation, mesh_ctx, trace_safety, pallas_vmem,
+            exceptions]
 
 
 def run_suite(paths: Sequence[str], *, root: Optional[str] = None,

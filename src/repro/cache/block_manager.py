@@ -436,6 +436,97 @@ class BlockManager:
             else:
                 self._free_by_shard[sb.shard].append(p)
 
+    # -------------------------------------------------------------- audit --
+    def audit(self) -> List[str]:
+        """Invariant auditor: cross-check refcounts, free lists, LRUs and
+        the prefix tables against the ground truth (the live sequences).
+        Returns human-readable violations (empty = the pool is clean) —
+        the chaos suite's oracle after every fault episode, O(pages), not
+        for the hot path. Invariants:
+
+          1. every physical page is in EXACTLY one of {its shard's free
+             list, its shard's LRU, referenced by a live sequence};
+          2. ``_ref[p]`` equals p's multiplicity across live sequences
+             (no leaked or dangling refcounts, none <= 0);
+          3. the shard prefix tables and ``_page_to_hash`` are inverse
+             bijections; LRU pages are all registered, free pages never;
+          4. a sequence's pages are duplicate-free, inside its pinned
+             shard's range, and exactly ``ceil(num_tokens / page_size)``.
+        """
+        out: List[str] = []
+        ps = self.page_size
+
+        counts: Dict[int, int] = {}            # ground-truth refcounts
+        for sid, sb in self._seqs.items():
+            lo, hi = self.shard_ranges[sb.shard]
+            if len(set(sb.pages)) != len(sb.pages):
+                out.append(f"seq {sid}: duplicate page in its page list")
+            need = (sb.num_tokens + ps - 1) // ps
+            if len(sb.pages) != need:
+                out.append(f"seq {sid}: {len(sb.pages)} pages for "
+                           f"{sb.num_tokens} tokens (want {need})")
+            for p in sb.pages:
+                counts[p] = counts.get(p, 0) + 1
+                if not lo <= p < hi:
+                    out.append(f"seq {sid}: page {p} outside its shard "
+                               f"{sb.shard} range [{lo},{hi})")
+        if counts != self._ref:
+            for p in set(counts) | set(self._ref):
+                have, want = self._ref.get(p, 0), counts.get(p, 0)
+                if have != want:
+                    out.append(f"page {p}: refcount {have}, but "
+                               f"{want} live sequence(s) hold it")
+
+        seen: Dict[int, str] = {}              # page -> which home
+        for p in self._ref:
+            seen[p] = "referenced"
+        for s in range(self.num_shards):
+            lo, hi = self.shard_ranges[s]
+            for home, pages in (("free", self._free_by_shard[s]),
+                                ("lru", self._lru_by_shard[s])):
+                for p in pages:
+                    if not lo <= p < hi:
+                        out.append(f"shard {s} {home} list: page {p} "
+                                   f"outside range [{lo},{hi})")
+                    if p in seen:
+                        out.append(f"page {p}: in shard {s} {home} list "
+                                   f"AND {seen[p]}")
+                    seen[p] = f"shard {s} {home}"
+        missing = set(range(self.num_pages)) - set(seen)
+        if missing:
+            out.append(f"leaked pages (no free list, LRU, or live "
+                       f"sequence holds them): {sorted(missing)}")
+
+        # prefix tables <-> _page_to_hash must be inverse bijections
+        entries = 0
+        for s in range(self.num_shards):
+            lo, hi = self.shard_ranges[s]
+            for h, p in self._hash_by_shard[s].items():
+                entries += 1
+                if self._page_to_hash.get(p) != h:
+                    out.append(f"shard {s} prefix table: hash {h} -> page "
+                               f"{p}, but _page_to_hash says "
+                               f"{self._page_to_hash.get(p)}")
+                if not lo <= p < hi:
+                    out.append(f"shard {s} prefix table: page {p} outside "
+                               f"range [{lo},{hi})")
+        if entries != len(self._page_to_hash):
+            out.append(f"{len(self._page_to_hash)} pages registered but "
+                       f"{entries} prefix-table entries")
+        for s in range(self.num_shards):
+            for p in self._lru_by_shard[s]:
+                if p not in self._page_to_hash:
+                    out.append(f"shard {s} LRU: page {p} unregistered "
+                               "(should be on the free list)")
+            for p in self._free_by_shard[s]:
+                if p in self._page_to_hash:
+                    out.append(f"shard {s} free list: page {p} still "
+                               "registered in the prefix table")
+        if not self._seqs and self.pages_in_use:
+            out.append(f"no live sequences but pages_in_use = "
+                       f"{self.pages_in_use}")
+        return out
+
     # ------------------------------------------------------------ mapping --
     def page_table(self, seq_id: int, width: Optional[int] = None) -> np.ndarray:
         """Physical page ids in logical order, padded with -1 to ``width``

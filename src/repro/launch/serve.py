@@ -66,7 +66,9 @@ class ServeRunner:
                  temperature: float = 0.0, num_shards: int = 1,
                  mesh=None, use_async: bool = False,
                  arrival_rate: float = 0.0, pack: bool = False,
-                 assert_aot: bool = False, warmup_pass: bool = False):
+                 assert_aot: bool = False, warmup_pass: bool = False,
+                 deadline_s: float = 0.0, max_queue_depth=None,
+                 max_queued_tokens=None):
         # Pallas kernels run compiled on TPU, interpret-mode elsewhere
         from repro.kernels import ops
         ops.configure_for_backend()
@@ -83,13 +85,20 @@ class ServeRunner:
         self.offsets = poisson_offsets(requests, arrival_rate, seed)
         self.use_async = use_async
         self.assert_aot = assert_aot
+        self.deadline_s = deadline_s
         self.meta = {"arch": arch, "mode": mode, "requests": requests,
                      "async": use_async, "pack_prefill": pack,
-                     "arrival_rate_req_s": arrival_rate}
+                     "arrival_rate_req_s": arrival_rate,
+                     "deadline_s": deadline_s,
+                     "max_queue_depth": max_queue_depth,
+                     "max_queued_tokens": max_queued_tokens}
         self.frontend = None
+        self.last_streams = []          # TokenStreams of the last async pass
         if use_async:
             from repro.launch.steps import serving_warmup
-            self.frontend = AsyncEngine(self.engine, warmup=False)
+            self.frontend = AsyncEngine(self.engine, warmup=False,
+                                        max_queue_depth=max_queue_depth,
+                                        max_queued_tokens=max_queued_tokens)
             self.meta.update(serving_warmup(self.engine))
         if warmup_pass:
             # one full pass of the identical workload before the clock
@@ -124,6 +133,31 @@ class ServeRunner:
                 f"{self.engine.aot_misses}, retraces={retraced}")
         return rep
 
+    def outcome_report(self, wall: float) -> dict:
+        """Terminal-status breakdown of the last async pass (resilience
+        lane): per-``FinishReason`` counts plus goodput — tokens of
+        requests that actually FINISHED per wall second, the number an
+        overloaded deployment gets paid for (shed/expired work is load the
+        resilience layer refused, so it never counts)."""
+        from repro.serving import FinishReason
+        streams = self.last_streams
+        by_reason = {r.name.lower(): 0 for r in FinishReason}
+        good_tokens = 0
+        for s in streams:
+            assert s.finish_reason is not None, \
+                f"stream {s.req.req_id} left without a terminal status"
+            by_reason[s.finish_reason.name.lower()] += 1
+            if s.finish_reason is FinishReason.FINISHED:
+                good_tokens += len(s.req.output)
+        n = max(len(streams), 1)
+        return {
+            "outcomes": by_reason,
+            "submitted": len(streams),
+            "goodput_tok_s": round(good_tokens / max(wall, 1e-9), 2),
+            "shed_rate": round(by_reason["shed"] / n, 4),
+            "deadline_hit_rate": round(by_reason["finished"] / n, 4),
+        }
+
     # ------------------------------------------------------------- passes --
     def _run_pass(self) -> float:
         return (self._async_pass() if self.use_async else self._sync_pass())
@@ -131,13 +165,15 @@ class ServeRunner:
     def _async_pass(self) -> float:
         frontend = self.frontend
         pending = list(zip(self.offsets, self.reqs))
+        self.last_streams = streams = []
         t0 = time.perf_counter()
 
         def _submit_due():
             while pending and time.perf_counter() - t0 >= pending[0][0]:
                 _, r = pending.pop(0)
-                frontend.submit(r.prompt, max_new_tokens=r.max_new_tokens,
-                                eos_token=r.eos_token)
+                streams.append(frontend.submit(
+                    r.prompt, max_new_tokens=r.max_new_tokens,
+                    eos_token=r.eos_token, deadline_s=self.deadline_s))
 
         _submit_due()
         while pending:
@@ -203,6 +239,9 @@ def serve_workload(arch: str, mode: str, *, repeats: int = 1,
     out.update(best)
     out["repeat_wall_s"] = walls
     out.update(runner.trace_report())
+    if runner.use_async and runner.last_streams:
+        # terminal-status breakdown of the LAST pass (streams are per-pass)
+        out.update(runner.outcome_report(walls[-1]))
     return out
 
 
@@ -272,6 +311,16 @@ def main(argv=None):
     ap.add_argument("--assert-aot", action="store_true",
                     help="fail if any steady-state step misses the AOT "
                          "cache or re-traces (CI warmup smoke)")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-request deadline (s from submission; 0 = "
+                         "none). Queued requests past it are shed "
+                         "TIMED_OUT. Needs --async")
+    ap.add_argument("--max-queue-depth", type=int, default=None,
+                    help="load-shed watermark: pending requests beyond "
+                         "this are fast-rejected SHED at submit")
+    ap.add_argument("--max-queued-tokens", type=int, default=None,
+                    help="load-shed watermark: pending prompt tokens "
+                         "beyond this fast-reject SHED at submit")
     ap.add_argument("--repeats", type=int, default=1,
                     help="measured passes (best wall reported)")
     args = ap.parse_args(argv)
@@ -289,7 +338,10 @@ def main(argv=None):
                          num_shards=args.shards, mesh=mesh,
                          use_async=args.use_async,
                          arrival_rate=args.arrival_rate, pack=args.pack,
-                         assert_aot=args.assert_aot, repeats=args.repeats)
+                         assert_aot=args.assert_aot, repeats=args.repeats,
+                         deadline_s=args.deadline,
+                         max_queue_depth=args.max_queue_depth,
+                         max_queued_tokens=args.max_queued_tokens)
     print(json.dumps(out, indent=2))
 
 

@@ -1,7 +1,10 @@
 from repro.serving.engine import Engine, EngineConfig
-from repro.serving.frontend import AsyncEngine, TokenStream
-from repro.serving.request import Request, RequestState
+from repro.serving.faults import FaultInjector, FaultPlan
+from repro.serving.frontend import (AsyncEngine, PipelineStallError,
+                                    TokenStream, WorkerKilled)
+from repro.serving.request import FinishReason, Request, RequestState
 from repro.serving.sampler import SamplingParams
 
-__all__ = ["AsyncEngine", "Engine", "EngineConfig", "Request",
-           "RequestState", "SamplingParams", "TokenStream"]
+__all__ = ["AsyncEngine", "Engine", "EngineConfig", "FaultInjector",
+           "FaultPlan", "FinishReason", "PipelineStallError", "Request",
+           "RequestState", "SamplingParams", "TokenStream", "WorkerKilled"]

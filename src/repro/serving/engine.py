@@ -58,7 +58,7 @@ from repro.kernels.visits import sharing_stats
 from repro.configs.base import ModelConfig
 from repro.core.coopt import CoOptConfig, COOPT
 from repro.models import get_model
-from repro.serving.request import Request, RequestState
+from repro.serving.request import FinishReason, Request, RequestState
 from repro.serving.sampler import SamplingParams, sample
 from repro.serving.scheduler import (DecodeItem, PrefillChunk, Scheduler,
                                      StepPlan, bucket_len, chunk_pages,
@@ -87,6 +87,10 @@ class EngineConfig:
                                     # (dense/moe/mla families)
     pack_slots: int = 4             # sampled-logit slots per packed row
                                     # (max final chunks packed together)
+    max_preemptions: int = 32       # preemption bound per request: past it
+                                    # the request is rejected
+                                    # (PREEMPTION_LIMIT) instead of
+                                    # livelocking the pool
 
 
 @dataclass
@@ -123,6 +127,14 @@ class EngineStats:
     prefix_cache_hits: int = 0      # full prompt pages reused, not recomputed
     preemptions: int = 0
     rejected: int = 0
+    # ----------------------------------------------------- resilience ----
+    shed: int = 0                   # fast-rejected at submit (overload
+                                    # watermark; AsyncEngine only)
+    deadline_shed: int = 0          # queued requests shed TIMED_OUT
+    preemption_limit_rejects: int = 0  # rejected past max_preemptions
+    errors: int = 0                 # requests terminated by a pipeline
+                                    # fault (step exception, worker death,
+                                    # stall watchdog)
     # --------------------------------------------------- sharded pool ----
     num_shards: int = 1
     shard_pages: Tuple[int, ...] = ()          # page-range size per shard
@@ -174,6 +186,14 @@ class EngineStats:
                     float(self.shared_page_visits),  # coopt: allow[COOPT001]
                 "dup_page_streams_saved":
                     float(self.dup_page_streams_saved),  # coopt: allow[COOPT001]
+                "shed":
+                    float(self.shed),  # coopt: allow[COOPT001]
+                "deadline_shed":
+                    float(self.deadline_shed),  # coopt: allow[COOPT001]
+                "preemption_limit_rejects":
+                    float(self.preemption_limit_rejects),  # coopt: allow[COOPT001]
+                "errors":
+                    float(self.errors),  # coopt: allow[COOPT001]
                 }
 
     def pool_utilization(self) -> float:
@@ -277,7 +297,11 @@ class Engine:
             token_budget=engine_cfg.token_budget or None,
             enable_prefix_cache=engine_cfg.enable_prefix_cache,
             num_shards=engine_cfg.num_shards,
-            page_aligned=bool(self._rec_leaves))
+            page_aligned=bool(self._rec_leaves),
+            max_preemptions=engine_cfg.max_preemptions)
+        # deterministic fault-injection hook layer (serving.faults); None in
+        # production — the chaos suite installs a seeded FaultInjector here
+        self.faults = None
         # chain-hash(prefix pages) -> per-lane state slices; the manager's
         # prefix_gate makes page matching stop at the last boundary we can
         # actually restore
@@ -449,11 +473,11 @@ class Engine:
     def _emit(self, req: Request, tok: int, now: float,
               first: bool) -> bool:
         """Deliver one sampled token. Returns False when the token is
-        DROPPED: the request was cancelled, or already done (the async
-        pipeline's <= 1-step EOS overrun)."""
+        DROPPED: the request already terminated (cancelled, rejected, shed,
+        errored) or is done (the async pipeline's <= 1-step EOS overrun)."""
         if req.inflight > 0:
             req.inflight -= 1
-        if req.state is RequestState.CANCELLED or req.done():
+        if req.is_terminal or req.done():
             return False
         req.output.append(tok)
         self.stats.generated_tokens += 1
@@ -479,6 +503,7 @@ class Engine:
                 if r in self.scheduler.waiting:
                     self.scheduler.waiting.remove(r)
                 r.state = RequestState.FINISHED
+                r.finish(FinishReason.FINISHED)
             elif r.state is RequestState.RUNNING:
                 self.scheduler.finish(r)
             else:
@@ -505,6 +530,8 @@ class Engine:
         s.prefix_cache_hits = mgr.prefix_hits
         s.preemptions = self.scheduler.preemptions
         s.rejected = len(self.scheduler.rejected)
+        s.deadline_shed = self.scheduler.deadline_shed
+        s.preemption_limit_rejects = self.scheduler.preemption_limit_rejects
         # per-shard health (page-range ownership along the mesh data/pod axes)
         n = mgr.num_shards
         s.num_shards = n
@@ -816,6 +843,8 @@ class Engine:
         """Synchronous dispatch: run the step, block, attribute wall time
         by planned token share (a prefill-heavy mixed step must not book
         its whole wall time under decode — Eq. 12)."""
+        if self.faults is not None:
+            self.faults.before_execute(sb)
         fn = {"prefill": self._prefill_fn, "decode": self._decode_fn,
               "packed": self._packed_fn}[sb.kind]
         t0 = time.perf_counter()
@@ -897,6 +926,8 @@ class Engine:
         """Dispatch one pipeline step WITHOUT blocking: prefer the AOT
         executable warmed up for this shape (zero traces in steady state);
         fall back to the jit path and count the miss."""
+        if self.faults is not None:
+            self.faults.before_execute(sb)
         if self.ecfg.sampling.temperature > 0:
             self.key, sub = jax.random.split(self.key)
         else:
@@ -1004,12 +1035,29 @@ class Engine:
         req.enqueue_time = time.perf_counter()
         self.scheduler.add_request(req)
 
+    def abort_all(self, exc: Optional[BaseException] = None
+                  ) -> List[Request]:
+        """Fault drain: terminate every live request with ERROR, returning
+        the pool to zero pages in use. Returns the drained requests so the
+        caller (sync loop re-raise, async ``_fail``) can surface the fault
+        per stream."""
+        drained = self.scheduler.abort_all(FinishReason.ERROR, exc)
+        self.stats.errors += len(drained)
+        self._update_pool_stats()
+        return drained
+
     def step(self) -> None:
         plan = self.scheduler.schedule_step()
         if plan.empty:
             self._update_pool_stats()       # rejections still count
             return
-        self._run_mixed(plan)
+        try:
+            self._run_mixed(plan)
+        except Exception as exc:
+            # a step fault must not leak pool pages or strand requests:
+            # drain everything as ERROR, then surface the fault
+            self.abort_all(exc)
+            raise
         self._update_pool_stats()
 
     def run(self, max_steps: int = 100_000) -> None:

@@ -21,6 +21,14 @@ request over (Engine.generate / AsyncEngine.submit — the TTFT anchor, so
 queue wait counts); ``enqueue_time`` when the scheduler queue receives it;
 ``admit_time`` at first lane admission (queue_wait = admit - submit);
 ``prefill_time`` at first-token emission.
+
+Terminal status: every request ends with a ``FinishReason`` — the
+STRUCTURED terminal status clients observe (``TokenStream.finish_reason``
+after the stream closes, or ``Request.finish_reason`` from
+``Engine.generate(return_requests=True)``). It is set exactly once, at the
+moment the terminal event happens (``Request.finish``), never at an
+idle-sweep. ``RequestState`` stays the engine-internal lifecycle;
+``FinishReason`` is the client-facing WHY.
 """
 from __future__ import annotations
 
@@ -40,6 +48,36 @@ class RequestState(enum.Enum):
     CANCELLED = "cancelled"
 
 
+class FinishReason(enum.Enum):
+    """Why a request's stream terminated (set once, at the terminal event).
+
+    FINISHED          — ran to completion (EOS or ``max_new_tokens``).
+    REJECTED          — can never be served (prompt + generation budget over
+                        the per-request cap); surfaced at admission time.
+    CANCELLED         — the client gave up (``AsyncEngine.cancel``).
+    TIMED_OUT         — ``deadline_s`` expired while the request was still
+                        QUEUED; the scheduler shed it instead of serving
+                        work nobody is waiting for.
+    SHED              — fast-rejected at ``AsyncEngine.submit`` because the
+                        queue was past its depth/token watermark (overload
+                        degrades to bounded queueing, not unbounded
+                        latency).
+    PREEMPTION_LIMIT  — preempted more than ``max_preemptions`` times; the
+                        pool is thrashing and this request will never make
+                        progress, so it is rejected instead of livelocking.
+    ERROR             — a pipeline fault (emit-worker death, step
+                        exception, stall watchdog) terminated it; the
+                        exception rides on ``Request.error`` / the stream.
+    """
+    FINISHED = "finished"
+    REJECTED = "rejected"
+    CANCELLED = "cancelled"
+    TIMED_OUT = "timed_out"
+    SHED = "shed"
+    PREEMPTION_LIMIT = "preemption_limit"
+    ERROR = "error"
+
+
 @dataclass
 class Request:
     req_id: int
@@ -47,6 +85,11 @@ class Request:
     max_new_tokens: int = 64
     eos_token: Optional[int] = None
     arrival_time: float = 0.0
+    deadline_s: float = 0.0                  # client latency budget from
+                                             # submission (0 = none); the
+                                             # scheduler sheds QUEUED work
+                                             # whose deadline passed
+                                             # (TIMED_OUT)
 
     # runtime state
     state: RequestState = RequestState.WAITING
@@ -78,6 +121,9 @@ class Request:
     inflight: int = 0                        # tokens sampled on device but
                                              # not yet host-emitted (async
                                              # pipeline; 0 in the sync loop)
+    finish_reason: Optional[FinishReason] = None   # structured terminal
+                                             # status, set ONCE via finish()
+    error: Optional[BaseException] = None    # the fault behind ERROR
 
     @property
     def prompt_len(self) -> int:
@@ -104,3 +150,28 @@ class Request:
             return True
         return (self.eos_token is not None and self.output
                 and self.output[-1] == self.eos_token)
+
+    @property
+    def deadline(self) -> Optional[float]:
+        """Absolute ``perf_counter`` deadline, anchored at submission (else
+        scheduler-queue arrival); None when the request carries none."""
+        if self.deadline_s <= 0:
+            return None
+        t0 = self.submit_time if self.submit_time >= 0 else self.enqueue_time
+        return t0 + self.deadline_s if t0 >= 0 else None
+
+    @property
+    def is_terminal(self) -> bool:
+        return self.finish_reason is not None
+
+    def finish(self, reason: FinishReason,
+               error: Optional[BaseException] = None) -> bool:
+        """Record the terminal status. First writer wins — a request that
+        already terminated (e.g. cancelled while its rejection was in
+        flight) keeps its original reason. Returns True if this call set
+        it."""
+        if self.finish_reason is not None:
+            return False
+        self.finish_reason = reason
+        self.error = error
+        return True

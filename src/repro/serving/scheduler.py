@@ -40,19 +40,33 @@ Each engine step is composed under a TOKEN BUDGET (Sarathi-style):
   * requests that can NEVER be served (prompt + generation budget over the
     per-request cap — ``max_len`` or the largest shard's page range) are
     marked ``REJECTED`` and surfaced, not silently dropped.
+
+Resilience rules (every terminal decision carries a ``FinishReason`` and
+fires ``on_terminal`` at the moment it happens, so frontends can close the
+client's stream immediately instead of at idle-sweep time):
+
+  * **deadline shedding** — a QUEUED request whose ``deadline_s`` expired
+    is shed (``TIMED_OUT``) at the top of every scheduling turn; the
+    engine never spends a device step on work nobody is waiting for.
+    Running requests are never killed mid-flight — the deadline is an
+    admission contract, not an execution interrupt.
+  * **bounded preemption** — a request preempted more than
+    ``max_preemptions`` times is rejected (``PREEMPTION_LIMIT``) instead
+    of ping-ponging through the pool forever: unbounded preemption under
+    sustained pressure is a livelock, not a policy.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import numpy as np
 
 from repro.cache.block_manager import (BlockManager, OutOfBlocks,
                                        padded_pool_pages)
-from repro.serving.request import Request, RequestState
+from repro.serving.request import FinishReason, Request, RequestState
 
 
 def bucket_len(n: int, buckets: List[int]) -> Optional[int]:
@@ -104,7 +118,8 @@ class Scheduler:
                  token_budget: Optional[int] = None,
                  enable_prefix_cache: bool = True,
                  num_shards: int = 1,
-                 page_aligned: bool = False):
+                 page_aligned: bool = False,
+                 max_preemptions: int = 32):
         self.num_lanes = num_lanes
         self.max_len = max_len                 # per-REQUEST cap, not per-lane
         self.page_size = page_size
@@ -136,6 +151,14 @@ class Scheduler:
         self.placement_misses = 0        # prefix lived on a shard we could
                                          # not use -> cross-shard reuse lost
         self.rejected: List[Request] = []
+        self.max_preemptions = max(int(max_preemptions), 0)
+        self.deadline_shed = 0           # queued requests shed TIMED_OUT
+        self.preemption_limit_rejects = 0
+        # fired the MOMENT a request terminates without ever reaching the
+        # step path (REJECTED / TIMED_OUT / PREEMPTION_LIMIT), so the async
+        # frontend can close the client's stream immediately — a client
+        # blocked on stream.get() must not wait for the pipeline to idle
+        self.on_terminal: Optional[Callable[[Request], None]] = None
         self._next_pool_id = 0             # engine-unique allocator keys
                                            # (req_ids may collide across
                                            # streams; the pool must not)
@@ -150,9 +173,32 @@ class Scheduler:
         not prefill chunks)."""
         return req.prefill_target
 
-    def _reject(self, req: Request) -> None:
+    def _reject(self, req: Request,
+                reason: FinishReason = FinishReason.REJECTED) -> None:
         req.state = RequestState.REJECTED
+        req.finish(reason)
         self.rejected.append(req)
+        if self.on_terminal is not None:
+            self.on_terminal(req)
+
+    def _shed_expired(self) -> None:
+        """Shed QUEUED requests whose deadline has passed (TIMED_OUT).
+        Safe with in-flight sampled tokens (async pipeline): the emission
+        path drops tokens for terminal requests, and a preempted request's
+        pages were already freed at preemption."""
+        if not any(r.deadline is not None for r in self.waiting):
+            return
+        now = time.perf_counter()
+        kept: Deque[Request] = deque()
+        while self.waiting:
+            r = self.waiting.popleft()
+            dl = r.deadline
+            if dl is not None and now >= dl:
+                self._reject(r, FinishReason.TIMED_OUT)
+                self.deadline_shed += 1
+            else:
+                kept.append(r)
+        self.waiting = kept
 
     def _chunk_len(self, lo: int, remaining: int, budget: int) -> int:
         """Length of the next chunk of a prompt starting at logical position
@@ -178,19 +224,26 @@ class Scheduler:
     def preempt(self, req: Request) -> None:
         """Evict a running request: free its references (shared pages stay
         alive under their other owners / the prefix cache) and requeue it at
-        the FRONT with everything-so-far as its new prompt."""
+        the FRONT with everything-so-far as its new prompt. A request past
+        ``max_preemptions`` is rejected (PREEMPTION_LIMIT) instead of
+        requeued — under sustained pressure the preempt/re-admit cycle is a
+        livelock, and a bounded reject lets the client retry elsewhere."""
         self.manager.free(req.pool_id)
         del self.running[req.lane]
         self.free_lanes.append(req.lane)
         req.lane = -1
         req.num_computed = 0
         req.num_preemptions += 1
-        req.state = RequestState.PREEMPTED
-        self.waiting.appendleft(req)
         self.preemptions += 1
         if 0 <= req.shard < self.num_shards:
             self.preemptions_by_shard[req.shard] += 1
         req.shard = -1                    # re-placed at re-admission
+        if req.num_preemptions > self.max_preemptions:
+            self.preemption_limit_rejects += 1
+            self._reject(req, FinishReason.PREEMPTION_LIMIT)
+            return
+        req.state = RequestState.PREEMPTED
+        self.waiting.appendleft(req)
 
     def _append_with_preemption(self, req: Request) -> Optional[int]:
         """Grow ``req`` by one decode slot, preempting the youngest running
@@ -235,6 +288,7 @@ class Scheduler:
     # --------------------------------------------------------------- plan --
     def schedule_step(self) -> StepPlan:
         """Compose one engine step under the token budget."""
+        self._shed_expired()
         plan = StepPlan()
         budget = self.token_budget
         mgr = self.manager
@@ -341,17 +395,19 @@ class Scheduler:
 
     def finish(self, req: Request) -> None:
         req.state = RequestState.FINISHED
+        req.finish(FinishReason.FINISHED)
         self.manager.free(req.pool_id)
         del self.running[req.lane]
         self.free_lanes.append(req.lane)
         req.lane = -1
 
-    def release(self, req: Request) -> None:
-        """Cancel support: drop ``req`` wherever it currently lives — free
-        its pool pages and lane if running, or unlink it from the waiting
-        queue. Safe with in-flight sampled tokens: the async pipeline drops
-        them at emission (state CANCELLED), and device-order execution
-        keeps already-dispatched steps ahead of any page reuse."""
+    def release(self, req: Request,
+                reason: FinishReason = FinishReason.CANCELLED) -> None:
+        """Cancel/abort support: drop ``req`` wherever it currently lives —
+        free its pool pages and lane if running, or unlink it from the
+        waiting queue. Safe with in-flight sampled tokens: the async
+        pipeline drops them at emission (terminal state), and device-order
+        execution keeps already-dispatched steps ahead of any page reuse."""
         if req.state is RequestState.RUNNING:
             self.manager.free(req.pool_id)
             del self.running[req.lane]
@@ -360,6 +416,18 @@ class Scheduler:
         elif req in self.waiting:
             self.waiting.remove(req)
         req.state = RequestState.CANCELLED
+        req.finish(reason)
+
+    def abort_all(self, reason: FinishReason,
+                  error: Optional[BaseException] = None) -> List[Request]:
+        """Fault drain: release EVERY live request (running and queued) so
+        the pool holds zero pages, marking each with ``reason``. Returns
+        the drained requests so the caller can close their streams."""
+        drained = list(self.running.values()) + list(self.waiting)
+        for req in drained:
+            req.finish(reason, error)
+            self.release(req, reason)
+        return drained
 
     # ------------------------------------------------------------ queries --
     def active_lanes(self) -> List[int]:

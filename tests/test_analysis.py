@@ -305,6 +305,67 @@ def test_vmem_report_covers_repo_kernels():
     assert all(e["under_budget"] for e in report)
 
 
+# ------------------------------------------------------------- COOPT006 --
+BAD_EXCEPT = """
+    class Worker:
+        def run(self):
+            while True:
+                try:
+                    self.step()
+                except Exception:
+                    pass                    # fault swallowed
+"""
+
+GOOD_EXCEPT = """
+    class Worker:
+        def run(self):
+            try:
+                self.step()
+            except Exception as exc:
+                self.post(exc)              # recorded, not swallowed
+            try:
+                self.step()
+            except ValueError:
+                pass                        # narrow handlers are policy
+            try:
+                self.step()
+            except Exception:
+                self.note()
+                raise                       # re-raised
+"""
+
+
+def test_exceptions_bad(tmp_path):
+    live, *_ = _lint(tmp_path, "serving/worker.py", BAD_EXCEPT)
+    assert _codes(live) == ["COOPT006"]
+    assert live[0].symbol == "Worker.run"
+
+
+def test_exceptions_good(tmp_path):
+    live, *_ = _lint(tmp_path, "serving/worker.py", GOOD_EXCEPT)
+    assert live == []
+
+
+def test_exceptions_bound_but_unused(tmp_path):
+    src = BAD_EXCEPT.replace("except Exception:",
+                             "except Exception as exc:")
+    live, *_ = _lint(tmp_path, "serving/worker.py", src)
+    assert _codes(live) == ["COOPT006"]
+
+
+def test_exceptions_bare_except(tmp_path):
+    src = BAD_EXCEPT.replace("except Exception:", "except:")
+    live, *_ = _lint(tmp_path, "serving/worker.py", src)
+    assert _codes(live) == ["COOPT006"]
+    assert "bare except" in live[0].message
+
+
+def test_exceptions_only_serving_modules(tmp_path):
+    # the same swallow outside serving/ is not this pass's business
+    live, *_ = _lint(tmp_path, "benchmarks/run.py", BAD_EXCEPT)
+    assert live == []
+
+
 # --------------------------------------------- suppression and baseline --
 def test_inline_suppression(tmp_path):
     src = BAD_SYNC.replace(
