@@ -35,6 +35,13 @@ arrivals, no deadlines/watermarks) is reported alongside so the
 trade is explicit: protection converts queue-wait collapse into
 fast-rejected load.
 
+A fourth, CAPACITY section sizes the device pool several times SMALLER
+than the shared-prefix working set and measures the host-DRAM spill tier
+(``CacheConfig.host_pages``): per working-set multiple, prefix hit rate
+(split device/host) and TTFT p50 with the tier on vs off. The tier turns
+capacity misses into host hits — the hit-rate gap (and the TTFT gap it
+buys) is the paper's hierarchical-cache effect.
+
 On this CPU container wall-clock ratios are indicative (interpret-mode
 kernels are emulated; the jnp path dominates); the pipeline/packing deltas
 are real host-side effects and carry to TPU.
@@ -110,6 +117,88 @@ def _overload(quick: bool) -> dict:
     return out
 
 
+def _capacity(quick: bool) -> dict:
+    """Hierarchical-cache capacity lane: shared-prefix working sets 2-10x
+    the device pool, tier on (``host_pages``) vs off, identical greedy
+    workload. Reports the residency-split prefix hit rate and TTFT p50 per
+    cell; the measured pass follows one warmup pass (compile excluded,
+    tier in steady state), with hit counters delta'd against a
+    pre-measure snapshot of the allocator's cumulative stats."""
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core.coopt import MODES
+    from repro.serving import CacheConfig, Engine, EngineConfig
+
+    cfg = get_config(ARCH)
+    coopt = MODES["coopt"]
+    ps = coopt.page_size                       # 64-token pages
+    lanes, pool_pages = 2, 9                   # 8 usable device pages
+    usable = pool_pages - 1
+
+    def _prompts(mult: int):
+        # k two-page prefixes -> working set ~= 2k prefix pages =
+        # mult*usable, replayed in 2 rounds so every prefix recurs at a
+        # reuse distance far past the device pool. A hit restores 128
+        # prefill tokens from host DRAM; only the 16-token tail computes.
+        k = mult * usable // 2
+        rng = np.random.default_rng(3)
+        prefixes = [rng.integers(10, cfg.vocab_size - 10, 2 * ps,
+                                 dtype=np.int32) for _ in range(k)]
+        out = []
+        for _ in range(2):
+            for p in prefixes:
+                out.append(np.concatenate(
+                    [p, rng.integers(10, cfg.vocab_size - 10, 16,
+                                     dtype=np.int32)]))
+        return out
+
+    def _cell(host_pages: int, prompts):
+        ecfg = EngineConfig(
+            num_lanes=lanes, max_len=256, prefill_buckets=(32, 64, 128, 256),
+            seed=0, cache=CacheConfig(num_pages=pool_pages,
+                                      host_pages=host_pages))
+        eng = Engine(cfg, coopt, ecfg)
+        eng.generate(prompts, max_new_tokens=8)          # warmup pass
+        mgr = eng.scheduler.manager
+        snap = (mgr.prefix_queries, mgr.prefix_hits,
+                mgr.prefix_device_hits, mgr.prefix_host_hits)
+        eng.stats.__init__()
+        outs = eng.generate(prompts, max_new_tokens=8)
+        s = eng.stats
+        q = max(mgr.prefix_queries - snap[0], 1)
+        assert eng.scheduler.manager.audit() == []
+        return {
+            "prefix_hit_rate": round((mgr.prefix_hits - snap[1]) / q, 4),
+            "prefix_device_hit_rate":
+                round((mgr.prefix_device_hits - snap[2]) / q, 4),
+            "prefix_host_hit_rate":
+                round((mgr.prefix_host_hits - snap[3]) / q, 4),
+            "ttft_p50_s": round(s.ttft(50), 4),
+            "spilled_pages": s.spilled_pages,
+            "prefetch_committed": s.prefetch_committed,
+            "prefetch_aborted": s.prefetch_aborted,
+            "preemptions": s.preemptions,
+        }, outs
+
+    mults = (4,) if quick else (2, 4, 10)
+    out = {"device_pool_pages": usable, "host_pages": 64,
+           "page_size": ps, "lanes": lanes}
+    for mult in mults:
+        prompts = _prompts(mult)
+        on, outs_on = _cell(64, prompts)
+        off, outs_off = _cell(0, prompts)
+        cell = {"working_set_pages": mult * usable, "requests": len(prompts),
+                "tier_on": on, "tier_off": off,
+                "bit_identical": outs_on == outs_off}
+        out[f"x{mult}"] = cell
+        print(f"bench_serving[capacity/x{mult}]: hit rate "
+              f"{on['prefix_hit_rate']} (host {on['prefix_host_hit_rate']})"
+              f" vs {off['prefix_hit_rate']} off, ttft p50 "
+              f"{on['ttft_p50_s']} vs {off['ttft_p50_s']} s, "
+              f"bit-identical {cell['bit_identical']}", flush=True)
+    return out
+
+
 def run(quick: bool = False):
     # decode-heavy regime (short prompts, long generations): steady-state
     # decode steps dominate, where the pipeline's per-step host savings
@@ -128,7 +217,8 @@ def run(quick: bool = False):
                     "included); compile excluded per config (sync warmup "
                     "pass / async AOT warmup); cells measured in "
                     "interleaved rounds, best wall per cell"),
-           "poisson": {}, "prefill_pack": {}, "overload": {}}
+           "poisson": {}, "prefill_pack": {}, "overload": {},
+           "capacity": {}}
 
     out["poisson"] = _interleaved(
         {"sync": base,
@@ -153,6 +243,18 @@ def run(quick: bool = False):
     # --- overload/resilience lane: goodput under saturation --------------
     out["overload"] = _overload(quick)
 
+    # --- capacity lane: host-DRAM spill tier under memory pressure -------
+    out["capacity"] = _capacity(quick)
+    cap4 = out["capacity"]["x4"]
+    out["capacity_tier_hit_rate_2x"] = (
+        cap4["tier_on"]["prefix_hit_rate"]
+        >= 2 * cap4["tier_off"]["prefix_hit_rate"])
+    out["capacity_tier_ttft_wins"] = (
+        cap4["tier_on"]["ttft_p50_s"] <= cap4["tier_off"]["ttft_p50_s"])
+    out["capacity_bit_identical"] = all(
+        c["bit_identical"] for k, c in out["capacity"].items()
+        if k.startswith("x"))
+
     out["async_ge_sync_tok_s"] = (
         out["poisson"]["async"]["wall_throughput_tok_s"]
         >= out["poisson"]["sync"]["wall_throughput_tok_s"])
@@ -167,6 +269,7 @@ def run(quick: bool = False):
     print(f"bench_serving: async>=sync {out['async_ge_sync_tok_s']}, "
           f"packed prefill speedup {out['prefill_pack']['packed_speedup']}x"
           f", overload shed {out['overload']['protected']['shed_rate']}"
+          f", capacity 2x-hit-rate {out['capacity_tier_hit_rate_2x']}"
           f" -> {path}", flush=True)
     return out
 

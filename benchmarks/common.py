@@ -28,17 +28,19 @@ def write_csv(name: str, header: List[str], rows: List[List]) -> str:
 def run_engine_workload(cfg, coopt, *, requests: int = 8, num_lanes: int = 3,
                         max_len: int = 256, max_new_tokens: int = 12,
                         scale: float = 0.1, seed: int = 0,
-                        warmup: bool = True, num_shards: int = 1) -> Dict:
+                        warmup: bool = True, num_shards: int = 1,
+                        cache=None) -> Dict:
     """One (model, mode) cell of Figs. 6-7: a fixed synthetic ShareGPT mix
     through the continuous-batching engine. Returns Eq. 11/12 metrics
     measured AFTER a warmup pass (jit compile excluded, like the paper's
-    steady-state serving numbers)."""
+    steady-state serving numbers). ``cache``: optional CacheConfig (pool
+    size override / host-DRAM spill tier)."""
     from repro.data import RequestStream
     from repro.serving import Engine, EngineConfig
 
     ecfg = EngineConfig(num_lanes=num_lanes, max_len=max_len,
                         prefill_buckets=(16, 32, 64, 128, max_len),
-                        seed=seed, num_shards=num_shards)
+                        seed=seed, num_shards=num_shards, cache=cache)
     engine = Engine(cfg, coopt, ecfg)
     stream = RequestStream(cfg.vocab_size, seed=seed, scale=scale)
     reqs = stream.take(requests, max_new_tokens=max_new_tokens)
@@ -71,6 +73,13 @@ def run_engine_workload(cfg, coopt, *, requests: int = 8, num_lanes: int = 3,
         "peak_pool_utilization": round(
             s.peak_pages_in_use / max(s.pool_pages, 1), 4),
         "prefix_hit_rate": round(s.prefix_hit_rate(), 4),
+        # residency-split hit accounting: device-resident vs restored from
+        # the host-DRAM tier vs recomputed (miss)
+        "prefix_device_hit_rate": round(s.prefix_device_hit_rate(), 4),
+        "prefix_host_hit_rate": round(s.prefix_host_hit_rate(), 4),
+        "prefix_miss_rate": round(s.prefix_miss_rate(), 4),
+        "spilled_pages": s.spilled_pages,
+        "prefetch_committed": s.prefetch_committed,
         "preemptions": s.preemptions,
         # cross-lane prefix sharing seen by decode steps (the page visits
         # the kernels' visit grid dedups; see kernels.visits) — scalar

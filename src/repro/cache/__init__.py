@@ -1,5 +1,7 @@
-from repro.cache.quant import (FP8_DTYPE, FP8_MAX, dequantize_fp8,
-                               quantize_fp8, quant_roundtrip_error)
+from repro.cache.quant import (FP8_DTYPE, FP8_MAX, HostPage, decode_host_page,
+                               dequantize_fp8, encode_host_page, quantize_fp8,
+                               quant_roundtrip_error)
 
-__all__ = ["FP8_DTYPE", "FP8_MAX", "dequantize_fp8", "quantize_fp8",
+__all__ = ["FP8_DTYPE", "FP8_MAX", "HostPage", "decode_host_page",
+           "dequantize_fp8", "encode_host_page", "quantize_fp8",
            "quant_roundtrip_error"]

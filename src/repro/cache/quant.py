@@ -8,6 +8,9 @@ tensors" the paper calls out (§1, ref [9-11]).
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Dict
+
 import jax
 import jax.numpy as jnp
 
@@ -53,6 +56,68 @@ def dequantize_latent(q: jax.Array, scales: jax.Array, lora_rank: int,
     r = dequantize_fp8(q[..., lora_rank:], scales[..., 1], axis=-1,
                        dtype=dtype)
     return jnp.concatenate([c, r], axis=-1)
+
+
+# --------------------------------------------- host-DRAM spill page codec --
+@dataclasses.dataclass
+class HostPage:
+    """One spilled prefix page: a per-pool-leaf slice of the device pool,
+    moved host-side by the hierarchical cache's spill sink.
+
+    ``leaves`` holds one array per pool leaf (the page slice with the
+    ``pages`` axis removed). When ``encoded`` is set, bf16 leaves were
+    fp8-quantized on spill and ``scales[name]`` carries the per-vector f32
+    scales needed to dequantize on prefetch; fp8 / f32 leaves (opt_kv pools
+    and their scale leaves) are always carried verbatim so the spill →
+    prefetch roundtrip stays byte-lossless for them.
+    """
+    leaves: Dict[str, jax.Array]
+    scales: Dict[str, jax.Array]
+    encoded: bool
+
+    @property
+    def nbytes(self) -> int:
+        # shape/dtype metadata only — never forces a device->host sync
+        arrs = list(self.leaves.values()) + list(self.scales.values())
+        return sum(a.size * a.dtype.itemsize for a in arrs)
+
+    def to_device(self, device) -> "HostPage":
+        """Asynchronously move every leaf to ``device`` (``jax.device_put``
+        does not block; ordering against later pool writes is guaranteed
+        by dispatch order)."""
+        put = lambda d: {k: jax.device_put(v, device) for k, v in d.items()}
+        return HostPage(put(self.leaves), put(self.scales), self.encoded)
+
+
+def encode_host_page(leaves: Dict[str, jax.Array],
+                     quantize: bool = False) -> HostPage:
+    """Pack pool-page slices for the host store.
+
+    Pass-through by default (byte-lossless). With ``quantize`` every
+    bfloat16 leaf is fp8(e4m3)-encoded with per-vector scales over the last
+    axis — the Opt-KV storage format applied at spill time — while
+    narrower / non-bf16 leaves (already-fp8 kv, f32 scales, int metadata)
+    stay verbatim.
+    """
+    out: Dict[str, jax.Array] = {}
+    scales: Dict[str, jax.Array] = {}
+    encoded = False
+    for name, arr in leaves.items():
+        if quantize and arr.dtype == jnp.bfloat16:
+            out[name], scales[name] = quantize_fp8(arr, axis=-1)
+            encoded = True
+        else:
+            out[name] = arr
+    return HostPage(out, scales, encoded)
+
+
+def decode_host_page(page: HostPage, name: str,
+                     dtype=jnp.bfloat16) -> jax.Array:
+    """Decode one leaf of a host page back to its pool dtype."""
+    arr = page.leaves[name]
+    if name in page.scales:
+        return dequantize_fp8(arr, page.scales[name], axis=-1, dtype=dtype)
+    return arr
 
 
 def quant_roundtrip_error(x: jax.Array, axis: int = -1) -> jax.Array:

@@ -100,6 +100,57 @@ class ModelConfig:
         return get_model(self).active_param_count()
 
 
+@dataclass(frozen=True)
+class CacheConfig:
+    """Paged-KV pool geometry and hierarchical-cache policy in ONE place.
+
+    Consolidates the knobs that previously crawled through ``BlockManager``,
+    ``Scheduler``, ``EngineConfig`` and the model ``cache_shape`` signatures
+    as loose positionals (``num_pages`` / ``page_size`` / ``num_shards`` /
+    ``enable_prefix_cache``), plus the host-DRAM capacity tier added with
+    the hierarchical cache.
+
+    ``num_pages`` is the REQUESTED device pool size in pages, before shard
+    padding; the pool actually allocated is
+    ``padded_pool_pages(num_pages, num_shards)`` with the last page reserved
+    as the SkipSet write sentinel, exactly as when the pool is derived from
+    ``num_lanes * pages(max_len)`` (the ``num_pages == 0`` default).
+    ``page_size == 0`` inherits ``CoOptConfig.page_size``; ``BlockManager``
+    itself requires a resolved (> 0) value.
+
+    ``host_pages > 0`` turns on the host-DRAM spill tier: LRU-evicted
+    registered prefix pages are spilled host-side instead of destroyed and
+    asynchronously prefetched back (see ``cache/block_manager.py`` module
+    docstring for the residency state machine). ``prefetch_depth`` bounds
+    how many queued requests the scheduler scans for prefetchable prefixes
+    per turn. ``host_quant`` additionally fp8-encodes bf16 pool pages on
+    spill (halves host bytes; breaks tier-on/off bit-identity, so it
+    defaults off — with ``opt_kv`` pools the pages are already fp8 and the
+    spill is byte-lossless either way).
+    """
+    num_pages: int = 0           # 0 = derive from num_lanes * pages(max_len)
+    page_size: int = 0           # 0 = inherit CoOptConfig.page_size
+    num_shards: int = 1
+    enable_prefix_cache: bool = True
+    host_pages: int = 0          # host-DRAM tier capacity in pages; 0 = off
+    prefetch_depth: int = 2
+    host_quant: bool = False
+
+    def __post_init__(self):
+        if self.num_pages < 0 or self.page_size < 0 or self.host_pages < 0:
+            raise ValueError("CacheConfig sizes must be >= 0")
+        if self.num_shards < 1:
+            raise ValueError("CacheConfig.num_shards must be >= 1")
+
+    def replace(self, **kw) -> "CacheConfig":
+        return dataclasses.replace(self, **kw)
+
+    def resolve(self, *, page_size: int, num_pages: int) -> "CacheConfig":
+        """Fill the inherit-defaults (0) fields from the engine context."""
+        return self.replace(page_size=self.page_size or page_size,
+                            num_pages=self.num_pages or num_pages)
+
+
 def reduced(cfg: ModelConfig) -> ModelConfig:
     """Smoke-test variant of the same family: 2 layers, d_model<=512, <=4 experts."""
     kw = dict(

@@ -54,6 +54,27 @@ from repro.cache.block_manager import (padded_pool_pages,   # noqa: F401
 PAGES_AXES = ("pod", "data")
 
 
+def pool_layout(batch: int, max_len: int, coopt, num_shards: int = 1,
+                cache_cfg=None):
+    """Resolve the device pool's pages-axis layout -> ``(P, page_size)``.
+
+    THE one sizing rule every model's ``cache_shape`` and the scheduler's
+    BlockManager must agree on: ``P`` is the requested pool size —
+    ``CacheConfig.num_pages`` when set, else ``batch * pages(max_len)`` —
+    padded so the pages axis tiles evenly over the KV shards. (The engine
+    reserves the final padded page as the write kernel's SkipSet sentinel,
+    so the host allocator sees ``P - 1`` usable pages.)"""
+    ps = coopt.page_size
+    pages = 0
+    if cache_cfg is not None:
+        ps = cache_cfg.page_size or ps
+        num_shards = cache_cfg.num_shards or num_shards
+        pages = cache_cfg.num_pages
+    if not pages:
+        pages = batch * (-(-max_len // ps))
+    return padded_pool_pages(pages, num_shards), ps
+
+
 def global_to_local_pages(phys_table, first_page, num_local: int):
     """Translate a GLOBAL physical page table to one mesh shard's LOCAL page
     domain: entries inside the shard's contiguous range

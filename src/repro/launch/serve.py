@@ -34,6 +34,7 @@ import time
 import numpy as np
 
 from repro.configs import get_config
+from repro.configs.base import CacheConfig
 from repro.core.coopt import MODES
 from repro.data import RequestStream
 from repro.serving import AsyncEngine, Engine, EngineConfig
@@ -68,17 +69,24 @@ class ServeRunner:
                  arrival_rate: float = 0.0, pack: bool = False,
                  assert_aot: bool = False, warmup_pass: bool = False,
                  deadline_s: float = 0.0, max_queue_depth=None,
-                 max_queued_tokens=None):
+                 max_queued_tokens=None, pool_pages: int = 0,
+                 host_pages: int = 0, prefetch_depth: int = 2):
         # Pallas kernels run compiled on TPU, interpret-mode elsewhere
         from repro.kernels import ops
         ops.configure_for_backend()
         cfg = get_config(arch)
         coopt = MODES[mode].replace(use_kernel=use_kernel)
+        # all cache knobs travel through ONE CacheConfig (shard count
+        # included — EngineConfig.num_shards stays default so the two never
+        # conflict); pool_pages=0 keeps the derived num_lanes*pages(max_len)
         ecfg = EngineConfig(
             num_lanes=num_lanes, max_len=max_len,
             prefill_buckets=(32, 64, 128, 256, max_len),
             sampling=SamplingParams(temperature=temperature), seed=seed,
-            num_shards=num_shards, pack_prefill=pack)
+            pack_prefill=pack,
+            cache=CacheConfig(num_pages=pool_pages, num_shards=num_shards,
+                              host_pages=host_pages,
+                              prefetch_depth=prefetch_depth))
         self.engine = Engine(cfg, coopt, ecfg, mesh=mesh)
         stream = RequestStream(cfg.vocab_size, seed=seed, scale=scale)
         self.reqs = stream.take(requests, max_new_tokens=max_new_tokens)
@@ -91,7 +99,9 @@ class ServeRunner:
                      "arrival_rate_req_s": arrival_rate,
                      "deadline_s": deadline_s,
                      "max_queue_depth": max_queue_depth,
-                     "max_queued_tokens": max_queued_tokens}
+                     "max_queued_tokens": max_queued_tokens,
+                     "pool_pages_requested": pool_pages,
+                     "host_tier_pages": host_pages}
         self.frontend = None
         self.last_streams = []          # TokenStreams of the last async pass
         if use_async:
@@ -266,8 +276,18 @@ def _pass_metrics(s, wall: float) -> dict:
         "peak_pool_utilization": round(
             s.peak_pages_in_use / max(s.pool_pages, 1), 4),
         "prefix_hit_rate": round(s.prefix_hit_rate(), 4),
+        "prefix_device_hit_rate": round(s.prefix_device_hit_rate(), 4),
+        "prefix_host_hit_rate": round(s.prefix_host_hit_rate(), 4),
         "preemptions": s.preemptions,
         "rejected": s.rejected,
+        # host-DRAM KV tier (all zeros when host_pages=0)
+        "host_pages": s.host_pages,
+        "host_pages_resident": s.host_pages_resident,
+        "spilled_pages": s.spilled_pages,
+        "host_evictions": s.host_evictions,
+        "prefetch_committed": s.prefetch_committed,
+        "prefetch_aborted": s.prefetch_aborted,
+        "prefetch_held_turns": s.prefetch_held_turns,
         # per-shard page-range ownership (mesh (pod, data) axes)
         "kv_shards": s.num_shards,
         "shard_peak_utilization": [
@@ -321,6 +341,18 @@ def main(argv=None):
     ap.add_argument("--max-queued-tokens", type=int, default=None,
                     help="load-shed watermark: pending prompt tokens "
                          "beyond this fast-reject SHED at submit")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="device KV pool size in pages (0 = derive "
+                         "lanes * pages(max_len)); small values force "
+                         "memory pressure")
+    ap.add_argument("--host-pages", type=int, default=0,
+                    help="host-DRAM KV spill tier capacity in pages "
+                         "(0 = tier off): LRU-evicted prefix pages spill "
+                         "to pinned host memory and prefetch back on "
+                         "re-match")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="queued requests scanned per turn for host->HBM "
+                         "prefix prefetch")
     ap.add_argument("--repeats", type=int, default=1,
                     help="measured passes (best wall reported)")
     args = ap.parse_args(argv)
@@ -341,7 +373,10 @@ def main(argv=None):
                          assert_aot=args.assert_aot, repeats=args.repeats,
                          deadline_s=args.deadline,
                          max_queue_depth=args.max_queue_depth,
-                         max_queued_tokens=args.max_queued_tokens)
+                         max_queued_tokens=args.max_queued_tokens,
+                         pool_pages=args.pool_pages,
+                         host_pages=args.host_pages,
+                         prefetch_depth=args.prefetch_depth)
     print(json.dumps(out, indent=2))
 
 

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.coopt import CoOptConfig, COOPT
 from repro.core.opt_kv import (identity_page_table, identity_slots,
-                               padded_pool_pages, write_kv)
+                               pool_layout, write_kv)
 from repro.core.opt_pa import paged_chunk_attention, paged_decode_attention
 from repro.models.layers import (Spec, apply_rope, causal_attention, init_tree,
                                  linear, repeat_kv, rmsnorm, shard_act)
@@ -383,14 +383,13 @@ class GriffinModel:
 
     # ------------------------------------------------------------- caching --
     def cache_shape(self, batch: int, max_len: int, coopt: CoOptConfig,
-                    num_shards: int = 1):
+                    num_shards: int = 1, cache_cfg=None):
         cfg = self.cfg
         # GLOBAL-POOL layout for the attention layers' paged KV (see
         # transformer.TransformerModel.cache_shape), pages padded to tile
         # over the KV shards; recurrent state (conv taps, RG-LRU h) is O(1)
         # per lane and stays batch-major.
-        P, ps = padded_pool_pages(batch * _pages(max_len, coopt.page_size),
-                                  num_shards), coopt.page_size
+        P, ps = pool_layout(batch, max_len, coopt, num_shards, cache_cfg)
         Hkv, D, W = cfg.num_kv_heads, cfg.head_dim, cfg.lru_width
         out = {
             "conv": ((self.n_rec, batch, cfg.conv1d_width - 1, W), jnp.bfloat16,
@@ -409,11 +408,12 @@ class GriffinModel:
         return out
 
     def init_cache(self, batch: int, max_len: int, coopt: CoOptConfig,
-                   num_shards: int = 1):
+                   num_shards: int = 1, cache_cfg=None):
         return {k: jnp.zeros(sh, dt)
                 for k, (sh, dt, _) in
                 self.cache_shape(batch, max_len, coopt,
-                                 num_shards=num_shards).items()}
+                                 num_shards=num_shards,
+                                 cache_cfg=cache_cfg).items()}
 
     # -------------------------------------------------------------- specs --
     def input_specs(self, shape) -> Dict[str, jax.ShapeDtypeStruct]:

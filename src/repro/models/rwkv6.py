@@ -280,9 +280,9 @@ class RWKV6Model:
 
     # ------------------------------------------------------------- caching --
     def cache_shape(self, batch: int, max_len: int, coopt: CoOptConfig,
-                    num_shards: int = 1):
-        # attention-free: no paged KV pool, so ``num_shards`` (accepted for
-        # engine-call uniformity) shards nothing here
+                    num_shards: int = 1, cache_cfg=None):
+        # attention-free: no paged KV pool, so ``num_shards`` / ``cache_cfg``
+        # (accepted for engine-call uniformity) size nothing here
         cfg = self.cfg
         L, d, H, D = cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.head_dim
         return {
@@ -296,7 +296,7 @@ class RWKV6Model:
         }
 
     def init_cache(self, batch: int, max_len: int, coopt: CoOptConfig,
-                   num_shards: int = 1):
+                   num_shards: int = 1, cache_cfg=None):
         return {k: jnp.zeros(sh, dt)
                 for k, (sh, dt, _) in
                 self.cache_shape(batch, max_len, coopt).items()}

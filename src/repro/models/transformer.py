@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.coopt import CoOptConfig, COOPT
 from repro.core.opt_kv import (identity_page_table, identity_slots,
-                               padded_pool_pages, write_kv)
+                               pool_layout, write_kv)
 from repro.core.opt_pa import paged_chunk_attention, paged_decode_attention
 from repro.models import mla as mla_mod
 from repro.models.layers import (Spec, apply_rope, causal_attention, init_tree,
@@ -274,7 +274,7 @@ class TransformerModel:
 
     # ------------------------------------------------------------ caching --
     def cache_shape(self, batch: int, max_len: int, coopt: CoOptConfig,
-                    num_shards: int = 1):
+                    num_shards: int = 1, cache_cfg=None):
         """Dict of (shape, dtype, logical axes) — consumed by launch/dryrun
         for ShapeDtypeStructs + shardings, and by init_cache.
 
@@ -282,13 +282,14 @@ class TransformerModel:
         pool holds ``batch * pages(max_len)`` pages shared by every lane
         (refcounted + prefix-cached by the host-side BlockManager), padded
         up so the pages axis tiles evenly over ``num_shards`` mesh shards
-        (CACHE_RULES: pages -> (pod, data)). Direct callers fall back to
-        the static lane-identity partition; the engine reserves the final
-        page so its last line can serve as the Pallas write kernel's
-        SkipSet sentinel. ``length`` stays per-lane."""
+        (CACHE_RULES: pages -> (pod, data)). A ``CacheConfig`` overrides
+        the pool size / page size / shard count (opt_kv.pool_layout is the
+        shared sizing rule). Direct callers fall back to the static
+        lane-identity partition; the engine reserves the final page so its
+        last line can serve as the Pallas write kernel's SkipSet sentinel.
+        ``length`` stays per-lane."""
         cfg = self.cfg
-        P, ps = padded_pool_pages(batch * _pages(max_len, coopt.page_size),
-                                  num_shards), coopt.page_size
+        P, ps = pool_layout(batch, max_len, coopt, num_shards, cache_cfg)
         out: Dict[str, Any] = {}
         if cfg.family == "mla":
             width = cfg.kv_lora_rank + cfg.qk_rope_head_dim
@@ -316,11 +317,12 @@ class TransformerModel:
         return out
 
     def init_cache(self, batch: int, max_len: int, coopt: CoOptConfig,
-                   num_shards: int = 1):
+                   num_shards: int = 1, cache_cfg=None):
         return {k: jnp.zeros(sh, dt)
                 for k, (sh, dt, _) in
                 self.cache_shape(batch, max_len, coopt,
-                                 num_shards=num_shards).items()}
+                                 num_shards=num_shards,
+                                 cache_cfg=cache_cfg).items()}
 
     def _write_layer(self, kv_c, sc_c, new_a, new_b, slots, coopt):
         """Write cache entries for one layer (GLOBAL flat slots; -1 =

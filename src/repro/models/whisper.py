@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.coopt import CoOptConfig, COOPT
 from repro.core.opt_kv import (identity_page_table, identity_slots,
-                               padded_pool_pages, write_kv)
+                               pool_layout, write_kv)
 from repro.core.opt_pa import paged_chunk_attention, paged_decode_attention
 from repro.cache.quant import quantize_fp8, dequantize_fp8
 from repro.models.layers import (Spec, causal_attention, gelu_mlp, init_tree,
@@ -335,10 +335,9 @@ class WhisperModel:
 
     # ------------------------------------------------------------- caching --
     def cache_shape(self, batch: int, max_len: int, coopt: CoOptConfig,
-                    num_shards: int = 1):
+                    num_shards: int = 1, cache_cfg=None):
         cfg = self.cfg
-        P, ps = padded_pool_pages(batch * _pages(max_len, coopt.page_size),
-                                  num_shards), coopt.page_size
+        P, ps = pool_layout(batch, max_len, coopt, num_shards, cache_cfg)
         L, H, D, F = cfg.num_layers, cfg.num_heads, cfg.head_dim, \
             cfg.num_frames
         out = {
@@ -363,11 +362,12 @@ class WhisperModel:
         return out
 
     def init_cache(self, batch: int, max_len: int, coopt: CoOptConfig,
-                   num_shards: int = 1):
+                   num_shards: int = 1, cache_cfg=None):
         return {k: jnp.zeros(sh, dt)
                 for k, (sh, dt, _) in
                 self.cache_shape(batch, max_len, coopt,
-                                 num_shards=num_shards).items()}
+                                 num_shards=num_shards,
+                                 cache_cfg=cache_cfg).items()}
 
     # -------------------------------------------------------------- specs --
     def input_specs(self, shape) -> Dict[str, jax.ShapeDtypeStruct]:

@@ -1,3 +1,5 @@
+from repro.cache.block_manager import PageResidency, PrefixMatch
+from repro.configs.base import CacheConfig
 from repro.serving.engine import Engine, EngineConfig
 from repro.serving.faults import FaultInjector, FaultPlan
 from repro.serving.frontend import (AsyncEngine, PipelineStallError,
@@ -5,6 +7,7 @@ from repro.serving.frontend import (AsyncEngine, PipelineStallError,
 from repro.serving.request import FinishReason, Request, RequestState
 from repro.serving.sampler import SamplingParams
 
-__all__ = ["AsyncEngine", "Engine", "EngineConfig", "FaultInjector",
-           "FaultPlan", "FinishReason", "PipelineStallError", "Request",
-           "RequestState", "SamplingParams", "TokenStream", "WorkerKilled"]
+__all__ = ["AsyncEngine", "CacheConfig", "Engine", "EngineConfig",
+           "FaultInjector", "FaultPlan", "FinishReason", "PageResidency",
+           "PipelineStallError", "PrefixMatch", "Request", "RequestState",
+           "SamplingParams", "TokenStream", "WorkerKilled"]

@@ -47,15 +47,20 @@ import dataclasses
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
-from repro.cache.block_manager import chain_hash_tokens, extend_chain_hash
+from repro.cache.block_manager import (OutOfBlocks, PageResidency,
+                                       PrefixMatch, chain_hash_tokens,
+                                       extend_chain_hash)
+from repro.cache.quant import (HostPage, dequantize_fp8, encode_host_page)
 from repro.kernels.visits import sharing_stats
-from repro.configs.base import ModelConfig
+from repro.configs.base import CacheConfig, ModelConfig
 from repro.core.coopt import CoOptConfig, COOPT
 from repro.models import get_model
 from repro.serving.request import FinishReason, Request, RequestState
@@ -63,6 +68,43 @@ from repro.serving.sampler import SamplingParams, sample
 from repro.serving.scheduler import (DecodeItem, PrefillChunk, Scheduler,
                                      StepPlan, bucket_len, chunk_pages,
                                      pack_rows)
+
+
+# --------------------------------------------- host-tier page transfers ----
+# One compiled executable per (leaf shape, axis): the page index is a TRACED
+# scalar (lax.dynamic_*_in_dim), so spilling/prefetching page 7 vs page 900
+# never recompiles. Both directions are fully asynchronous — dispatch-order
+# execution on the device stream sequences them against the surrounding
+# steps without any host sync (COOPT001 stays clean).
+@partial(jax.jit, static_argnames=("axis",))
+def _read_pool_page(leaf, page, axis: int):
+    return lax.dynamic_index_in_dim(leaf, page, axis, keepdims=False)
+
+
+@partial(jax.jit, static_argnames=("axis",), donate_argnums=(0,))
+def _write_pool_page(leaf, data, page, axis: int):
+    return lax.dynamic_update_index_in_dim(
+        leaf, data.astype(leaf.dtype), page, axis)
+
+
+@partial(jax.jit, static_argnames=("axis",), donate_argnums=(0,))
+def _write_pool_page_q(leaf, q, scale, page, axis: int):
+    """fp8-encoded host page (CacheConfig.host_quant): dequantize on device
+    during the staging write."""
+    data = dequantize_fp8(q, scale, axis=-1, dtype=leaf.dtype)
+    return lax.dynamic_update_index_in_dim(leaf, data, page, axis)
+
+
+@dataclass
+class _Flight:
+    """One dispatched host->HBM prefetch upload, committed to the device
+    prefix table once the scheduler turn counter passes ``lands`` (dispatch
+    order already sequences the upload before any step planned after the
+    commit — the turn delay models the overlap window, it is not a wait)."""
+    hash: int
+    turn: int                      # dispatch turn
+    lands: int                     # first turn the commit may happen
+    ok: bool = True                # fault injection: False -> abort instead
 
 
 @dataclass(frozen=True)
@@ -91,6 +133,37 @@ class EngineConfig:
                                     # the request is rejected
                                     # (PREEMPTION_LIMIT) instead of
                                     # livelocking the pool
+    cache: Optional[CacheConfig] = None
+                                    # consolidated cache knobs (pool size,
+                                    # shards, prefix cache, host-DRAM spill
+                                    # tier). None = derive a CacheConfig
+                                    # from the legacy enable_prefix_cache /
+                                    # num_shards fields above.
+
+    def cache_config(self, page_size: int) -> CacheConfig:
+        """Resolve the effective :class:`CacheConfig`.
+
+        Legacy knobs (``num_shards`` / ``enable_prefix_cache``) remain the
+        deprecation shim: with ``cache=None`` they are folded into a fresh
+        CacheConfig; with an explicit ``cache`` they must not CONFLICT
+        (non-default values in both places raise)."""
+        cc = self.cache
+        if cc is None:
+            cc = CacheConfig(num_shards=self.num_shards,
+                             enable_prefix_cache=self.enable_prefix_cache)
+        else:
+            if self.num_shards != 1 and self.num_shards != cc.num_shards:
+                raise ValueError(
+                    f"EngineConfig.num_shards={self.num_shards} conflicts "
+                    f"with EngineConfig.cache.num_shards={cc.num_shards}; "
+                    "set the shard count in ONE place (CacheConfig "
+                    "preferred)")
+            if not self.enable_prefix_cache and cc.enable_prefix_cache:
+                cc = cc.replace(enable_prefix_cache=False)
+        ps = cc.page_size or page_size
+        pages_per_lane = -(-self.max_len // ps)
+        return cc.resolve(page_size=ps,
+                          num_pages=self.num_lanes * pages_per_lane)
 
 
 @dataclass
@@ -124,9 +197,27 @@ class EngineStats:
     peak_pages_in_use: int = 0
     fresh_pages_allocated: int = 0  # pages handed out over the run
     prefix_cache_queries: int = 0
-    prefix_cache_hits: int = 0      # full prompt pages reused, not recomputed
+    prefix_cache_hits: int = 0      # pages reused, not recomputed
+                                    # (= device + host hits; legacy total)
+    prefix_device_hits: int = 0     # hit pages that were HBM-resident
+    prefix_host_hits: int = 0       # hit pages restored from the host tier
+                                    # (spilled, then prefetched back)
     preemptions: int = 0
     rejected: int = 0
+    # ------------------------------------------------ host-DRAM KV tier ----
+    host_pages: int = 0             # host tier capacity (0 = tier off)
+    host_pages_resident: int = 0    # spilled pages currently host-resident
+    spilled_pages: int = 0          # device evictions rescued to host DRAM
+    host_evictions: int = 0         # pages dropped off the host LRU (gone)
+    prefetch_begun: int = 0         # host->HBM uploads dispatched
+    prefetch_committed: int = 0     # ..that landed and re-registered
+    prefetch_aborted: int = 0       # ..that failed / lost a registration race
+    prefetches_planned: int = 0     # queued requests the scheduler planned
+                                    # prefetch for
+    prefetch_held_turns: int = 0    # admission turns spent gated on an
+                                    # IN_FLIGHT upload (overlap window)
+    prefetch_replans: int = 0       # landed prefixes stolen by allocation
+                                    # pressure pre-admission, fetched again
     # ----------------------------------------------------- resilience ----
     shed: int = 0                   # fast-rejected at submit (overload
                                     # watermark; AsyncEngine only)
@@ -194,6 +285,17 @@ class EngineStats:
                     float(self.preemption_limit_rejects),  # coopt: allow[COOPT001]
                 "errors":
                     float(self.errors),  # coopt: allow[COOPT001]
+                "prefix_device_hits":
+                    float(self.prefix_device_hits),  # coopt: allow[COOPT001]
+                "prefix_host_hits":
+                    float(self.prefix_host_hits),  # coopt: allow[COOPT001]
+                "prefix_misses":
+                    float(self.prefix_cache_queries  # coopt: allow[COOPT001]
+                          - self.prefix_cache_hits),
+                "spilled_pages":
+                    float(self.spilled_pages),  # coopt: allow[COOPT001]
+                "prefetch_committed":
+                    float(self.prefetch_committed),  # coopt: allow[COOPT001]
                 }
 
     def pool_utilization(self) -> float:
@@ -206,6 +308,18 @@ class EngineStats:
 
     def prefix_hit_rate(self) -> float:
         return self.prefix_cache_hits / self.prefix_cache_queries \
+            if self.prefix_cache_queries else 0.0
+
+    def prefix_device_hit_rate(self) -> float:
+        return self.prefix_device_hits / self.prefix_cache_queries \
+            if self.prefix_cache_queries else 0.0
+
+    def prefix_host_hit_rate(self) -> float:
+        return self.prefix_host_hits / self.prefix_cache_queries \
+            if self.prefix_cache_queries else 0.0
+
+    def prefix_miss_rate(self) -> float:
+        return 1.0 - self.prefix_hit_rate() \
             if self.prefix_cache_queries else 0.0
 
 
@@ -252,19 +366,28 @@ class Engine:
         host and distributed."""
         self.cfg = model_cfg
         self.coopt = coopt
+        ccfg = engine_cfg.cache_config(coopt.page_size)
         if mesh is not None:
             from repro.launch.mesh import kv_shard_count
             ns = kv_shard_count(mesh)
-            if engine_cfg.num_shards == 1:
+            if ccfg.num_shards == 1:
                 # config built before the mesh: derive the shard count
-                engine_cfg = dataclasses.replace(engine_cfg, num_shards=ns)
-            elif engine_cfg.num_shards != ns:
+                ccfg = ccfg.replace(num_shards=ns)
+            elif ccfg.num_shards != ns:
                 raise ValueError(
-                    f"EngineConfig.num_shards={engine_cfg.num_shards} "
+                    f"EngineConfig.num_shards={ccfg.num_shards} "
                     f"disagrees with the mesh's KV shard count {ns} "
                     f"(pages axes {tuple(mesh.shape)}); build the config "
                     "from launch.mesh.kv_shard_count(mesh) or leave it at "
                     "the default to derive it")
+        # keep the legacy EngineConfig mirrors in sync with the resolved
+        # CacheConfig — downstream code reads either
+        if (engine_cfg.num_shards != ccfg.num_shards
+                or engine_cfg.enable_prefix_cache != ccfg.enable_prefix_cache):
+            engine_cfg = dataclasses.replace(
+                engine_cfg, num_shards=ccfg.num_shards,
+                enable_prefix_cache=ccfg.enable_prefix_cache)
+        self.ccfg = ccfg
         self.mesh = mesh
         self.ecfg = engine_cfg
         self.model = get_model(model_cfg)
@@ -277,7 +400,8 @@ class Engine:
         # the device pool's pages axis is padded so it tiles evenly over the
         # KV shards (host page ids == device page ids, see opt_kv helpers)
         self.cache = self.model.init_cache(B, M, coopt,
-                                           num_shards=engine_cfg.num_shards)
+                                           num_shards=engine_cfg.num_shards,
+                                           cache_cfg=ccfg)
         # pages-axis shard_map dispatch for the pooled kernels (None for no
         # mesh / an unsharded mesh: identical single-host code path)
         from repro.kernels import ops
@@ -295,10 +419,9 @@ class Engine:
             B, M, coopt.page_size, list(engine_cfg.prefill_buckets),
             extra_tokens=self._patch_offset,
             token_budget=engine_cfg.token_budget or None,
-            enable_prefix_cache=engine_cfg.enable_prefix_cache,
-            num_shards=engine_cfg.num_shards,
             page_aligned=bool(self._rec_leaves),
-            max_preemptions=engine_cfg.max_preemptions)
+            max_preemptions=engine_cfg.max_preemptions,
+            cache_cfg=ccfg)
         # deterministic fault-injection hook layer (serving.faults); None in
         # production — the chaos suite installs a seeded FaultInjector here
         self.faults = None
@@ -315,10 +438,32 @@ class Engine:
         # only batch-major leaves (length, recurrent state, whisper x-KV)
         # need lane masking; global-pool leaves are isolated by slot
         # disjointness.
-        shapes = self.model.cache_shape(B, M, coopt)
+        shapes = self.model.cache_shape(B, M, coopt, cache_cfg=ccfg)
         self._batch_axis = {k: axes.index("batch")
                             for k, (_, _, axes) in shapes.items()
                             if "batch" in axes}
+
+        # ---------------------------------------- host-DRAM KV spill tier --
+        # Pool leaves are addressed page-wise along their "pages" axis; the
+        # batch-major leaves (recurrent state, whisper cross-KV) have no
+        # page identity and never spill.
+        self._pool_axis = {k: axes.index("pages")
+                           for k, (_, _, axes) in shapes.items()
+                           if "pages" in axes}
+        self._prefetch_flights: List[_Flight] = []
+        self._sched_turn = 0
+        self._host_dev = None
+        if ccfg.host_pages > 0 and self._pool_axis:
+            try:
+                self._host_dev = jax.devices("cpu")[0]
+            except RuntimeError:
+                self._host_dev = None   # no CPU backend: keep pages where
+                                        # device_put default places them
+            mgr = self.scheduler.manager
+            mgr.spill_sink = self._spill_page
+            self.scheduler.prefetcher = self._start_prefetch
+            self.scheduler.prefetch_tick = self._tick_prefetch
+        self.stats.host_pages = ccfg.host_pages
 
         # cache donation (argnum 2 of every step impl): the pool is
         # threaded through each step and immediately rebound to the
@@ -368,7 +513,8 @@ class Engine:
                  else CACHE_RULES)
         shapes = self.model.cache_shape(self.ecfg.num_lanes,
                                         self.ecfg.max_len, self.coopt,
-                                        num_shards=self.ecfg.num_shards)
+                                        num_shards=self.ecfg.num_shards,
+                                        cache_cfg=self.ccfg)
         return {k: jax.device_put(
                     leaf, NamedSharding(mesh, axes_pspec(
                         shapes[k][0], shapes[k][2], mesh, rules)))
@@ -544,6 +690,110 @@ class Engine:
         s.shard_preemptions = tuple(self.scheduler.preemptions_by_shard)
         s.placement_prefix_hits = self.scheduler.placement_prefix_hits
         s.placement_misses = self.scheduler.placement_misses
+        # host-DRAM tier
+        s.prefix_device_hits = mgr.prefix_device_hits
+        s.prefix_host_hits = mgr.prefix_host_hits
+        s.host_pages = mgr.host_pages
+        s.host_pages_resident = mgr.host_resident_pages
+        s.spilled_pages = mgr.spilled_pages
+        s.host_evictions = mgr.host_evictions
+        s.prefetch_begun = mgr.prefetch_begun
+        s.prefetch_committed = mgr.prefetch_committed
+        s.prefetch_aborted = mgr.prefetch_aborted
+        s.prefetches_planned = self.scheduler.prefetches_planned
+        s.prefetch_held_turns = self.scheduler.prefetch_held_turns
+        s.prefetch_replans = self.scheduler.prefetch_replans
+
+    # ----------------------------------------------- host-DRAM spill tier --
+    def _spill_page(self, h: int, page: int, shard: int):
+        """BlockManager spill sink: rescue an LRU-evicted prefix page to the
+        host store. Returns the host payload (or None to let the page die —
+        fault injection). The pool slice is dispatched BEFORE any later step
+        that could reuse ``page``, so device-order execution reads the old
+        contents even though the pool leaves are donated per step; the
+        ``device_put`` to the CPU backend is asynchronous — no host sync."""
+        hook = (getattr(self.faults, "on_spill", None)
+                if self.faults is not None else None)
+        if hook is not None and not hook():
+            return None
+        leaves = {k: _read_pool_page(self.cache[k], page, axis=ax)
+                  for k, ax in self._pool_axis.items()}
+        hp = encode_host_page(leaves, quantize=self.ccfg.host_quant)
+        if self._host_dev is not None:
+            hp = hp.to_device(self._host_dev)
+        return hp
+
+    def _upload_page(self, hp: HostPage, page: int) -> None:
+        """Write a host payload into reserved staging page ``page`` via the
+        donated dynamic-update jit (rebind-at-call, pages updated in place)."""
+        for k, ax in self._pool_axis.items():
+            if k in hp.scales:
+                self.cache[k] = _write_pool_page_q(
+                    self.cache[k], hp.leaves[k], hp.scales[k], page, axis=ax)
+            else:
+                self.cache[k] = _write_pool_page(
+                    self.cache[k], hp.leaves[k], page, axis=ax)
+
+    def _start_prefetch(self, req: Request, match: PrefixMatch) -> List[int]:
+        """Scheduler prefetcher hook: start host->HBM uploads for the
+        non-device-resident pages of a queued request's matched prefix.
+        Returns the chain hashes whose landing gates the request's
+        admission (existing IN_FLIGHT uploads are ridden, not repeated)."""
+        mgr = self.scheduler.manager
+        keys: List[int] = []
+        for mp in match.pages:
+            if mp.residency is PageResidency.DEVICE:
+                continue
+            if mp.residency is PageResidency.IN_FLIGHT:
+                keys.append(mp.hash)      # ride the existing upload
+                continue
+            try:
+                page, payload = mgr.begin_prefetch(mp.hash, match.shard)
+            except OutOfBlocks:
+                break   # no staging page free: admit on what already landed
+            except KeyError:
+                break   # raced off the host store since match_prefix
+            ok, delay = True, 0
+            hook = (getattr(self.faults, "on_prefetch", None)
+                    if self.faults is not None else None)
+            if hook is not None:
+                ok, delay = hook()
+            self._upload_page(payload, page)
+            self._prefetch_flights.append(_Flight(
+                hash=mp.hash, turn=self._sched_turn,
+                lands=self._sched_turn + 1 + max(int(delay), 0), ok=ok))
+            keys.append(mp.hash)
+        return keys
+
+    def _tick_prefetch(self) -> None:
+        """Scheduler prefetch_tick hook, called at the top of every
+        schedule_step: advance the turn clock and settle landed flights.
+        A flight dispatched on turn T commits no earlier than turn T+1 —
+        the upload overlaps the step(s) dispatched in between; dispatch
+        order guarantees it has executed before any step planned AFTER the
+        commit can read the staged page."""
+        self._sched_turn += 1
+        if not self._prefetch_flights:
+            return
+        mgr = self.scheduler.manager
+        still: List[_Flight] = []
+        for f in self._prefetch_flights:
+            if self._sched_turn < f.lands:
+                still.append(f)
+                continue
+            if f.ok:
+                mgr.commit_prefetch(f.hash)
+            else:
+                mgr.abort_prefetch(f.hash)
+        self._prefetch_flights = still
+
+    def _abort_prefetch_flights(self) -> None:
+        """Return every in-flight staging page to the free list (payloads
+        go back to the host store — the upload is abandoned, not lost)."""
+        mgr = self.scheduler.manager
+        for f in self._prefetch_flights:
+            mgr.abort_prefetch(f.hash)
+        self._prefetch_flights = []
 
     # ------------------------------------------------- recurrent snapshots --
     def _lane_index(self, leaf: str, lane: int):
@@ -1043,6 +1293,7 @@ class Engine:
         per stream."""
         drained = self.scheduler.abort_all(FinishReason.ERROR, exc)
         self.stats.errors += len(drained)
+        self._abort_prefetch_flights()
         self._update_pool_stats()
         return drained
 

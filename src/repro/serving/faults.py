@@ -16,7 +16,14 @@ serving code calls back into it at three hook points:
     SILENTLY and only the stall watchdog can notice;
   * ``on_turn`` (top of ``AsyncEngine._loop_once``) — seeded cancel
     storms: at chosen turns, cancel a deterministic fraction of the open
-    streams.
+    streams;
+  * ``on_spill`` (``Engine._spill_page``) — drop chosen device->host
+    spills on the floor (the evicted prefix page dies DROPPED instead of
+    landing HOST, modelling a failed / raced spill copy);
+  * ``on_prefetch`` (``Engine._start_prefetch``) — fail chosen host->HBM
+    prefetches (the flight aborts at landing, payload returned to the
+    host store) or stretch their landing by extra scheduler turns
+    (slow-link prefetch: the gated request is held longer).
 
 Everything is keyed to deterministic counters (append calls, dispatched
 steps, emissions, loop turns) and a seeded RNG — the same plan against the
@@ -52,6 +59,15 @@ class FaultPlan:
                                           # silently (WorkerKilled)
     cancel_at_turns: Tuple[int, ...] = () # loop turns firing a cancel storm
     cancel_frac: float = 0.5              # fraction of open streams per storm
+    # ------------------------------------------------ host-DRAM KV tier --
+    spill_drop_at: Optional[int] = None   # Nth spill is dropped (page dies
+                                          # DROPPED instead of landing HOST)
+    spill_drop_count: int = 1             # ..and this many in a row
+    prefetch_fail_at: Optional[int] = None  # Nth prefetch aborts at landing
+    prefetch_fail_count: int = 1            # ..and this many in a row
+    prefetch_delay_turns: int = 0         # extra scheduler turns every
+                                          # prefetch takes to land (slow
+                                          # host link)
 
 
 class FaultInjector:
@@ -66,6 +82,10 @@ class FaultInjector:
         self.turns = 0          # frontend loop turns
         self.injected_oob = 0
         self.injected_cancels = 0
+        self.spills = 0         # spill attempts seen
+        self.prefetches = 0     # prefetch uploads started
+        self.injected_spill_drops = 0
+        self.injected_prefetch_fails = 0
 
     # ---------------------------------------------------------- install --
     def install(self, engine) -> "FaultInjector":
@@ -108,6 +128,34 @@ class FaultInjector:
         if (self.plan.kill_emit_at is not None
                 and self.emissions >= self.plan.kill_emit_at):
             raise WorkerKilled()
+
+    def on_spill(self) -> bool:
+        """Engine spill-sink hook: one call per device->host spill attempt.
+        Returns False to drop the spill (the evicted page is destroyed —
+        DROPPED — exactly what a failed copy looks like to the allocator)."""
+        self.spills += 1
+        p = self.plan
+        if (p.spill_drop_at is not None
+                and p.spill_drop_at <= self.spills
+                < p.spill_drop_at + p.spill_drop_count):
+            self.injected_spill_drops += 1
+            return False
+        return True
+
+    def on_prefetch(self) -> Tuple[bool, int]:
+        """Engine prefetch hook: one call per host->HBM upload started.
+        Returns (ok, extra_delay_turns) — ``ok=False`` makes the flight
+        abort at landing (staging page freed, payload back on the host
+        store); the delay stretches the landing turn (slow host link)."""
+        self.prefetches += 1
+        p = self.plan
+        ok = True
+        if (p.prefetch_fail_at is not None
+                and p.prefetch_fail_at <= self.prefetches
+                < p.prefetch_fail_at + p.prefetch_fail_count):
+            self.injected_prefetch_fails += 1
+            ok = False
+        return ok, p.prefetch_delay_turns
 
     def on_turn(self, frontend) -> None:
         """Frontend hook, top of every loop turn: seeded cancel storms."""

@@ -40,6 +40,14 @@ cache mutation; the emit worker only converts device arrays to host and
 never touches shared state. Used by ``launch.serve --async`` and
 ``benchmarks.bench_serving``.
 
+Host-DRAM KV tier: the hierarchical cache's spill uploads and prefetch
+bookkeeping ride the SAME loop thread — ``schedule_step`` ticks the
+engine's prefetch flights at the top of every turn, so host->HBM uploads
+dispatched on turn N are ordered before any step of turn N+1 without a
+single host sync, and the async pipeline needs no extra machinery (spills
+are ``jax.device_put`` calls queued in device order like every other
+dispatch; see ``cache.block_manager`` for the residency state machine).
+
 Failure semantics — every stream terminates with a ``FinishReason``,
 delivered AT the terminal event (never at an idle sweep). The table is the
 contract the multi-host router inherits:

@@ -121,6 +121,16 @@ class Request:
     inflight: int = 0                        # tokens sampled on device but
                                              # not yet host-emitted (async
                                              # pipeline; 0 in the sync loop)
+    prefetch_keys: List[int] = field(default_factory=list)
+                                             # chain hashes whose host->HBM
+                                             # prefetch gates admission: the
+                                             # request holds the queue head
+                                             # while any is IN_FLIGHT
+    prefetch_shard: int = -1                 # shard the prefetch landed the
+                                             # prefix on (placement hint)
+    prefetch_replans: int = 0                # landed pages stolen before
+                                             # admission -> fetch re-planned
+                                             # (bounded; then admit as miss)
     finish_reason: Optional[FinishReason] = None   # structured terminal
                                              # status, set ONCE via finish()
     error: Optional[BaseException] = None    # the fault behind ERROR

@@ -65,7 +65,9 @@ from typing import Callable, Deque, Dict, List, Optional
 import numpy as np
 
 from repro.cache.block_manager import (BlockManager, OutOfBlocks,
+                                       PageResidency, PrefixMatch,
                                        padded_pool_pages)
+from repro.configs.base import CacheConfig
 from repro.serving.request import FinishReason, Request, RequestState
 
 
@@ -119,32 +121,55 @@ class Scheduler:
                  enable_prefix_cache: bool = True,
                  num_shards: int = 1,
                  page_aligned: bool = False,
-                 max_preemptions: int = 32):
+                 max_preemptions: int = 32,
+                 cache_cfg: Optional[CacheConfig] = None):
+        if cache_cfg is None:
+            # deprecation shim: legacy loose knobs -> CacheConfig
+            cache_cfg = CacheConfig(num_shards=num_shards,
+                                    enable_prefix_cache=enable_prefix_cache)
         self.num_lanes = num_lanes
         self.max_len = max_len                 # per-REQUEST cap, not per-lane
-        self.page_size = page_size
+        self.page_size = cache_cfg.page_size or page_size
         self.prefill_buckets = sorted(prefill_buckets)
         self.extra_tokens = extra_tokens       # modality-stub prefix (vlm)
         self.token_budget = token_budget or max(self.prefill_buckets)
         self.page_aligned = page_aligned       # recurrent-state families:
                                                # chunk ends land on page
                                                # boundaries (state snapshots)
-        self.num_shards = max(int(num_shards), 1)
+        self.num_shards = max(int(cache_cfg.num_shards), 1)
         self.waiting: Deque[Request] = deque()
         self.running: Dict[int, Request] = {}            # lane -> request
         self.free_lanes: List[int] = list(range(num_lanes - 1, -1, -1))
-        self.pages_per_lane = (max_len + page_size - 1) // page_size
+        self.pages_per_lane = \
+            (max_len + self.page_size - 1) // self.page_size
         # ONE pool for all lanes, page range padded so it tiles evenly over
         # the shards; the final device page is reserved so its last line can
         # serve as the Pallas write kernel's SkipSet sentinel (it belongs to
         # the LAST shard's device range, which therefore owns one page less).
-        p_dev = padded_pool_pages(num_lanes * self.pages_per_lane,
-                                  self.num_shards)
+        self.cache_cfg = cache_cfg.resolve(
+            page_size=self.page_size,
+            num_pages=num_lanes * self.pages_per_lane)
+        p_dev = padded_pool_pages(self.cache_cfg.num_pages, self.num_shards)
         total = max(p_dev - 1, 1)
         self.manager = BlockManager(
-            total, page_size,
-            enable_prefix_cache=enable_prefix_cache,
-            num_shards=self.num_shards)
+            cfg=self.cache_cfg.replace(num_pages=total))
+        # ----------------------------------------------- prefetch hooks ----
+        # engine-provided: prefetch_tick() runs at the top of every turn
+        # (commits/aborts flights whose upload is now ordered ahead of any
+        # future step); prefetcher(req, match) dispatches host->HBM uploads
+        # for a queued request's matched non-DEVICE pages and returns the
+        # chain hashes to gate admission on.
+        self.prefetch_tick: Optional[Callable[[], None]] = None
+        self.prefetcher: Optional[
+            Callable[[Request, PrefixMatch], List[int]]] = None
+        self.prefetch_depth = self.cache_cfg.prefetch_depth
+        self.prefetches_planned = 0
+        self.prefetch_held_turns = 0   # admission turns spent waiting on an
+                                       # IN_FLIGHT prefix (overlapped with
+                                       # the in-flight step, not idle)
+        self.prefetch_replans = 0      # landed prefixes stolen pre-admission
+                                       # and fetched again
+        self.max_prefetch_replans = 3  # per request; then admit as a miss
         self.preemptions = 0
         self.preemptions_by_shard = [0] * self.num_shards
         self.placement_prefix_hits = 0   # admitted on the prefix-affine shard
@@ -259,14 +284,45 @@ class Scheduler:
                     return None
                 self.preempt(victim)
 
+    def _plan_prefetch(self) -> None:
+        """Scan the first ``prefetch_depth`` queued requests for prefixes
+        that are matched but not device-resident (HOST) and hand them to
+        the engine's prefetcher, which dispatches the host->HBM staging
+        uploads asynchronously — overlapped with the step currently in
+        flight. ``match_prefix`` is read-only, so planning never skews the
+        allocate-time hit accounting."""
+        if (self.prefetcher is None or self.prefetch_depth <= 0
+                or not self.manager.host_tier_enabled):
+            return
+        mgr = self.manager
+        scanned = 0
+        for r in list(self.waiting):
+            if scanned >= self.prefetch_depth:
+                break
+            if r.prefetch_keys or r.inflight > 0 or r.is_terminal:
+                continue
+            scanned += 1
+            eff = r.effective_prompt()
+            m = mgr.match_prefix(eff, len(eff) + self.extra_tokens)
+            if not m.fetchable:
+                continue
+            keys = self.prefetcher(r, m)
+            if keys:
+                r.prefetch_keys = list(keys)
+                r.prefetch_shard = m.shard
+                self.prefetches_planned += 1
+
     def _place(self, pool_id: int, total: int,
-               token_ids) -> Optional[int]:
+               token_ids, pref_hint: Optional[int] = None) -> Optional[int]:
         """Shard-affine admission: try the prefix-affine shard first, then
         every other shard in least-loaded order. Returns the pages' shard or
         None when no shard can hold the request right now (admission never
-        preempts running work). Updates placement stats."""
+        preempts running work). Updates placement stats. ``pref_hint``
+        (the shard a just-landed prefetch restored the prefix to)
+        overrides the chain-hash-head lookup."""
         mgr = self.manager
-        pref = mgr.preferred_shard(token_ids, total)
+        pref = pref_hint if pref_hint is not None \
+            else mgr.preferred_shard(token_ids, total)
         order = sorted(range(self.num_shards), key=mgr.load_key)
         if pref is not None:
             order.remove(pref)
@@ -289,6 +345,9 @@ class Scheduler:
     def schedule_step(self) -> StepPlan:
         """Compose one engine step under the token budget."""
         self._shed_expired()
+        if self.prefetch_tick is not None:
+            self.prefetch_tick()       # land flights dispatched last turn
+        self._plan_prefetch()          # start fetches for queued prefixes
         plan = StepPlan()
         budget = self.token_budget
         mgr = self.manager
@@ -340,6 +399,26 @@ class Scheduler:
                 # emitted tokens has an incomplete effective_prompt — hold
                 # the queue (it sits at the FRONT) until they drain
                 break
+            if r.prefetch_keys:
+                res = [mgr.residency(h) for h in r.prefetch_keys]
+                if any(x is PageResidency.IN_FLIGHT for x in res):
+                    # its prefix is mid-upload: hold admission (~1 turn,
+                    # overlapped with the in-flight step) so allocate sees
+                    # the restored pages as plain device hits
+                    self.prefetch_held_turns += 1
+                    break
+                r.prefetch_keys = []   # landed / aborted — admit normally
+                if (any(x is PageResidency.HOST for x in res)
+                        and r.prefetch_replans < self.max_prefetch_replans):
+                    # a landed page was stolen back to the host tier by
+                    # allocation pressure before this request admitted:
+                    # forfeit nothing — hold one turn and re-plan the
+                    # fetch (keys are clear, so the next turn's
+                    # ``_plan_prefetch`` picks it up again). Bounded so a
+                    # thrashing pool degrades to recompute, never livelock.
+                    r.prefetch_replans += 1
+                    self.prefetch_replans += 1
+                    break
             eff = r.effective_prompt()
             total = len(eff) + self.extra_tokens
             # a request is pinned to ONE shard, so the largest shard's page
@@ -358,13 +437,17 @@ class Scheduler:
             # are too). Real image/audio inputs must fold a modality-content
             # digest into the chain-hash seed, as the recurrent families'
             # prefix_gate does for state (see ROADMAP).
-            shard = self._place(pool_id, total, eff)
+            shard = self._place(
+                pool_id, total, eff,
+                pref_hint=r.prefetch_shard if r.prefetch_shard >= 0
+                else None)
             if shard is None:
                 break              # admission never preempts running work
             cached = mgr.cached_tokens(pool_id)
             self._next_pool_id += 1
             r.pool_id = pool_id
             r.shard = shard
+            r.prefetch_shard = -1
             if r.admit_time < 0:
                 r.admit_time = time.perf_counter()   # queue-wait anchor
             self.waiting.popleft()

@@ -4,7 +4,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.cache.block_manager import BlockManager, OutOfBlocks
+from repro.cache.block_manager import (BlockManager, OutOfBlocks,
+                                       PageHome, PageResidency)
 
 
 def test_allocate_free_roundtrip():
@@ -102,7 +103,8 @@ def test_refcounted_free_keeps_shared_pages_alive():
     m.free(1)                                        # seq 2 still holds them
     table = m.page_table(2)
     # gathering seq 2's pages must still be legal (pages not on free list)
-    assert all(p not in m._free for p in table.tolist())
+    free = {ps.page for ps in m.page_states().values() if ps.home is PageHome.FREE}
+    assert all(p not in free for p in table.tolist())
     m.free(2)
 
 
@@ -127,7 +129,10 @@ def test_no_double_allocation_property(ops):
         # invariants: live pages never on the free list or evictable list;
         # free + evictable + referenced == total
         flat = {p for ps in live.values() for p in ps}
-        assert not (flat & set(m._free))
-        assert not (flat & set(m._lru))
+        states = m.page_states().values()
+        free = {s.page for s in states if s.home is PageHome.FREE}
+        cached = {s.page for s in states if s.home is PageHome.CACHED}
+        assert not (flat & free)
+        assert not (flat & cached)
         assert len(flat) == m.pages_in_use
         assert m.pages_in_use + m.free_pages + m.evictable_pages == 64

@@ -1,0 +1,282 @@
+"""Hierarchical KV cache: host-DRAM spill tier + async prefetch.
+
+Unit layer — BlockManager residency state machine with a fake spill sink
+(DEVICE -> HOST on eviction, HOST -> IN_FLIGHT -> DEVICE on prefetch,
+DROPPED on declined spills), two-tier audit invariants, host-LRU capacity,
+the residency-first ``match_prefix`` API, and the CacheConfig constructor
+shims.
+
+Integration layer — the memory-pressure cell: a working set several times
+the device pool, identical request mix with the tier ON vs OFF; the tier
+must restore spilled prefixes (host hits > 0, strictly better hit rate)
+while keeping greedy outputs BIT-IDENTICAL (spill/restore of fp8 pool
+payloads is byte-lossless).
+"""
+import numpy as np
+import pytest
+
+from repro.cache.block_manager import (BlockManager, OutOfBlocks, PageHome,
+                                       PageResidency, chain_hash_tokens)
+from repro.cache.quant import decode_host_page, encode_host_page
+from repro.configs.base import CacheConfig
+
+
+def _mgr(num_pages=4, page_size=4, host_pages=8, sink=None):
+    m = BlockManager(cfg=CacheConfig(num_pages=num_pages, page_size=page_size,
+                                     host_pages=host_pages))
+    m.spill_sink = sink if sink is not None else (lambda h, p, s: {"h": h})
+    return m
+
+
+def _fill_and_release(m, seq_id, toks):
+    """Allocate + commit + free: leaves the full pages registered (LRU)."""
+    m.allocate(seq_id, len(toks), token_ids=toks)
+    m.commit_prefill(seq_id, len(toks), token_ids=toks)
+    m.free(seq_id)
+
+
+# ------------------------------------------------------------ unit: spill --
+def test_spill_on_evict_lands_host():
+    m = _mgr()
+    toks = list(range(8))                      # 2 full pages
+    _fill_and_release(m, 1, toks)
+    h1 = chain_hash_tokens(toks, 1, 4)
+    h2 = chain_hash_tokens(toks, 2, 4)
+    assert m.residency(h1) is PageResidency.DEVICE
+    # pressure: 4 fresh pages evict both registered pages -> spilled
+    m.allocate(2, 16, token_ids=list(range(100, 116)))
+    assert m.residency(h1) is PageResidency.HOST
+    assert m.residency(h2) is PageResidency.HOST
+    assert m.spilled_pages == 2 and m.host_resident_pages == 2
+    assert m.audit() == []
+
+
+def test_declined_spill_drops_page():
+    m = _mgr(sink=lambda h, p, s: None)        # sink refuses every copy
+    toks = list(range(8))
+    _fill_and_release(m, 1, toks)
+    m.allocate(2, 16, token_ids=list(range(100, 116)))
+    h1 = chain_hash_tokens(toks, 1, 4)
+    assert m.residency(h1) is PageResidency.DROPPED
+    assert m.spilled_pages == 0 and m.host_resident_pages == 0
+    assert m.audit() == []
+
+
+def test_tier_off_never_spills():
+    m = _mgr(host_pages=0)
+    assert not m.host_tier_enabled
+    toks = list(range(8))
+    _fill_and_release(m, 1, toks)
+    m.allocate(2, 16, token_ids=list(range(100, 116)))
+    assert m.host_resident_pages == 0
+    assert m.residency(chain_hash_tokens(toks, 1, 4)) \
+        is PageResidency.DROPPED
+    assert m.audit() == []
+
+
+def test_host_lru_capacity_evicts_cold_end():
+    m = _mgr(num_pages=4, host_pages=2)
+    toks = list(range(16))                     # 4 full pages registered
+    _fill_and_release(m, 1, toks)
+    m.allocate(2, 16, token_ids=list(range(100, 116)))  # evict+spill all 4
+    assert m.spilled_pages == 4
+    assert m.host_resident_pages == 2          # capacity clamps the store
+    assert m.host_evictions == 2
+    res = [m.residency(chain_hash_tokens(toks, k, 4)) for k in (1, 2, 3, 4)]
+    assert res.count(PageResidency.HOST) == 2      # survivors
+    assert res.count(PageResidency.DROPPED) == 2   # past-capacity spills die
+    assert m.audit() == []
+
+
+# -------------------------------------------------------- unit: prefetch --
+def test_prefetch_roundtrip_restores_device_hit():
+    m = _mgr(num_pages=6)
+    toks = list(range(9))                      # 2 full pages + tail
+    _fill_and_release(m, 1, toks)
+    m.allocate(2, 24, token_ids=list(range(100, 124)))  # evict -> spill
+    h1 = chain_hash_tokens(toks, 1, 4)
+    assert m.residency(h1) is PageResidency.HOST
+    m.free(2)
+
+    match = m.match_prefix(toks, len(toks))
+    assert [p.residency for p in match.pages] == [PageResidency.HOST,
+                                                  PageResidency.HOST]
+    assert len(match.fetchable) == 2
+
+    page, payload = m.begin_prefetch(h1, match.shard)
+    assert m.residency(h1) is PageResidency.IN_FLIGHT
+    assert m.staging_pages == 1
+    assert m.page_states()[page].home is PageHome.STAGING
+    assert m.pages_in_use == 0                 # staging is not "in use"
+    assert m.commit_prefetch(h1)
+    assert m.residency(h1) is PageResidency.DEVICE
+    assert m.staging_pages == 0 and m.audit() == []
+
+    # the restored page now serves allocate as a HOST-attributed hit
+    _, cached = m.allocate(3, 9, token_ids=toks)
+    assert cached == 4
+    assert m.prefix_host_hits == 1 and m.prefix_device_hits == 0
+    assert m.prefix_hits == 1                  # legacy total = dev + host
+    m.free(3)
+    assert m.audit() == []
+
+
+def test_abort_prefetch_returns_payload_to_host():
+    m = _mgr()
+    toks = list(range(8))
+    _fill_and_release(m, 1, toks)
+    m.allocate(2, 16, token_ids=list(range(100, 116)))
+    m.free(2)
+    h1 = chain_hash_tokens(toks, 1, 4)
+    m.begin_prefetch(h1, 0)
+    assert m.abort_prefetch(h1)
+    assert m.residency(h1) is PageResidency.HOST    # retriable
+    assert m.staging_pages == 0 and m.prefetch_aborted == 1
+    assert m.audit() == []
+
+
+def test_commit_prefetch_loses_registration_race():
+    m = _mgr(num_pages=6)
+    toks = list(range(8))
+    _fill_and_release(m, 1, toks)
+    m.allocate(2, 24, token_ids=list(range(100, 124)))  # evict -> spill
+    m.free(2)
+    h1 = chain_hash_tokens(toks, 1, 4)
+    m.begin_prefetch(h1, 0)
+    # meanwhile the same prefix is recomputed and re-registered on device
+    _fill_and_release(m, 3, toks)
+    assert m.residency(h1) is PageResidency.DEVICE  # device takes priority
+    assert not m.commit_prefetch(h1)                # race lost: page freed
+    assert m.prefetch_aborted == 1 and m.staging_pages == 0
+    assert m.audit() == []
+
+
+def test_begin_prefetch_requires_host_residency():
+    m = _mgr()
+    with pytest.raises(KeyError):
+        m.begin_prefetch(12345, 0)
+
+
+def test_failed_allocate_rewinds_split_hit_stats():
+    m = _mgr(num_pages=4)
+    toks = list(range(8))
+    _fill_and_release(m, 1, toks)
+    m.allocate(2, 8, token_ids=list(range(100, 108)))  # 2 pages referenced
+    # seq 3 matches the 2 registered pages but cannot get its 3rd page
+    with pytest.raises(OutOfBlocks):
+        m.allocate(3, 9, token_ids=toks)
+    assert m.prefix_hits == 0
+    assert m.prefix_device_hits == 0 and m.prefix_host_hits == 0
+    assert m.audit() == []
+
+
+# ------------------------------------------------- unit: config + shims --
+def test_cache_config_validation():
+    with pytest.raises(ValueError):
+        CacheConfig(num_pages=-1)
+    with pytest.raises(ValueError):
+        CacheConfig(num_shards=0)
+    with pytest.raises(ValueError):
+        CacheConfig(host_pages=-2)
+
+
+def test_block_manager_constructor_shims():
+    legacy = BlockManager(16, page_size=8, num_shards=2)
+    cfged = BlockManager(cfg=CacheConfig(num_pages=16, page_size=8,
+                                         num_shards=2))
+    assert legacy.num_pages == cfged.num_pages == 16
+    assert legacy.page_size == cfged.page_size == 8
+    assert legacy.num_shards == cfged.num_shards == 2
+    with pytest.raises(TypeError):
+        BlockManager(16, page_size=8, cfg=CacheConfig(num_pages=16,
+                                                      page_size=8))
+    with pytest.raises(ValueError):
+        BlockManager(cfg=CacheConfig())        # unresolved sizes
+
+
+def test_engine_config_cache_conflict_raises():
+    from repro.serving import EngineConfig
+    ecfg = EngineConfig(num_shards=2, cache=CacheConfig(num_shards=4))
+    with pytest.raises(ValueError):
+        ecfg.cache_config(16)
+    # legacy mirrors fold in when cache is unset
+    cc = EngineConfig(num_shards=2, enable_prefix_cache=False).cache_config(16)
+    assert cc.num_shards == 2 and not cc.enable_prefix_cache
+    assert cc.page_size == 16 and cc.num_pages > 0
+
+
+# ------------------------------------------------------ unit: host codec --
+def test_host_page_codec_roundtrip():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    bf = jnp.asarray(rng.normal(size=(2, 8, 4)), jnp.bfloat16)
+    f8 = jnp.asarray(rng.normal(size=(2, 8, 4)), jnp.bfloat16)
+    # pass-through (quantize=False): bit-exact for every leaf
+    hp = encode_host_page({"kv": bf, "scale": f8})
+    assert not hp.encoded and not hp.scales
+    assert bool(jnp.all(decode_host_page(hp, "kv") == bf))
+    # quantize=True: bf16 leaves fp8-encoded (lossy), rest verbatim
+    hq = encode_host_page({"kv": bf}, quantize=True)
+    assert hq.encoded and "kv" in hq.scales
+    err = jnp.max(jnp.abs(decode_host_page(hq, "kv").astype(jnp.float32)
+                          - bf.astype(jnp.float32)))
+    assert float(err) < 0.2
+
+
+# ------------------------------------------- integration: memory pressure --
+def _pressure_engine(host_pages):
+    from repro.configs import get_config
+    from repro.core.coopt import CoOptConfig
+    from repro.serving import Engine, EngineConfig
+
+    cfg = get_config("qwen3-4b-reduced")
+    coopt = CoOptConfig(opt_kv=True, opt_gqa=True, opt_pa=True, page_size=16)
+    cc = CacheConfig(num_pages=13, host_pages=host_pages, prefetch_depth=2)
+    ecfg = EngineConfig(num_lanes=2, max_len=128,
+                        prefill_buckets=(32, 64, 128), seed=0, cache=cc)
+    return Engine(cfg, coopt, ecfg)
+
+
+def _pressure_prompts():
+    """8 distinct 3-page shared prefixes, replayed A..H A..H: every reuse
+    distance exceeds the 12-page device pool (LRU worst case), working set
+    ~= 24 prefix + 16 tail pages ~= 3-4x the pool."""
+    rng = np.random.default_rng(0)
+    prefixes = [rng.integers(10, 500, size=48).astype(np.int32)
+                for _ in range(8)]
+    prompts = []
+    for _ in range(2):
+        for p in prefixes:
+            prompts.append(np.concatenate(
+                [p, rng.integers(10, 500, size=8).astype(np.int32)]))
+    return prompts
+
+
+def test_memory_pressure_tier_bit_identity_and_hit_rate():
+    prompts = _pressure_prompts()
+    on = _pressure_engine(host_pages=64)
+    outs_on = on.generate(prompts, max_new_tokens=8)
+    off = _pressure_engine(host_pages=0)
+    outs_off = off.generate(prompts, max_new_tokens=8)
+
+    # greedy outputs bit-identical with the tier on vs off
+    assert len(outs_on) == len(outs_off) == len(prompts)
+    for a, b in zip(outs_on, outs_off):
+        assert a == b
+
+    s_on, s_off = on.stats, off.stats
+    # the tier restored spilled prefixes: host-attributed hits exist, and
+    # the hit RATE strictly beats the no-tier baseline
+    assert s_on.prefix_host_hits > 0
+    assert s_on.spilled_pages > 0 and s_on.prefetch_committed > 0
+    assert s_on.prefix_hit_rate() > s_off.prefix_hit_rate()
+    # split accounting is consistent with the legacy total
+    assert (s_on.prefix_device_hits + s_on.prefix_host_hits
+            == s_on.prefix_cache_hits)
+    assert s_off.prefix_host_hits == 0 and s_off.spilled_pages == 0
+
+    # both engines drain clean: audit invariants + zero pages in use
+    for eng in (on, off):
+        assert eng.scheduler.manager.audit() == []
+        assert eng.scheduler.manager.pages_in_use == 0
+        assert eng.scheduler.manager.staging_pages == 0

@@ -392,3 +392,85 @@ def test_token_stream_timeout_raises_timeout_error():
     assert s.get(timeout=0.1) is None
     assert s.get(timeout=0.1) is None       # stays closed
     assert s.finish_reason is FinishReason.CANCELLED
+
+
+# ----------------------------------------------------- host-tier chaos ----
+def _host_tier_kw(host_pages=32):
+    from repro.serving import CacheConfig
+    # 4 usable device pages (page_size=64, 2 pages per request): the
+    # shared-prefix replay below cannot fit its working set, so evictions
+    # spill to the host tier and repeats prefetch back
+    return dict(num_lanes=2, max_len=128,
+                cache=CacheConfig(num_pages=5, host_pages=host_pages,
+                                  prefetch_depth=2))
+
+
+def _shared_prefix_prompts(rng, k=6, rounds=2):
+    """k distinct one-page (64-token) prefixes replayed round-robin: reuse
+    distance always exceeds the 4-page device pool."""
+    prefixes = [rng.integers(0, CFG.vocab_size, 64, dtype=np.int32)
+                for _ in range(k)]
+    out = []
+    for _ in range(rounds):
+        for p in prefixes:
+            out.append(np.concatenate(
+                [p, rng.integers(0, CFG.vocab_size, 16, dtype=np.int32)]))
+    return out
+
+
+def test_host_tier_chaos_spill_drop_and_prefetch_fail():
+    """Seeded host-tier faults — dropped spill copies and a failed
+    prefetch landing — must be absorbed silently: dropped pages just
+    recompute, failed flights return their payload to the host store, all
+    streams FINISH with outputs bit-identical to the fault-free tier run,
+    and the two-tier allocator audits clean."""
+    rng = np.random.default_rng(83)
+    prompts = _shared_prefix_prompts(rng)
+
+    ref = _engine(**_host_tier_kw())
+    want = ref.generate(prompts, max_new_tokens=8)
+    assert ref.stats.spilled_pages > 0          # the episode exercises the tier
+
+    eng = _engine(**_host_tier_kw())
+    inj = FaultInjector(FaultPlan(seed=83, spill_drop_at=2,
+                                  spill_drop_count=3,
+                                  prefetch_fail_at=1,
+                                  prefetch_fail_count=1)).install(eng)
+    fe = AsyncEngine(eng, warmup=False)
+    streams = [fe.submit(p, max_new_tokens=8) for p in prompts]
+    fe.run_until_idle()
+
+    assert inj.spills > 0 and inj.injected_spill_drops > 0
+    _assert_all_terminated(streams)
+    assert [s.finish_reason for s in streams] == \
+        [FinishReason.FINISHED] * len(streams)
+    assert [list(s.req.output) for s in streams] == [list(o) for o in want]
+    _assert_clean(eng)
+    assert eng.scheduler.manager.staging_pages == 0
+
+
+def test_host_tier_chaos_slow_prefetch_cancel_storm():
+    """Slow host link (every prefetch takes 3 extra turns to land) plus a
+    seeded cancel storm mid-episode: cancelled streams close CANCELLED,
+    survivors FINISH, no flight leaks a staging page, and the allocator
+    audits clean with zero pages in use."""
+    rng = np.random.default_rng(89)
+    prompts = _shared_prefix_prompts(rng)
+
+    eng = _engine(**_host_tier_kw())
+    inj = FaultInjector(FaultPlan(seed=89, prefetch_delay_turns=3,
+                                  cancel_at_turns=(6, 12),
+                                  cancel_frac=0.3)).install(eng)
+    fe = AsyncEngine(eng, warmup=False)
+    streams = [fe.submit(p, max_new_tokens=8) for p in prompts]
+    fe.run_until_idle()
+
+    _assert_all_terminated(streams)
+    reasons = [s.finish_reason for s in streams]
+    assert set(reasons) <= {FinishReason.FINISHED, FinishReason.CANCELLED}
+    if inj.injected_cancels:
+        assert reasons.count(FinishReason.CANCELLED) == inj.injected_cancels
+    assert reasons.count(FinishReason.FINISHED) > 0
+    _assert_clean(eng)
+    assert eng.scheduler.manager.staging_pages == 0
+    assert eng._prefetch_flights == []
